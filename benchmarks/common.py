@@ -1,0 +1,38 @@
+"""Shared benchmark utilities: wall-clock timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, reps: int = 5) -> float:
+    """Median wall time of fn(*args) in microseconds (blocks on outputs)."""
+    for _ in range(warmup):
+        _block(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        _block(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _block(out):
+    for leaf in jax.tree_util.tree_leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def pct_err(measured: float, target: float) -> str:
+    return f"{100.0 * (measured - target) / target:+.1f}% vs paper"

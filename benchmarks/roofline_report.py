@@ -1,0 +1,46 @@
+"""Roofline aggregation: reads experiments/dryrun artifacts and emits the
+per-cell terms (also formatted into EXPERIMENTS.md by the perf workflow)."""
+
+from __future__ import annotations
+
+import os
+
+from repro.launch.roofline import format_table, load_table
+
+from benchmarks.common import emit
+
+DRY_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def run_all():
+    if not os.path.isdir(DRY_DIR):
+        emit("roofline.missing", 0.0,
+             f"no dry-run artifacts at {DRY_DIR} — run "
+             "python -m repro.launch.dryrun --all first")
+        return
+    rows = load_table(DRY_DIR)
+    done = [r for r in rows if "roofline_fraction" in r]
+    for r in done:
+        if r["mesh"] != "16x16":
+            continue
+        emit(f"roofline.{r['arch']}.{r['shape']}",
+             r["step_seconds_bound"] * 1e6,
+             f"dom={r['dominant'].replace('_s', '')} "
+             f"frac={r['roofline_fraction']:.3f} "
+             f"MF/HLO={r['flops_ratio']:.2f}")
+    if done:
+        import statistics
+        fracs = [r["roofline_fraction"] for r in done
+                 if r["mesh"] == "16x16"]
+        if fracs:
+            emit("roofline.median_fraction",
+                 statistics.median(fracs) * 1e6,
+                 f"median over {len(fracs)} single-pod cells")
+    skips = [r for r in rows if r.get("skipped")]
+    fails = [r for r in rows if r.get("error")]
+    emit("roofline.cells", float(len(rows)),
+         f"{len(done)} analyzed, {len(skips)} skipped, {len(fails)} failed")
+
+
+if __name__ == "__main__":
+    print(format_table(load_table(DRY_DIR)))

@@ -1,0 +1,37 @@
+"""Benchmark driver. One section per paper table/figure + substrate micro-
+benchmarks + roofline aggregation. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick/--full] [--only SECTION]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-length RQ2 bs=1 sweeps (slow)")
+    ap.add_argument("--only", default=None,
+                    choices=("paper", "micro", "roofline"))
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    if args.only in (None, "paper"):
+        from benchmarks import paper_figures
+        paper_figures.run_all(quick=not args.full)
+    if args.only in (None, "micro"):
+        from benchmarks import microbench
+        microbench.run_all()
+    if args.only in (None, "roofline"):
+        from benchmarks import roofline_report
+        roofline_report.run_all()
+    print(f"# total_wall_seconds,{time.time() - t0:.1f},", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Rotating checkpoint manager with resume — the fault-tolerance substrate
+for the training loop and for PCM inference progress logs."""
+
+from __future__ import annotations
+
+import os
+import re
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.checkpoint import io
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            m = _STEP_RE.match(name)
+            if m and io.is_valid(os.path.join(self.directory, name)):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def save(self, step: int, state: Any, meta: Optional[Dict] = None) -> str:
+        path = io.save_pytree(state, self._step_dir(step),
+                              extra_meta={"step": step, **(meta or {})})
+        self._rotate()
+        return path
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, like: Any, step: Optional[int] = None
+                ) -> Tuple[Any, Dict]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        return io.load_pytree(self._step_dir(step), like=like)
+
+    def restore_or_init(self, init_state: Any) -> Tuple[Any, int]:
+        step = self.latest_step()
+        if step is None:
+            return init_state, 0
+        state, meta = self.restore(like=init_state, step=step)
+        return state, int(meta.get("step", step))
+
+    def _rotate(self):
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

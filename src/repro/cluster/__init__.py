@@ -1,0 +1,14 @@
+from repro.cluster.devices import (PAPER_TABLE_1, PROFILES, TPU_PROFILES,
+                                   CostModel, DeviceProfile, cluster_census,
+                                   inference_seconds, load_seconds,
+                                   task_seconds)
+from repro.cluster.events import Event, EventLoop
+from repro.cluster.simulator import ClusterSimulator, SimResult, simulate_sweep
+from repro.cluster import traces
+
+__all__ = [
+    "PAPER_TABLE_1", "PROFILES", "TPU_PROFILES", "CostModel",
+    "DeviceProfile", "cluster_census", "inference_seconds", "load_seconds",
+    "task_seconds", "Event", "EventLoop", "ClusterSimulator", "SimResult",
+    "simulate_sweep", "traces",
+]

@@ -1,0 +1,226 @@
+"""Discrete-event cluster simulator: runs the REAL ContextAwareScheduler
+against modeled time.
+
+Only three things are simulated — the clock, task durations (device cost
+models), and transfer times (bandwidth models). All scheduling decisions,
+store/residency bookkeeping, requeue-on-preemption and straggler logic are
+the production classes from ``repro.core``. This is how the paper's
+cluster-scale figures (RQ1–RQ4) are reproduced on a laptop, deterministic
+to the last event.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.cluster.devices import (CostModel, DeviceProfile, PROFILES,
+                                   fs_fetch_bytes, load_seconds,
+                                   task_seconds)
+from repro.cluster.events import Event, EventLoop
+from repro.core.context import ContextRecipe
+from repro.core.factory import WorkerFactory
+from repro.core.scheduler import Action, ContextAwareScheduler, Task
+from repro.core.store import ContextMode, ContextStore, Tier
+from repro.core.transfer import TransferPlanner
+
+
+@dataclass
+class SimResult:
+    mode: str
+    end_time: float
+    completions: List[Tuple[float, int]]          # (t, n_items)
+    worker_samples: List[Tuple[float, int]]       # (t, pool size)
+    cold_starts: int
+    warm_starts: int
+    disk_hits: int
+    preemptions: int
+    p2p_transfers: int
+    fs_transfers: int
+
+    @property
+    def total_inferences(self) -> int:
+        return sum(n for _, n in self.completions)
+
+    def cumulative(self, t: float) -> int:
+        return sum(n for tc, n in self.completions if tc <= t)
+
+    def curve(self, dt: float = 60.0) -> List[Tuple[float, int]]:
+        if not self.completions:
+            return []
+        out, acc, ti = [], 0, 0.0
+        comp = sorted(self.completions)
+        i = 0
+        while ti <= self.end_time + dt:
+            while i < len(comp) and comp[i][0] <= ti:
+                acc += comp[i][1]
+                i += 1
+            out.append((ti, acc))
+            ti += dt
+        return out
+
+
+class ClusterSimulator:
+    def __init__(self, mode: ContextMode, capacity_fn: Callable,
+                 recipe: ContextRecipe,
+                 cost: Optional[CostModel] = None,
+                 planner: Optional[TransferPlanner] = None,
+                 straggler_factor: float = 0.0,
+                 reconcile_every: float = 15.0):
+        self.mode = mode
+        self.recipe = recipe
+        self.cost = cost or CostModel()
+        self.loop = EventLoop()
+        self.planner = planner or TransferPlanner()
+        self.scheduler = ContextAwareScheduler(
+            mode=mode, planner=self.planner,
+            straggler_factor=straggler_factor)
+        self.factory = WorkerFactory(capacity_fn)
+        self.reconcile_every = reconcile_every
+
+        self.profiles: Dict[str, DeviceProfile] = {}
+        self._page_cached: set = set()            # (worker_id, ctx_key)
+        self._task_events: Dict[str, Event] = {}
+        self._fetch_events: Dict[str, Event] = {}
+        self._completions: List[Tuple[float, int]] = []
+        self._worker_samples: List[Tuple[float, int]] = []
+        self._stats = dict(cold=0, warm=0, disk=0, preempt=0, p2p=0, fs=0)
+        self._reconcile_ev: Optional[Event] = None
+
+    # ------------------------------------------------------------ submit ---
+    def submit_sweep(self, total_inferences: int, batch_size: int):
+        """The paper's workload: a fixed inference sweep split into tasks
+        of ``batch_size`` inferences each."""
+        n_tasks = (total_inferences + batch_size - 1) // batch_size
+        for i in range(n_tasks):
+            items = min(batch_size, total_inferences - i * batch_size)
+            task = Task(task_id=f"task{i:06d}", recipe=self.recipe,
+                        n_items=items)
+            self._apply(self.scheduler.submit(task, self.loop.now))
+
+    # --------------------------------------------------------------- run ---
+    def run(self, until: float = 10_000_000.0) -> SimResult:
+        self._reconcile()
+        self.loop.run(until=until)
+        return SimResult(
+            mode=self.mode.value, end_time=self._end_time(),
+            completions=sorted(self._completions),
+            worker_samples=self._worker_samples,
+            cold_starts=self._stats["cold"], warm_starts=self._stats["warm"],
+            disk_hits=self._stats["disk"],
+            preemptions=self._stats["preempt"],
+            p2p_transfers=self._stats["p2p"], fs_transfers=self._stats["fs"])
+
+    def _end_time(self) -> float:
+        return max((t for t, _ in self._completions), default=self.loop.now)
+
+    # --------------------------------------------------------- factory -----
+    def _reconcile(self):
+        now = self.loop.now
+        for d in self.factory.reconcile(now):
+            if d.kind == "join":
+                self.profiles[d.worker_id] = PROFILES[d.profile_name]
+                store = ContextStore(
+                    device_bytes=int(
+                        PROFILES[d.profile_name].hbm_gb * 1024 ** 3))
+                self._apply(self.scheduler.on_worker_join(
+                    d.worker_id, now, profile=PROFILES[d.profile_name],
+                    store=store))
+            else:
+                self._stats["preempt"] += 1
+                for evmap in (self._task_events, self._fetch_events):
+                    ev = evmap.pop(d.worker_id, None)
+                    if ev:
+                        ev.cancel()
+                self._page_cached = {(w, k) for (w, k) in self._page_cached
+                                     if w != d.worker_id}
+                self._apply(self.scheduler.on_worker_leave(d.worker_id, now))
+        self._worker_samples.append((now, self.factory.size))
+        if not self.scheduler.all_done() or self.scheduler.outstanding:
+            self._reconcile_ev = self.loop.schedule_in(
+                self.reconcile_every, self._reconcile)
+
+    # ---------------------------------------------------------- actions ----
+    def _apply(self, actions: List[Action]):
+        for a in actions:
+            if a.kind == "start":
+                self._start_task(a)
+            elif a.kind == "fetch":
+                self._start_fetch(a)
+            elif a.kind == "cancel":
+                ev = self._task_events.pop(a.worker_id, None)
+                if ev:
+                    ev.cancel()
+
+    def _start_fetch(self, a: Action):
+        profile = self.profiles[a.worker_id]
+        dur = a.plan.seconds + load_seconds(profile, a.recipe, self.cost,
+                                            from_disk=True)
+        self._stats["p2p" if a.plan.p2p else "fs"] += 1
+        wid, key = a.worker_id, a.recipe.key()
+
+        def done():
+            self._fetch_events.pop(wid, None)
+            info = self.scheduler.workers.get(wid)
+            if info is not None:
+                info.store.admit_recipe(a.recipe, Tier.DEVICE,
+                                        now=self.loop.now)
+            self._apply(self.scheduler.on_fetch_done(wid, key,
+                                                     self.loop.now))
+
+        self._fetch_events[wid] = self.loop.schedule_in(dur, done)
+
+    def _start_task(self, a: Action):
+        profile = self.profiles[a.worker_id]
+        task = self.scheduler.tasks[a.task_id]
+        now = self.loop.now
+        key = a.recipe.key()
+        startup = 0.0
+        if a.warm:
+            self._stats["warm"] += 1
+        else:
+            if a.had_disk:
+                self._stats["disk"] += 1
+            else:
+                self._stats["cold"] += 1
+                donors = {
+                    wid for wid, info in self.scheduler.workers.items()
+                    if wid != a.worker_id
+                    and info.store.has(key, Tier.LOCAL_DISK)}
+                plan = self.planner.plan(
+                    a.recipe.transfer_bytes, donors, now,
+                    allow_p2p=self.mode != ContextMode.AGNOSTIC,
+                    fs_nbytes=fs_fetch_bytes(a.recipe, self.cost))
+                self._stats["p2p" if plan.p2p else "fs"] += 1
+                startup += plan.seconds
+            startup += load_seconds(
+                profile, a.recipe, self.cost, from_disk=True,
+                page_cached=(a.worker_id, key) in self._page_cached)
+            self._page_cached.add((a.worker_id, key))
+        exec_s = task_seconds(profile, a.recipe, self.cost, task.n_items)
+        if exec_s > self.cost.page_cache_evict_s:
+            # the inference working set evicts the cached model/env pages
+            self._page_cached.discard((a.worker_id, key))
+        dur = startup + exec_s
+        wid, tid = a.worker_id, a.task_id
+
+        def done():
+            self._task_events.pop(wid, None)
+            primary = task.duplicates_of or tid
+            if primary not in self.scheduler.done_ids:
+                self._completions.append((self.loop.now, task.n_items))
+            self._apply(self.scheduler.on_task_done(wid, tid, self.loop.now))
+
+        self._task_events[wid] = self.loop.schedule_in(dur, done)
+
+
+def simulate_sweep(mode: ContextMode, capacity_fn, recipe: ContextRecipe,
+                   total_inferences: int, batch_size: int,
+                   cost: Optional[CostModel] = None,
+                   straggler_factor: float = 0.0,
+                   until: float = 10_000_000.0) -> SimResult:
+    sim = ClusterSimulator(mode, capacity_fn, recipe, cost=cost,
+                           straggler_factor=straggler_factor)
+    sim.submit_sweep(total_inferences, batch_size)
+    return sim.run(until=until)

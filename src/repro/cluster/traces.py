@@ -1,0 +1,81 @@
+"""Capacity traces for the paper's four experiment regimes.
+
+A trace is ``capacity_fn(t) -> list[profile_name]`` — the opportunistic
+slots the cluster exposes at time t (what the TaskVine factory sees).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import math
+from typing import Callable, List
+
+from repro.cluster.devices import cluster_census
+
+# the paper's standard 20-GPU pool: half A10, half TITAN X (Pascal)
+STATIC_20 = ["a10"] * 10 + ["titan-x-pascal"] * 10
+
+
+def static(profiles: List[str] = None) -> Callable[[float], List[str]]:
+    profiles = STATIC_20 if profiles is None else profiles
+
+    def capacity(t: float) -> List[str]:
+        return list(profiles)
+
+    return capacity
+
+
+def rq3_aggressive_preemption(start_at: float = 900.0,
+                              period: float = 60.0
+                              ) -> Callable[[float], List[str]]:
+    """20 GPUs; from ``start_at``, 1 GPU preempted per minute, A10s first
+    (paper §4.4), until the pool is depleted."""
+
+    def capacity(t: float) -> List[str]:
+        lost = 0 if t < start_at else int((t - start_at) // period) + 1
+        keep = max(0, 20 - lost)
+        pool = STATIC_20[::-1]          # TITAN X last -> preempt A10s first
+        return pool[:keep][::-1]
+
+    return capacity
+
+
+def rq4_low_capacity(ramp_every: float = 240.0,
+                     start: int = 4, cap: int = 20
+                     ) -> Callable[[float], List[str]]:
+    """Scarce cluster: start with 4 GPUs, one more every few minutes."""
+
+    def capacity(t: float) -> List[str]:
+        n = min(cap, start + int(t // ramp_every))
+        return STATIC_20[:n]
+
+    return capacity
+
+
+def rq4_high_capacity(peak: int = 186, ramp_seconds: float = 420.0
+                      ) -> Callable[[float], List[str]]:
+    """Many jobs exiting: capacity floods in quickly up to 186 slots
+    (32.8% of the 567-GPU cluster), drawn from the real census mix."""
+    census = cluster_census()
+    # deterministic shuffle of the census
+    census = sorted(census, key=lambda name: hashlib.md5(
+        name.encode() + str(census.index(name)).encode()).hexdigest())
+    pool = [census[i * 3 % len(census)] for i in range(peak)]
+
+    def capacity(t: float) -> List[str]:
+        frac = min(1.0, 0.02 + 0.98 * t / ramp_seconds)
+        return pool[:max(4, int(peak * frac))]
+
+    return capacity
+
+
+def churn(base: int = 16, amplitude: int = 8, period: float = 600.0
+          ) -> Callable[[float], List[str]]:
+    """Sinusoidal capacity churn (stress trace for scheduler tests)."""
+    census = cluster_census()
+
+    def capacity(t: float) -> List[str]:
+        n = base + int(amplitude * math.sin(2 * math.pi * t / period))
+        return [census[i * 7 % len(census)] for i in range(max(1, n))]
+
+    return capacity

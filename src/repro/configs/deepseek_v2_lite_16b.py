@@ -1,0 +1,44 @@
+"""DeepSeek-V2-Lite-16B — MLA (kv_lora=512) + MoE 64 routed top-6, 2 shared.
+[arXiv:2405.04434; hf]
+
+The assignment note mentions "160 routed" (that is DeepSeek-V2-full); we
+follow the config line (64e top-6) — discrepancy recorded in DESIGN.md §4.
+Layer 0 stays dense (d_ff 10944) per the HF config.
+"""
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch_id="deepseek-v2-lite-16b",
+    family="moe",
+    n_layers=27,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=0,
+    vocab_size=102_400,
+    activation="swiglu",
+    norm="rmsnorm",
+    attention="mla",
+    rope_theta=10_000.0,
+    max_seq_len=163_840,
+    mla=MLAConfig(
+        kv_lora_rank=512,
+        q_lora_rank=0,       # lite: direct q projection
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+    moe=MoEConfig(
+        n_experts=64,
+        experts_per_token=6,
+        d_ff=1408,
+        n_shared_experts=2,
+        shared_d_ff=1408,
+        first_dense_layers=1,
+        dense_d_ff=10944,
+        capacity_factor=1.25,
+    ),
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

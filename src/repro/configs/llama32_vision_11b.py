@@ -1,0 +1,30 @@
+"""Llama-3.2-Vision-11B — text decoder with cross-attention image layers.
+[hf:meta-llama/Llama-3.2-11B-Vision]
+
+The vision frontend is a STUB: ``input_specs()`` provides precomputed patch
+embeddings of shape (batch, vision_tokens, vision_dim); the model owns the
+vision_dim -> d_model projection and the cross-attention layers (every 5th
+decoder layer, 8 total).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="llama-3.2-vision-11b",
+    family="vlm",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128_256,
+    activation="swiglu",
+    norm="rmsnorm",
+    cross_attn_every=5,
+    vision_tokens=4100,     # ~4 tiles x 1025 patches
+    vision_dim=1280,
+    rope_theta=500_000.0,
+    max_seq_len=131_072,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

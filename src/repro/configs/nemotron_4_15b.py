@@ -1,0 +1,20 @@
+"""Nemotron-4-15B — dense GQA decoder, squared-ReLU MLP. [arXiv:2402.16819]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="nemotron-4-15b",
+    family="dense",
+    n_layers=32,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab_size=256_000,
+    activation="squared_relu",
+    norm="layernorm",
+    rope_theta=10_000.0,
+    max_seq_len=32_768,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

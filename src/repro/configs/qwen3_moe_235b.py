@@ -1,0 +1,34 @@
+"""Qwen3-MoE-235B-A22B — 128 routed experts, top-8, GQA kv=4, qk-norm.
+[hf:Qwen/Qwen3-235B-A22B]
+
+head_dim is explicit (128): 64 heads x 128 = 8192 != d_model. All layers MoE,
+no shared experts. Experts shard 8-per-device on the 16-way model axis.
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen3-moe-235b-a22b",
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=0,                 # all layers MoE
+    vocab_size=151_936,
+    activation="swiglu",
+    norm="rmsnorm",
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    max_seq_len=131_072,
+    moe=MoEConfig(
+        n_experts=128,
+        experts_per_token=8,
+        d_ff=1536,
+        n_shared_experts=0,
+        capacity_factor=1.25,
+    ),
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

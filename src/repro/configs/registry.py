@@ -1,0 +1,41 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig, reduced  # noqa: F401 (re-export)
+
+_MODULES = {
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "nemotron-4-15b": "repro.configs.nemotron_4_15b",
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "whisper-small": "repro.configs.whisper_small",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "llama-3.2-vision-11b": "repro.configs.llama32_vision_11b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    # the paper's own model (not in the assigned 10):
+    "smollm2-1.7b": "repro.configs.smollm2_1_7b",
+}
+
+ASSIGNED_ARCHS = tuple(k for k in _MODULES if k != "smollm2-1.7b")
+ALL_ARCHS = tuple(_MODULES)
+
+_cache: Dict[str, ModelConfig] = {}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {', '.join(sorted(_MODULES))}")
+    if arch_id not in _cache:
+        _cache[arch_id] = importlib.import_module(_MODULES[arch_id]).CONFIG
+    return _cache[arch_id]
+
+
+def get_reduced_config(arch_id: str, **overrides) -> ModelConfig:
+    return reduced(get_config(arch_id), **overrides)

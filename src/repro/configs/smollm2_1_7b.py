@@ -1,0 +1,26 @@
+"""SmolLM2-1.7B — the paper's own fact-verification model. [arXiv:2502.02737]
+
+Not part of the assigned 10; included because the paper's Prompt-for-Fact
+application (examples/fact_verification.py) and the §Perf
+"most-paper-representative" hillclimb cell serve exactly this model.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="smollm2-1.7b",
+    family="dense",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=49_152,
+    activation="swiglu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    rope_theta=130_000.0,
+    max_seq_len=8192,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

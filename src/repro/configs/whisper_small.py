@@ -1,0 +1,27 @@
+"""Whisper-small — encoder-decoder audio backbone. [arXiv:2212.04356]
+
+The conv frontend is a STUB: ``input_specs()`` feeds precomputed mel-frame
+embeddings of shape (batch, encoder_seq_len, d_model). The decoder is a
+standard causal transformer with cross-attention to the encoder memory.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="whisper-small",
+    family="audio",
+    n_layers=12,            # decoder layers
+    n_encoder_layers=12,
+    encoder_seq_len=1500,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51_865,
+    activation="gelu",
+    norm="layernorm",
+    rope_theta=10_000.0,    # (whisper uses learned pos-emb; we use rope, noted)
+    max_seq_len=32_768,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

@@ -1,0 +1,29 @@
+"""xLSTM-350M — sLSTM + mLSTM recurrent blocks, no attention, no KV cache.
+[arXiv:2405.04517]
+
+O(1) recurrent state per block => runs the ``long_500k`` decode cell.
+Block pattern: one sLSTM per group of ``slstm_every`` blocks, rest mLSTM.
+"""
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    arch_id="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,                 # xLSTM blocks carry their own projections
+    vocab_size=50_304,
+    norm="layernorm",
+    max_seq_len=524_288,
+    ssm=SSMConfig(
+        slstm_every=4,      # [sLSTM, mLSTM, mLSTM, mLSTM] x 6
+        slstm_proj_factor=4 / 3,
+        mlstm_proj_factor=2.0,
+        chunk=256,
+    ),
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

@@ -1,0 +1,34 @@
+"""Zamba2-7B — hybrid: Mamba2 backbone + ONE shared attention block applied
+every 6th layer. [arXiv:2411.15242]
+
+81 Mamba2 layers; the shared attention+MLP block (single weight set) is
+interleaved at layer boundaries 0,6,12,... SSM state is O(1) per step =>
+runs the ``long_500k`` decode cell.
+"""
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    arch_id="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,          # shared block is MHA
+    d_ff=14336,             # shared block MLP width
+    vocab_size=32_000,
+    activation="swiglu",
+    norm="rmsnorm",
+    shared_attn_every=6,
+    max_seq_len=524_288,
+    ssm=SSMConfig(
+        state_dim=64,
+        conv_dim=4,
+        expand=2,
+        head_dim=64,
+        n_groups=2,
+        chunk=256,
+    ),
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

@@ -1,0 +1,31 @@
+"""Pervasive Context Management — the paper's primary contribution.
+
+context.py   ContextRecipe / Context (first-class LLM contexts)
+store.py     tiered per-worker residency (agnostic/partial/full modes)
+library.py   persistent executor holding materialized contexts
+transfer.py  shared-FS vs peer-to-peer bootstrap planning
+scheduler.py context-aware placement, requeue-on-preemption, stragglers
+factory.py   reactive opportunistic pool reconciliation
+manager.py   live in-process runtime (real JAX execution)
+api.py       @context_app / load_context user API (paper Fig. 5)
+"""
+
+from repro.core.api import (context_app, get_default_manager, load_context,
+                            make_recipe, set_default_manager)
+from repro.core.context import Context, ContextRecipe, materialize
+from repro.core.library import (Library, current_context,
+                                load_variable_from_context)
+from repro.core.manager import Future, PCMManager
+from repro.core.scheduler import (Action, Completion, ContextAwareScheduler,
+                                  Task, WorkerPhase)
+from repro.core.store import ContextMode, ContextStore, Tier
+from repro.core.transfer import TransferPlan, TransferPlanner
+
+__all__ = [
+    "context_app", "get_default_manager", "load_context", "make_recipe",
+    "set_default_manager", "Context", "ContextRecipe", "materialize",
+    "Library", "current_context", "load_variable_from_context", "Future",
+    "PCMManager", "Action", "Completion", "ContextAwareScheduler", "Task",
+    "WorkerPhase", "ContextMode", "ContextStore", "Tier", "TransferPlan",
+    "TransferPlanner",
+]

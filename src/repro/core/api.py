@@ -1,0 +1,82 @@
+"""User-facing PCM API — the paper's Fig. 5 transformation, JAX-flavored.
+
+    from repro.core.api import context_app, load_context, set_default_manager
+
+    def load_model(arch):                       # runs once per worker
+        cfg = get_reduced_config(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        engine = InferenceEngine(model, params, ...)
+        return {"engine": engine}
+
+    @context_app(context=(load_model, ("smollm2-1.7b",)))
+    def infer_model(claims):                    # runs per task, reuses ctx
+        engine = load_context("engine")
+        return engine.generate(claims, max_new_tokens=4)
+
+    verdicts = infer_model(claims).result()
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+from repro.core.context import ContextRecipe
+from repro.core.library import load_variable_from_context
+from repro.core.manager import Future, PCMManager
+from repro.core.store import ContextMode
+
+_default_manager: Optional[PCMManager] = None
+
+
+def set_default_manager(manager: PCMManager):
+    global _default_manager
+    _default_manager = manager
+
+
+def get_default_manager() -> PCMManager:
+    global _default_manager
+    if _default_manager is None:
+        _default_manager = PCMManager(mode=ContextMode.FULL, n_workers=1)
+    return _default_manager
+
+
+def load_context(name: str) -> Any:
+    """Inside a context_app body: fetch a variable from the held context."""
+    return load_variable_from_context(name)
+
+
+def make_recipe(name: str, builder: Callable, args: Tuple = (),
+                **footprints) -> ContextRecipe:
+    return ContextRecipe(name=name, **footprints).with_builder(builder,
+                                                               *args)
+
+
+def context_app(context: Optional[Tuple] = None, n_items: int = 1,
+                manager: Optional[PCMManager] = None,
+                recipe: Optional[ContextRecipe] = None):
+    """Decorator: invoking the function submits a PCM task and returns a
+    Future. ``context=(builder, args)`` mirrors the paper's parsl_spec."""
+
+    def deco(fn: Callable):
+        if recipe is not None:
+            task_recipe = recipe
+        elif context is not None:
+            builder, args = context[0], tuple(context[1]) if len(
+                context) > 1 else ()
+            task_recipe = make_recipe(f"{fn.__name__}.ctx", builder, args)
+        else:
+            task_recipe = None
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs) -> Future:
+            mgr = manager or get_default_manager()
+            return mgr.submit(fn, args, kwargs, recipe=task_recipe,
+                              n_items=n_items)
+
+        wrapper.recipe = task_recipe
+        wrapper.fn = fn
+        return wrapper
+
+    return deco

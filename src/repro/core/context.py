@@ -1,0 +1,96 @@
+"""Context recipes and materialized contexts — the paper's first-class
+entity.
+
+A *recipe* is everything needed to (re)build an LLM context anywhere in the
+cluster: the constructor function, its inputs, the software environment, and
+the byte footprint of each stage (shared-FS artifact -> local disk -> host
+RAM -> device HBM). A *context* is one materialization of a recipe on one
+worker; the Library holds it across task executions (full-context mode).
+
+Recipes hash stably (``key()``), so the scheduler, stores, and transfer
+planner all agree on identity without shipping the payload around.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+GB = 1024 ** 3
+
+
+@dataclass(frozen=True)
+class ContextRecipe:
+    """Declarative description of an LLM context.
+
+    ``builder`` runs ONCE per worker (the paper's ``load_model``); its return
+    value is held by the Library and handed to every invocation. Footprints
+    default to the paper's measured SmolLM2 numbers (3.7 GB model artifact,
+    7.4 GB loaded, 10.5 GB conda env).
+    """
+
+    name: str
+    builder: Optional[Callable[..., Any]] = None
+    builder_args: Tuple = ()
+    builder_kwargs: Tuple = ()                  # tuple of (k, v) pairs
+    model_key: str = ""                         # ModelConfig.key() if any
+    artifact_bytes: int = int(3.7 * GB)         # shared-FS model payload
+    env_bytes: int = int(10.5 * GB)             # software deps payload
+    host_bytes: int = int(7.4 * GB)             # resident host RAM
+    device_bytes: int = int(3.7 * GB)           # resident HBM
+    version: int = 0
+
+    def key(self) -> str:
+        ident = {
+            "name": self.name, "model_key": self.model_key,
+            "artifact": self.artifact_bytes, "env": self.env_bytes,
+            "version": self.version,
+            "builder": getattr(self.builder, "__qualname__", str(self.builder)),
+        }
+        blob = json.dumps(ident, sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    @property
+    def transfer_bytes(self) -> int:
+        """Bytes pulled when bootstrapping a cold worker (artifact + env)."""
+        return self.artifact_bytes + self.env_bytes
+
+    def with_builder(self, builder, *args, **kwargs) -> "ContextRecipe":
+        import dataclasses as dc
+        return dc.replace(self, builder=builder, builder_args=args,
+                          builder_kwargs=tuple(sorted(kwargs.items())))
+
+
+@dataclass
+class Context:
+    """A materialized recipe living on one worker."""
+
+    recipe: ContextRecipe
+    value: Any = None
+    worker_id: str = ""
+    created_at: float = field(default_factory=time.monotonic)
+    build_seconds: float = 0.0
+    uses: int = 0
+    last_used: float = field(default_factory=time.monotonic)
+
+    @property
+    def key(self) -> str:
+        return self.recipe.key()
+
+    def touch(self):
+        self.uses += 1
+        self.last_used = time.monotonic()
+
+
+def materialize(recipe: ContextRecipe, worker_id: str = "local") -> Context:
+    """Run the builder (the one-time expensive startup) and wrap it."""
+    t0 = time.monotonic()
+    value = None
+    if recipe.builder is not None:
+        value = recipe.builder(*recipe.builder_args,
+                               **dict(recipe.builder_kwargs))
+    return Context(recipe=recipe, value=value, worker_id=worker_id,
+                   build_seconds=time.monotonic() - t0)

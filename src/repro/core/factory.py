@@ -1,0 +1,77 @@
+"""Worker factory — the TaskVine-factory analogue.
+
+Watches the opportunistic capacity signal (a trace in simulation; a cluster
+API in production) and reconciles the live worker pool against it: spawn
+directives when capacity rises, and — because opportunistic preemption is
+the CLUSTER's decision, not ours — emits the preemption events the trace
+dictates. The factory is reactive (paper §1): it never requests capacity,
+it adapts to what appears/disappears.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+
+@dataclass
+class PoolDirective:
+    kind: str              # "join" | "leave"
+    worker_id: str
+    profile_name: str = ""
+    t: float = 0.0
+
+
+class WorkerFactory:
+    """Reconciles the worker pool to a capacity function.
+
+    ``capacity_fn(t) -> list[profile_name]`` describes which opportunistic
+    slots exist at time t (one entry per available GPU/slice, identified by
+    device profile). Heterogeneity is first-class: slots carry profiles.
+    """
+
+    def __init__(self, capacity_fn: Callable[[float], List[str]],
+                 min_workers: int = 0, max_workers: int = 10_000,
+                 name_prefix: str = "w"):
+        self.capacity_fn = capacity_fn
+        self.min_workers = min_workers
+        self.max_workers = max_workers
+        self._ids = itertools.count()
+        self._prefix = name_prefix
+        self.live: Dict[str, str] = {}       # worker_id -> profile name
+
+    def reconcile(self, t: float) -> List[PoolDirective]:
+        want = list(self.capacity_fn(t))[:self.max_workers]
+        directives: List[PoolDirective] = []
+
+        # count per profile
+        want_counts: Dict[str, int] = {}
+        for p in want:
+            want_counts[p] = want_counts.get(p, 0) + 1
+        have_counts: Dict[str, int] = {}
+        for p in self.live.values():
+            have_counts[p] = have_counts.get(p, 0) + 1
+
+        # leaves: profiles with surplus (cluster reclaimed those slots)
+        for profile, have in sorted(have_counts.items()):
+            surplus = have - want_counts.get(profile, 0)
+            if surplus > 0:
+                victims = [wid for wid, p in sorted(self.live.items())
+                           if p == profile][:surplus]
+                for wid in victims:
+                    del self.live[wid]
+                    directives.append(PoolDirective("leave", wid, profile, t))
+
+        # joins: profiles with deficit
+        for profile, want_n in sorted(want_counts.items()):
+            deficit = want_n - have_counts.get(profile, 0)
+            for _ in range(max(0, deficit)):
+                wid = f"{self._prefix}{next(self._ids):04d}"
+                self.live[wid] = profile
+                directives.append(PoolDirective("join", wid, profile, t))
+        return directives
+
+    @property
+    def size(self) -> int:
+        return len(self.live)

@@ -1,0 +1,115 @@
+"""The Library — the persistent executor that holds materialized contexts.
+
+Mirrors the TaskVine library process (paper §3): it registers a function's
+context recipe once, materializes it (builder runs in this process's
+address space), then executes every subsequent invocation against the
+resident context. On TPU the materialization includes AOT compilation, so
+the Library doubles as a compile cache: the (weights, executables, KV pool)
+triple survives across tasks.
+
+``current_context()`` is the in-task accessor — the JAX-world analogue of
+the paper's ``load_variable_from_serverless``.
+"""
+
+from __future__ import annotations
+
+import contextvars
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.context import Context, ContextRecipe, materialize
+
+_current: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_pcm_context", default=None)
+
+
+def current_context() -> Any:
+    """Inside a PCM task: the context value built by the recipe's builder."""
+    ctx = _current.get()
+    if ctx is None:
+        raise RuntimeError("no PCM context installed — is this function "
+                           "running under a Library / PCMManager?")
+    return ctx.value
+
+
+def load_variable_from_context(name: str) -> Any:
+    """Paper Fig. 5 compatibility shim: context builders return dicts."""
+    value = current_context()
+    if not isinstance(value, dict) or name not in value:
+        raise KeyError(f"context has no variable {name!r}")
+    return value[name]
+
+
+@dataclass
+class InvocationRecord:
+    task_id: str
+    ctx_key: str
+    seconds: float
+    cold: bool
+
+
+class Library:
+    """One per worker. Materializes recipes once; executes invocations."""
+
+    def __init__(self, worker_id: str = "local"):
+        self.worker_id = worker_id
+        self._contexts: Dict[str, Context] = {}
+        self.records: List[InvocationRecord] = []
+        self.build_seconds_total = 0.0
+
+    # ---------------------------------------------------------- contexts --
+    def has(self, key: str) -> bool:
+        return key in self._contexts
+
+    def ensure(self, recipe: ContextRecipe) -> Context:
+        """Materialize if absent (the one-time startup); return resident."""
+        key = recipe.key()
+        if key not in self._contexts:
+            ctx = materialize(recipe, self.worker_id)
+            self._contexts[key] = ctx
+            self.build_seconds_total += ctx.build_seconds
+        return self._contexts[key]
+
+    def install(self, ctx: Context):
+        """Adopt a context transferred from a peer (P2P bootstrap)."""
+        self._contexts[ctx.key] = ctx
+
+    def evict(self, key: str) -> Optional[Context]:
+        return self._contexts.pop(key, None)
+
+    def evict_all(self):
+        self._contexts.clear()
+
+    def context(self, key: str) -> Context:
+        return self._contexts[key]
+
+    @property
+    def resident_keys(self):
+        return set(self._contexts)
+
+    # -------------------------------------------------------- invocation --
+    def invoke(self, fn: Callable, args: tuple = (), kwargs: dict = None,
+               recipe: Optional[ContextRecipe] = None,
+               task_id: str = "") -> Any:
+        """Execute fn with the recipe's context installed.
+
+        ``cold`` in the record marks invocations that had to materialize the
+        context first (the startup the paper amortizes away)."""
+        kwargs = kwargs or {}
+        t0 = time.monotonic()
+        cold = False
+        token = None
+        if recipe is not None:
+            cold = not self.has(recipe.key())
+            ctx = self.ensure(recipe)
+            ctx.touch()
+            token = _current.set(ctx)
+        try:
+            return fn(*args, **kwargs)
+        finally:
+            if token is not None:
+                _current.reset(token)
+            self.records.append(InvocationRecord(
+                task_id=task_id, ctx_key=recipe.key() if recipe else "",
+                seconds=time.monotonic() - t0, cold=cold))

@@ -1,0 +1,170 @@
+"""PCMManager — the live (in-process) PCM runtime.
+
+Runs the same ContextAwareScheduler as the cluster simulator, but executes
+tasks for real: each logical worker owns a Library whose contexts are
+actual JAX objects (weights + jitted executables + KV pools). On this
+single-host container the workers time-share the CPU device; on a real
+cluster each worker binds a TPU slice and the same code applies.
+
+Live preemption (``preempt_worker``) drops the worker and its device-tier
+contexts mid-flight; the scheduler requeues and the task re-runs on a warm
+worker — the end-to-end mechanism of the paper, measurable with real
+inference (examples/opportunistic_serving.py).
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.context import ContextRecipe
+from repro.core.library import Library
+from repro.core.scheduler import (Action, ContextAwareScheduler, ContextMode,
+                                  Task)
+from repro.core.store import ContextStore, Tier
+from repro.core.transfer import TransferPlanner
+
+
+@dataclass
+class Future:
+    task_id: str
+    _manager: "PCMManager"
+    _value: Any = None
+    _ready: bool = False
+    error: Optional[BaseException] = None
+
+    def result(self) -> Any:
+        while not self._ready:
+            self._manager.run_until_idle()
+            if not self._ready and self._manager.scheduler.outstanding == 0:
+                raise RuntimeError(f"task {self.task_id} lost "
+                                   "(exceeded max attempts?)")
+        if self.error is not None:
+            raise self.error
+        return self._value
+
+    @property
+    def done(self) -> bool:
+        return self._ready
+
+
+@dataclass
+class LiveWorker:
+    worker_id: str
+    library: Library
+    store: ContextStore
+
+
+class PCMManager:
+    def __init__(self, mode: ContextMode = ContextMode.FULL,
+                 n_workers: int = 2,
+                 planner: Optional[TransferPlanner] = None):
+        self.mode = mode
+        self.scheduler = ContextAwareScheduler(mode=mode, planner=planner)
+        self.workers: Dict[str, LiveWorker] = {}
+        self._futures: Dict[str, Future] = {}
+        self._ids = itertools.count()
+        self._pending_actions: List[Action] = []
+        for _ in range(n_workers):
+            self.add_worker()
+
+    # ------------------------------------------------------------- pool ----
+    def add_worker(self) -> str:
+        wid = f"live{next(self._ids):03d}"
+        w = LiveWorker(wid, Library(wid), ContextStore())
+        self.workers[wid] = w
+        acts = self.scheduler.on_worker_join(wid, time.monotonic(),
+                                             store=w.store)
+        self._pending_actions.extend(acts)
+        return wid
+
+    def preempt_worker(self, worker_id: str):
+        """No-warning eviction: device contexts are gone instantly."""
+        w = self.workers.pop(worker_id, None)
+        if w is not None:
+            w.library.evict_all()
+        acts = self.scheduler.on_worker_leave(worker_id, time.monotonic())
+        self._pending_actions.extend(acts)
+
+    # ------------------------------------------------------------ submit ---
+    def submit(self, fn: Callable, args: tuple = (), kwargs: dict = None,
+               recipe: Optional[ContextRecipe] = None,
+               n_items: int = 1) -> Future:
+        task_id = f"t{len(self.scheduler.tasks):05d}"
+        task = Task(task_id=task_id, recipe=recipe or ContextRecipe(
+            name="null", artifact_bytes=0, env_bytes=0, host_bytes=0,
+            device_bytes=0), n_items=n_items,
+            payload=(fn, args, kwargs or {}))
+        fut = Future(task_id=task_id, _manager=self)
+        self._futures[task_id] = fut
+        acts = self.scheduler.submit(task, time.monotonic())
+        self._pending_actions.extend(acts)
+        return fut
+
+    # --------------------------------------------------------- execution ---
+    def run_until_idle(self):
+        """Drain actions; single-host execution is synchronous per action."""
+        guard = 0
+        while self._pending_actions:
+            guard += 1
+            if guard > 100_000:
+                raise RuntimeError("scheduler action loop did not converge")
+            action = self._pending_actions.pop(0)
+            self._execute(action)
+
+    def _execute(self, action: Action):
+        now = time.monotonic()
+        w = self.workers.get(action.worker_id)
+        if w is None:
+            if action.kind == "start":
+                acts = self.scheduler.on_worker_leave(action.worker_id, now)
+                self._pending_actions.extend(acts)
+            return
+        if action.kind == "fetch":
+            # live mode: materialize immediately (the build IS the fetch)
+            w.library.ensure(action.recipe)
+            w.store.admit_recipe(action.recipe, self.mode.persist_tier)
+            acts = self.scheduler.on_fetch_done(action.worker_id,
+                                                action.recipe.key(), now)
+            self._pending_actions.extend(acts)
+        elif action.kind == "start":
+            task = self.scheduler.tasks[action.task_id]
+            fn, args, kwargs = task.payload
+            fut = self._futures.get(task.duplicates_of or task.task_id)
+            try:
+                value = w.library.invoke(
+                    fn, args, kwargs,
+                    recipe=task.recipe if task.recipe.name != "null" else None,
+                    task_id=task.task_id)
+                if self.mode == ContextMode.AGNOSTIC:
+                    w.library.evict_all()
+                elif self.mode == ContextMode.PARTIAL:
+                    w.library.evict(task.recipe.key())
+                if fut and not fut._ready:
+                    fut._value = value
+                    fut._ready = True
+            except BaseException as e:   # report, don't wedge the pool
+                if fut and not fut._ready:
+                    fut.error = e
+                    fut._ready = True
+            acts = self.scheduler.on_task_done(action.worker_id,
+                                               action.task_id,
+                                               time.monotonic())
+            self._pending_actions.extend(acts)
+        elif action.kind == "cancel":
+            pass  # synchronous execution never has an in-flight copy
+
+    # ------------------------------------------------------------- stats ---
+    def stats(self) -> Dict:
+        cold = warm = 0
+        build_s = 0.0
+        for w in self.workers.values():
+            for rec in w.library.records:
+                cold += rec.cold
+                warm += not rec.cold
+            build_s += w.library.build_seconds_total
+        return {"cold_invocations": cold, "warm_invocations": warm,
+                "context_build_seconds": build_s,
+                "completed": len(self.scheduler.completions)}

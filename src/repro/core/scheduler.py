@@ -1,0 +1,329 @@
+"""Context-aware scheduler — the manager-side half of Pervasive Context
+Management.
+
+Pure policy, no clock of its own: callers (the live PCMManager or the
+discrete-event cluster simulator) feed it events
+(``on_worker_join/leave``, ``on_fetch_done``, ``on_task_done``, ...) and it
+returns Actions (StartFetch / StartTask / Requeue). That split lets the
+SAME scheduling code run the real runtime and the paper-figure simulations.
+
+Policy highlights (paper §3 + production extensions):
+  * placement prefers idle workers whose store already holds the task's
+    context at the mode's persist tier (warm-context affinity);
+  * cold idle workers are bootstrapped via the TransferPlanner (P2P from a
+    warm donor when cheaper than the shared FS);
+  * preempted tasks are requeued at the FRONT (they have already waited);
+  * straggler mitigation: optionally duplicate the slowest running task to
+    a warm idle worker when it exceeds ``straggler_factor`` x the median
+    completed duration; first result wins, the loser is cancelled.
+"""
+
+from __future__ import annotations
+
+import collections
+import enum
+import itertools
+import statistics
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Set, Tuple
+
+from repro.core.context import ContextRecipe
+from repro.core.store import ContextMode, ContextStore, Tier
+from repro.core.transfer import TransferPlan, TransferPlanner
+
+
+# ------------------------------------------------------------------ types --
+@dataclass
+class Task:
+    task_id: str
+    recipe: ContextRecipe
+    n_items: int = 1                    # inferences in this task
+    payload: object = None              # live mode: (fn, args, kwargs)
+    attempts: int = 0
+    submitted_at: float = 0.0
+    duplicates_of: Optional[str] = None
+
+
+class WorkerPhase(enum.Enum):
+    IDLE = "idle"
+    FETCHING = "fetching"
+    BUSY = "busy"
+
+
+@dataclass
+class WorkerInfo:
+    worker_id: str
+    profile: object = None              # cluster.devices.DeviceProfile
+    store: ContextStore = field(default_factory=ContextStore)
+    phase: WorkerPhase = WorkerPhase.IDLE
+    current: Optional[str] = None       # running / fetching task id
+    fetching_key: Optional[str] = None
+    fetching_recipe: Optional[ContextRecipe] = None
+    joined_at: float = 0.0
+
+
+@dataclass
+class Action:
+    kind: str                           # "fetch" | "start" | "cancel"
+    worker_id: str
+    task_id: str
+    plan: Optional[TransferPlan] = None
+    recipe: Optional[ContextRecipe] = None
+    warm: bool = False                  # device-resident before this start
+    had_disk: bool = False              # disk-resident before this start
+
+
+@dataclass
+class Completion:
+    task_id: str
+    worker_id: str
+    t: float
+    n_items: int
+    duration: float
+
+
+# -------------------------------------------------------------- scheduler --
+class ContextAwareScheduler:
+    def __init__(self, mode: ContextMode = ContextMode.FULL,
+                 planner: Optional[TransferPlanner] = None,
+                 straggler_factor: float = 0.0,
+                 max_attempts: int = 100):
+        self.mode = mode
+        self.planner = planner or TransferPlanner()
+        self.straggler_factor = straggler_factor
+        self.max_attempts = max_attempts
+
+        self.queue: Deque[Task] = collections.deque()
+        self.tasks: Dict[str, Task] = {}
+        self.workers: Dict[str, WorkerInfo] = {}
+        self.running: Dict[str, Tuple[str, float]] = {}   # task -> (worker, t0)
+        self.completions: List[Completion] = []
+        self.done_ids: Set[str] = set()
+        self.failed: List[Task] = []
+        self._durations: List[float] = []
+
+    # ------------------------------------------------------------- events --
+    def submit(self, task: Task, t: float = 0.0) -> List[Action]:
+        task.submitted_at = t
+        self.tasks[task.task_id] = task
+        self.queue.append(task)
+        return self.dispatch(t)
+
+    def on_worker_join(self, worker_id: str, t: float, profile=None,
+                       store: Optional[ContextStore] = None) -> List[Action]:
+        self.workers[worker_id] = WorkerInfo(
+            worker_id=worker_id, profile=profile,
+            store=store or ContextStore(), joined_at=t)
+        return self.dispatch(t)
+
+    def on_worker_leave(self, worker_id: str, t: float) -> List[Action]:
+        """No-warning preemption: requeue whatever was running/fetching."""
+        info = self.workers.pop(worker_id, None)
+        if info is None:
+            return []
+        if info.current is not None:
+            task = self.tasks.get(info.current)
+            self.running.pop(info.current, None)
+            if task and task.task_id not in self.done_ids:
+                task.attempts += 1
+                if task.attempts >= self.max_attempts:
+                    self.failed.append(task)
+                elif not self._has_live_duplicate(task):
+                    self.queue.appendleft(task)      # preempted work first
+        return self.dispatch(t)
+
+    def on_fetch_done(self, worker_id: str, ctx_key: str, t: float
+                      ) -> List[Action]:
+        info = self.workers.get(worker_id)
+        if info is None:
+            return []
+        info.phase = WorkerPhase.IDLE
+        if (info.fetching_recipe is not None
+                and info.fetching_recipe.key() == ctx_key):
+            # the fetch materialized the context: record device residency so
+            # placement sees the worker as warm and prefetch never re-fires
+            info.store.admit_recipe(info.fetching_recipe, Tier.DEVICE, now=t)
+        info.fetching_key = None
+        info.fetching_recipe = None
+        info.current = None
+        return self.dispatch(t)
+
+    def on_task_done(self, worker_id: str, task_id: str, t: float
+                     ) -> List[Action]:
+        info = self.workers.get(worker_id)
+        task = self.tasks.get(task_id)
+        entry = self.running.pop(task_id, None)
+        if info is not None:
+            info.phase = WorkerPhase.IDLE
+            info.current = None
+            if self.mode == ContextMode.AGNOSTIC:
+                info.store.clear()
+            elif self.mode == ContextMode.PARTIAL and task is not None:
+                info.store.drop(task.recipe.key(), down_to=Tier.LOCAL_DISK)
+        actions: List[Action] = []
+        primary = task.duplicates_of or task_id if task else task_id
+        if primary not in self.done_ids:
+            self.done_ids.add(primary)
+            dur = t - entry[1] if entry else 0.0
+            self._durations.append(dur)
+            self.completions.append(Completion(
+                task_id=primary, worker_id=worker_id, t=t,
+                n_items=task.n_items if task else 1, duration=dur))
+            actions += self._cancel_other_copies(primary, task_id)
+        return actions + self.dispatch(t)
+
+    # ----------------------------------------------------------- dispatch --
+    def dispatch(self, t: float) -> List[Action]:
+        actions: List[Action] = []
+        idle = [w for w in self.workers.values()
+                if w.phase == WorkerPhase.IDLE]
+        # 1) warm-affinity placement
+        persist = self.mode.persist_tier
+        while self.queue and idle:
+            task = self.queue[0]
+            key = task.recipe.key()
+            warm = [w for w in idle if w.store.has(key, Tier.DEVICE)]
+            target = None
+            warm_start = False
+            if warm:
+                target, warm_start = warm[0], True
+            else:
+                disk = [w for w in idle if w.store.has(key, Tier.LOCAL_DISK)]
+                target = disk[0] if disk else idle[0]
+            self.queue.popleft()
+            idle.remove(target)
+            actions.append(self._start(task, target, t, warm_start))
+        # 2) prefetch contexts onto remaining idle workers (full mode only:
+        #    it is the mode where warm residency outlives the fetching task).
+        #    Demand covers queued AND running recipes: an idle worker warmed
+        #    with a running task's context catches its requeue after a
+        #    preemption (and hosts straggler duplicates) with zero startup.
+        if self.mode == ContextMode.FULL:
+            needed = self._pending_context_demand()
+            for w in idle:
+                if not needed:
+                    break
+                recipe = needed.pop(0)
+                key = recipe.key()
+                if w.store.has(key, Tier.DEVICE):
+                    continue
+                actions.append(self._fetch(recipe, w, t))
+        # 3) straggler duplication
+        if self.straggler_factor and not self.queue:
+            actions += self._duplicate_stragglers(t)
+        return actions
+
+    def _start(self, task: Task, w: WorkerInfo, t: float, warm: bool
+               ) -> Action:
+        key = task.recipe.key()
+        had_disk = w.store.has(key, Tier.LOCAL_DISK)
+        w.phase = WorkerPhase.BUSY
+        w.current = task.task_id
+        self.running[task.task_id] = (w.worker_id, t)
+        # residency the task execution will create:
+        w.store.admit_recipe(task.recipe, Tier.DEVICE, now=t)
+        w.store.touch(key, now=t)
+        return Action(kind="start", worker_id=w.worker_id,
+                      task_id=task.task_id, recipe=task.recipe, warm=warm,
+                      had_disk=had_disk)
+
+    def _fetch(self, recipe: ContextRecipe, w: WorkerInfo, t: float
+               ) -> Action:
+        donors = {wid for wid, info in self.workers.items()
+                  if wid != w.worker_id
+                  and info.store.has(recipe.key(), Tier.LOCAL_DISK)}
+        plan = self.planner.plan(recipe.transfer_bytes, donors, t,
+                                 allow_p2p=self.mode != ContextMode.AGNOSTIC)
+        w.phase = WorkerPhase.FETCHING
+        w.fetching_key = recipe.key()
+        w.fetching_recipe = recipe
+        w.current = None
+        return Action(kind="fetch", worker_id=w.worker_id, task_id="",
+                      plan=plan, recipe=recipe)
+
+    def _pending_context_demand(self) -> List[ContextRecipe]:
+        # scan a bounded prefix: queues can hold 100k+ tasks and demand is
+        # dominated by the first few distinct recipes anyway
+        seen = {}
+        for task in itertools.islice(self.queue, 256):
+            seen.setdefault(task.recipe.key(), task.recipe)
+        for tid in itertools.islice(self.running, 64):
+            task = self.tasks.get(tid)
+            if task is not None:
+                seen.setdefault(task.recipe.key(), task.recipe)
+        return list(seen.values())
+
+    # ---------------------------------------------------------- straggler --
+    def _duplicate_stragglers(self, t: float) -> List[Action]:
+        if len(self._durations) < 5 or not self.running:
+            return []
+        med = statistics.median(self._durations)
+        if med <= 0:
+            return []
+        actions = []
+        idle_warm = [w for w in self.workers.values()
+                     if w.phase == WorkerPhase.IDLE]
+        for task_id, (wid, t0) in list(self.running.items()):
+            if not idle_warm:
+                break
+            task = self.tasks.get(task_id)
+            if task is None or task.duplicates_of is not None:
+                continue
+            if self._has_live_duplicate(task, exclude=task_id):
+                continue
+            if (t - t0) > self.straggler_factor * med:
+                key = task.recipe.key()
+                cands = [w for w in idle_warm
+                         if w.store.has(key, Tier.DEVICE)] or idle_warm
+                w = cands[0]
+                idle_warm.remove(w)
+                dup = Task(task_id=f"{task_id}~dup{task.attempts}",
+                           recipe=task.recipe, n_items=task.n_items,
+                           payload=task.payload, duplicates_of=task_id)
+                self.tasks[dup.task_id] = dup
+                actions.append(self._start(dup, w, t,
+                                           w.store.has(key, Tier.DEVICE)))
+        return actions
+
+    def _has_live_duplicate(self, task: Task, exclude: str = "") -> bool:
+        primary = task.duplicates_of or task.task_id
+        for tid in self.running:
+            if tid == exclude:
+                continue
+            other = self.tasks.get(tid)
+            if other and (other.duplicates_of or other.task_id) == primary:
+                return True
+        return False
+
+    def _cancel_other_copies(self, primary: str, done_tid: str
+                             ) -> List[Action]:
+        actions = []
+        for tid, (wid, _) in list(self.running.items()):
+            other = self.tasks.get(tid)
+            if other and tid != done_tid and \
+                    (other.duplicates_of or other.task_id) == primary:
+                self.running.pop(tid)
+                info = self.workers.get(wid)
+                if info:
+                    info.phase = WorkerPhase.IDLE
+                    info.current = None
+                actions.append(Action(kind="cancel", worker_id=wid,
+                                      task_id=tid))
+        # drop queued copies too (only rebuild the deque when needed —
+        # O(queue) per completion would be quadratic on 100k-task sweeps)
+        if any(tk.duplicates_of is not None for tk in
+               itertools.islice(self.queue, 64)) or actions:
+            self.queue = collections.deque(
+                tk for tk in self.queue
+                if (tk.duplicates_of or tk.task_id) != primary)
+        return actions
+
+    # ------------------------------------------------------------- status --
+    @property
+    def outstanding(self) -> int:
+        return len(self.queue) + len(self.running)
+
+    def all_done(self) -> bool:
+        live = {tid for tid, tk in self.tasks.items()
+                if tk.duplicates_of is None}
+        return live.issubset(self.done_ids)

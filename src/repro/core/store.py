@@ -1,0 +1,134 @@
+"""Tiered per-worker context store.
+
+Tiers mirror the paper's startup pipeline: SHARED_FS -> LOCAL_DISK ->
+HOST_RAM -> DEVICE. The three application transformations map onto how deep
+residency is allowed to persist across tasks:
+
+  context-agnostic : nothing persists (store cleared after every task)
+  partial-context  : LOCAL_DISK persists (artifact + env cached on disk;
+                     HBM state still rebuilt per task)
+  full-context     : DEVICE persists (the Library keeps the loaded model)
+
+Capacity-bounded with LRU eviction per tier; eviction from a tier demotes
+nothing (re-fetch from below), matching worker sandbox semantics.
+"""
+
+from __future__ import annotations
+
+import enum
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set
+
+from repro.core.context import GB, ContextRecipe
+
+
+class Tier(enum.IntEnum):
+    SHARED_FS = 0      # always available (the cluster filesystem)
+    LOCAL_DISK = 1
+    HOST_RAM = 2
+    DEVICE = 3
+
+
+class ContextMode(enum.Enum):
+    AGNOSTIC = "agnostic"
+    PARTIAL = "partial"
+    FULL = "full"
+
+    @property
+    def persist_tier(self) -> Tier:
+        return {ContextMode.AGNOSTIC: Tier.SHARED_FS,
+                ContextMode.PARTIAL: Tier.LOCAL_DISK,
+                ContextMode.FULL: Tier.DEVICE}[self]
+
+
+@dataclass
+class _Entry:
+    key: str
+    nbytes: int
+    last_used: float = field(default_factory=time.monotonic)
+
+
+class ContextStore:
+    """Tracks which context keys are resident at which tier of one worker."""
+
+    def __init__(self, disk_bytes: int = 70 * GB, host_bytes: int = 10 * GB,
+                 device_bytes: int = 24 * GB):
+        self.capacity = {Tier.LOCAL_DISK: disk_bytes,
+                         Tier.HOST_RAM: host_bytes,
+                         Tier.DEVICE: device_bytes}
+        self._tiers: Dict[Tier, Dict[str, _Entry]] = {
+            Tier.LOCAL_DISK: {}, Tier.HOST_RAM: {}, Tier.DEVICE: {}}
+        self.evictions = 0
+
+    def has(self, key: str, tier: Tier) -> bool:
+        if tier == Tier.SHARED_FS:
+            return True
+        return key in self._tiers[tier]
+
+    def highest_tier(self, key: str) -> Tier:
+        for tier in (Tier.DEVICE, Tier.HOST_RAM, Tier.LOCAL_DISK):
+            if key in self._tiers[tier]:
+                return tier
+        return Tier.SHARED_FS
+
+    def used(self, tier: Tier) -> int:
+        return sum(e.nbytes for e in self._tiers[tier].values())
+
+    def admit(self, key: str, tier: Tier, nbytes: int, now: float = None
+              ) -> List[str]:
+        """Place key at tier, LRU-evicting as needed. Returns evicted keys."""
+        if tier == Tier.SHARED_FS:
+            return []
+        if nbytes > self.capacity[tier]:
+            raise ValueError(
+                f"context {key} ({nbytes / GB:.1f} GB) exceeds tier "
+                f"{tier.name} capacity ({self.capacity[tier] / GB:.1f} GB)")
+        entries = self._tiers[tier]
+        evicted = []
+        while self.used(tier) + nbytes > self.capacity[tier] and entries:
+            victim = min((e for k, e in entries.items() if k != key),
+                         key=lambda e: e.last_used, default=None)
+            if victim is None:
+                break
+            del entries[victim.key]
+            evicted.append(victim.key)
+            self.evictions += 1
+        now = time.monotonic() if now is None else now
+        entries[key] = _Entry(key=key, nbytes=nbytes, last_used=now)
+        return evicted
+
+    def admit_recipe(self, recipe: ContextRecipe, upto: Tier,
+                     now: float = None) -> List[str]:
+        """Admit a recipe's footprint at every tier up to ``upto``."""
+        key = recipe.key()
+        evicted = []
+        if upto >= Tier.LOCAL_DISK:
+            evicted += self.admit(key, Tier.LOCAL_DISK,
+                                  recipe.transfer_bytes, now)
+        if upto >= Tier.HOST_RAM:
+            evicted += self.admit(key, Tier.HOST_RAM, recipe.host_bytes, now)
+        if upto >= Tier.DEVICE:
+            evicted += self.admit(key, Tier.DEVICE, recipe.device_bytes, now)
+        return evicted
+
+    def touch(self, key: str, now: float = None):
+        now = time.monotonic() if now is None else now
+        for entries in self._tiers.values():
+            if key in entries:
+                entries[key].last_used = now
+
+    def drop(self, key: str, down_to: Tier = Tier.SHARED_FS):
+        """Remove residency above ``down_to`` (mode cleanup after a task)."""
+        for tier, entries in self._tiers.items():
+            if tier > down_to:
+                entries.pop(key, None)
+
+    def clear(self):
+        for entries in self._tiers.values():
+            entries.clear()
+
+    def keys(self, tier: Tier) -> Set[str]:
+        if tier == Tier.SHARED_FS:
+            return set()
+        return set(self._tiers[tier])

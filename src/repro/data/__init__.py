@@ -1,0 +1,3 @@
+from repro.data.tokenizer import HashTokenizer
+from repro.data.pipeline import PipelineConfig, batches
+from repro.data import fever

@@ -1,0 +1,105 @@
+"""Pallas TPU flash-decode: one query token per sequence against a KV cache.
+
+GQA-aware: the q heads sharing one kv head form the M dimension of the MXU
+matmul (G x block_k scores), so grouped queries are batched into a single
+dot instead of G separate vector products.
+
+Grid: (batch, kv_heads, num_kv_blocks); the kv-block axis is sequential and
+carries (m, l, acc) scratch. Per-sequence valid lengths arrive via SMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float, bk: int, nk: int, ring: bool):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[pl.program_id(0)]                    # valid kv count
+    k_lo = ki * bk
+    live = k_lo < length
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)         # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)         # (bk, D)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q, cache_k, cache_v, lengths, *, scale: float = 1.0,
+                 block_k: int = 512, ring: bool = False,
+                 interpret: bool = False):
+    """q (B, H, D); cache_k/v (B, Skv, Hkv, D); lengths (B,) valid counts.
+
+    Returns (B, H, D). ``ring=True`` treats the whole buffer as valid once
+    ``lengths >= Skv`` (SWA ring buffers) — callers pass
+    ``min(lengths, Skv)`` for that case, so the mask logic is shared.
+    """
+    B, H, D = q.shape
+    Skv, Hkv = cache_k.shape[1], cache_k.shape[2]
+    G = H // Hkv
+    bk = min(block_k, Skv)
+    assert Skv % bk == 0, (Skv, bk)
+    nk = Skv // bk
+    qg = q.reshape(B, Hkv, G, D)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, bk=bk, nk=nk,
+                               ring=ring)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),        # lengths (B,)->slice
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, j: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(_per_batch_lengths(lengths, B), qg, cache_k, cache_v)
+    return out.reshape(B, H, D)
+
+
+def _per_batch_lengths(lengths, B):
+    return lengths.astype(jnp.int32)

@@ -1,0 +1,70 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute in ``interpret=True`` mode — the
+kernel body runs in Python/XLA for correctness validation; on TPU the same
+call sites compile to Mosaic. The model layer calls these entry points when
+``cfg.use_kernels`` is set.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import flash_decode as _flash_decode
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.moe_gemm import grouped_gemm as _grouped_gemm
+from repro.kernels.ssm_scan import ssd_scan_bhs
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float = 1.0, block_q: int = 128,
+                    block_k: int = 128):
+    """q,k,v (B,S,H,D) same head count -> (B,S,H,D)."""
+    B, S, H, D = q.shape
+    qf = q.swapaxes(1, 2).reshape(B * H, S, D)
+    kf = k.swapaxes(1, 2).reshape(B * H, k.shape[1], D)
+    vf = v.swapaxes(1, 2).reshape(B * H, v.shape[1], D)
+    out = flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                               scale=scale, block_q=block_q, block_k=block_k,
+                               interpret=_interpret())
+    return out.reshape(B, H, S, D).swapaxes(1, 2)
+
+
+def flash_decode(q, cache_k, cache_v, lengths, *, scale: float = 1.0,
+                 block_k: int = 512):
+    return _flash_decode(q, cache_k, cache_v, lengths, scale=scale,
+                         block_k=block_k, interpret=_interpret())
+
+
+def ssm_scan(C_mat, B_mat, v, log_a, *, chunk: int = 128):
+    """Mamba2/SSD entry point matching models.ssm conventions.
+
+    C_mat (q-like), B_mat (k-like) (B,S,H,N); v (B,S,H,P); log_a (B,S,H).
+    Returns (y (B,S,H,P) f32, final_state (B,H,N,P) f32)."""
+    Bb, S, H, N = C_mat.shape
+    P = v.shape[-1]
+    q = C_mat.swapaxes(1, 2).reshape(Bb * H, S, N).astype(jnp.float32)
+    k = B_mat.swapaxes(1, 2).reshape(Bb * H, S, N).astype(jnp.float32)
+    vv = v.swapaxes(1, 2).reshape(Bb * H, S, P).astype(jnp.float32)
+    la = log_a.swapaxes(1, 2).reshape(Bb * H, S, 1).astype(jnp.float32)
+    y, state = ssd_scan_bhs(q, k, vv, la, chunk=chunk,
+                            interpret=_interpret())
+    y = y.reshape(Bb, H, S, P).swapaxes(1, 2)
+    state = state.reshape(Bb, H, N, P)
+    return y, state
+
+
+def grouped_gemm(x, w, **kw):
+    return _grouped_gemm(x, w, interpret=_interpret(), **kw)
+
+
+__all__ = ["flash_attention", "flash_decode", "ssm_scan", "grouped_gemm",
+           "ref"]

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float = 1.0):
+    """q,k,v (BH, S/T, D) -> (BH, S, D). Naive full-matrix attention."""
+    S, T = q.shape[1], k.shape[1]
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", w, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def flash_decode_ref(q, cache_k, cache_v, lengths, *, scale: float = 1.0):
+    """q (B,H,D); cache (B,Skv,Hkv,D); lengths (B,) -> (B,H,D)."""
+    B, H, D = q.shape
+    Hkv = cache_k.shape[2]
+    kf = jnp.repeat(cache_k, H // Hkv, axis=2)
+    vf = jnp.repeat(cache_v, H // Hkv, axis=2)
+    s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+    pos = jnp.arange(cache_k.shape[1])
+    valid = pos[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,bthd->bhd", w, vf.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def ssd_scan_ref(q, k, v, log_a):
+    """Sequential reference: state_t = a_t*state + k_t v_t^T; y_t = q_t@state.
+
+    q,k (BH,S,Dk); v (BH,S,Dv); log_a (BH,S,1). Returns (y, final_state)."""
+    BH, S, Dk = q.shape
+    Dv = v.shape[-1]
+
+    def step(state, xs):
+        q_t, k_t, v_t, la_t = xs
+        state = state * jnp.exp(la_t)[:, :, None] + \
+            jnp.einsum("bk,bv->bkv", k_t, v_t)
+        y_t = jnp.einsum("bk,bkv->bv", q_t, state)
+        return state, y_t
+
+    qf = q.astype(jnp.float32).swapaxes(0, 1)
+    kf = k.astype(jnp.float32).swapaxes(0, 1)
+    vf = v.astype(jnp.float32).swapaxes(0, 1)
+    laf = log_a.astype(jnp.float32).swapaxes(0, 1)
+    state0 = jnp.zeros((BH, Dk, Dv), jnp.float32)
+    state, ys = jax.lax.scan(step, state0, (qf, kf, vf, laf))
+    return ys.swapaxes(0, 1).astype(q.dtype), state
+
+
+def grouped_gemm_ref(x, w):
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract the roofline raw material.
+
+Per cell this produces a JSON artifact with:
+  * gate: compile success of the PRODUCTION (scan-over-layers) form on the
+    16x16 single-pod mesh and the 2x16x16 multi-pod mesh, plus
+    memory_analysis() (fits-in-HBM evidence) and per-device HLO stats;
+  * analysis: HLO FLOPs/bytes from an UNROLLED-layers lowering (XLA's
+    HloCostAnalysis counts while bodies once — unrolling makes depth
+    visible) with single-chunk attention (chunk loops made visible,
+    FLOP-neutral);
+  * collectives: operand bytes of all-gather/all-reduce/reduce-scatter/
+    all-to-all/collective-permute, extrapolated per-layer from two UNROLLED
+    shallow probe compiles (1x and 2x the arch's layer-pattern unit).
+
+Resumable: existing JSONs are skipped unless --force.
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm-12b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod] [--gate-only]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, SHAPES, get_config
+from repro.configs.shapes import shapes_for, skip_reason
+from repro.launch import hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import make_rules
+from repro.launch.steps import build_cell, pattern_unit, probe_config
+from repro.models import attention as attention_mod
+from repro.models.sharding import set_layer_unroll, sharding_rules
+
+DEFAULT_OUT = Path("experiments/dryrun")
+
+
+def cell_name(arch: str, shape: str, multipod: bool) -> str:
+    return f"{arch}__{shape}__{'pod2' if multipod else 'pod1'}"
+
+
+def _analysis_mode(on: bool):
+    set_layer_unroll(on)
+    attention_mod.set_full_chunk(on)
+
+
+def run_cell(arch: str, shape: str, multipod: bool, out_dir: Path,
+             gate_only: bool = False, force: bool = False) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_file = out_dir / f"{cell_name(arch, shape, multipod)}.json"
+    if out_file.exists() and not force:
+        return json.loads(out_file.read_text())
+
+    cfg = get_config(arch)
+    suite = SHAPES[shape]
+    result = {"arch": arch, "shape": shape,
+              "mesh": "2x16x16" if multipod else "16x16",
+              "kind": suite.kind, "ok": False}
+
+    reason = skip_reason(cfg, suite)
+    if reason:
+        result.update(ok=True, skipped=True, skip_reason=reason)
+        out_file.write_text(json.dumps(result, indent=1))
+        return result
+
+    try:
+        mesh = make_production_mesh(multi_pod=multipod)
+        rules = make_rules(cfg, mesh, suite)
+        result["rules"] = {k: list(v) if isinstance(v, tuple) else v
+                           for k, v in rules.items()}
+        ce_chunk = 512
+
+        with mesh, sharding_rules(mesh, rules):
+            # ---- gate: production (scanned) form --------------------------
+            # train cells: remat=full + 4 microbatches is the baseline
+            # production memory config (6.5 GB/device on smollm2; see §Perf)
+            t0 = time.time()
+            kw = ({"ce_chunk": ce_chunk, "remat": "full", "accum_steps": 4}
+                  if suite.kind == "train" else {})
+            fn, args, _ = build_cell(cfg, suite, mesh, rules=rules, **kw)
+            lowered = fn.lower(*args)
+            result["lower_seconds"] = round(time.time() - t0, 2)
+            t0 = time.time()
+            compiled = lowered.compile()
+            result["compile_seconds"] = round(time.time() - t0, 2)
+            result["memory_analysis"] = hlo.memory_stats(compiled)
+            result["cost_scanned"] = hlo.cost_stats(compiled)
+            text = compiled.as_text()
+            result["collectives_scanned_body"] = hlo.collective_bytes(text)
+            result["hlo_while_count"] = hlo.count_ops(text, "while")
+            del compiled, lowered, text
+
+            if not gate_only:
+                # ---- analysis: unrolled lowering for true FLOPs -----------
+                _analysis_mode(True)
+                try:
+                    t0 = time.time()
+                    # accum=1: whole-batch single pass => correct TOTAL
+                    # flops/collectives (the accum scan is a while loop)
+                    kw_a = ({"ce_chunk": suite.seq_len, "remat": "full",
+                             "accum_steps": 1}
+                            if suite.kind == "train" else {})
+                    fn_u, args_u, _ = build_cell(cfg, suite, mesh,
+                                                 rules=rules, **kw_a)
+                    lowered_u = fn_u.lower(*args_u)
+                    result["cost_unrolled"] = hlo.cost_stats(lowered_u)
+                    result["analysis_lower_seconds"] = round(
+                        time.time() - t0, 2)
+                    del lowered_u
+                finally:
+                    _analysis_mode(False)
+
+                # ---- collectives: unrolled shallow probes -----------------
+                result["collectives"] = _probe_collectives(
+                    cfg, suite, mesh, rules)
+        result["ok"] = True
+    except Exception as e:  # record the failure; the matrix keeps going
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc(limit=12)
+    out_file.write_text(json.dumps(result, indent=1))
+    return result
+
+
+def _probe_collectives(cfg, suite, mesh, rules, train_kw=None) -> dict:
+    """Per-layer collective bytes from two unrolled shallow compiles.
+
+    ``train_kw`` overrides remat policy etc. (perf A/Bs); accum is forced
+    to 1 so the whole batch flows in one pass (accum scans are while loops
+    whose collectives HLO parsing would count once)."""
+    unit = pattern_unit(cfg)
+    out = {"pattern_unit": unit}
+    _analysis_mode(True)
+    try:
+        per_probe = {}
+        for units in (1, 2):
+            pcfg = probe_config(cfg, units)
+            kw = {}
+            if suite.kind == "train":
+                kw = {"ce_chunk": suite.seq_len, "remat": "full"}
+                kw.update(train_kw or {})
+                kw["accum_steps"] = 1
+                kw["ce_chunk"] = suite.seq_len
+            fn, args, _ = build_cell(pcfg, suite, mesh, rules=rules, **kw)
+            t0 = time.time()
+            compiled = fn.lower(*args).compile()
+            cb = hlo.collective_bytes(compiled.as_text())
+            per_probe[units] = {"layers": pcfg.n_layers, "bytes": cb,
+                                "compile_seconds": round(time.time() - t0,
+                                                         2)}
+            del compiled
+        l1, l2 = per_probe[1]["layers"], per_probe[2]["layers"]
+        b1 = per_probe[1]["bytes"].get("total", 0)
+        b2 = per_probe[2]["bytes"].get("total", 0)
+        per_layer = max(0.0, (b2 - b1) / max(1, l2 - l1))
+        base = max(0.0, b1 - per_layer * l1)
+        total = base + per_layer * cfg.n_layers
+        out.update(probes=per_probe, per_layer_bytes=per_layer,
+                   base_bytes=base, extrapolated_total_bytes=total)
+        # per-kind extrapolation
+        kinds = set(per_probe[1]["bytes"]) | set(per_probe[2]["bytes"])
+        kinds.discard("total")
+        by_kind = {}
+        for k in sorted(kinds):
+            kb1 = per_probe[1]["bytes"].get(k, 0)
+            kb2 = per_probe[2]["bytes"].get(k, 0)
+            pl = max(0.0, (kb2 - kb1) / max(1, l2 - l1))
+            by_kind[k] = max(0.0, kb1 - pl * l1) + pl * cfg.n_layers
+        out["by_kind"] = by_kind
+    finally:
+        _analysis_mode(False)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ALL_ARCHS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true",
+                    help="run every assigned (arch x shape) cell")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--gate-only", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            cfg = get_config(arch)
+            for suite in shapes_for(cfg):
+                cells.append((arch, suite.name))
+            for suite in (set(SHAPES.values()) - set(shapes_for(cfg))):
+                cells.append((arch, suite.name))  # records the skip
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape (or --all) required")
+        cells = [(args.arch, args.shape)]
+
+    meshes = ([False, True] if args.both_meshes
+              else [args.multipod])
+    for arch, shape in cells:
+        for mp in meshes:
+            t0 = time.time()
+            r = run_cell(arch, shape, mp, out_dir,
+                         gate_only=args.gate_only, force=args.force)
+            status = ("SKIP" if r.get("skipped")
+                      else "OK" if r.get("ok") else "FAIL")
+            print(f"[{status:4s}] {cell_name(arch, shape, mp):60s} "
+                  f"{time.time() - t0:7.1f}s "
+                  f"{r.get('error', '')[:80]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""HLO text analysis: collective-byte accounting for the roofline.
+
+Parses compiled (post-GSPMD) HLO and sums the operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+Collectives inside while-loop bodies are counted once by this parse —
+callers account for trip counts by compiling UNROLLED probe configs and
+extrapolating per-layer (see launch/roofline.py).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind bytes (plus 'total').
+
+    Post-optimization HLO prints operands without shapes, so we size each
+    collective by its RESULT shape: exact for all-reduce / all-to-all /
+    collective-permute, received-bytes for all-gather, and sent-bytes/shards
+    for reduce-scatter (conservative; noted in EXPERIMENTS.md)."""
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if m.group("suffix") == "-done":
+            continue  # async pairs: counted at -start
+        kind = m.group("kind")
+        nbytes = sum(_shape_bytes(d, s)
+                     for d, s in _SHAPE_RE.findall(m.group("result")))
+        out[kind] += nbytes
+        out["total"] += nbytes
+    return dict(out)
+
+
+def count_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\b", hlo_text))
+
+
+def memory_stats(compiled) -> Dict[str, float]:
+    """Best-effort extraction from compiled.memory_analysis()."""
+    ma = None
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes", "serialized_size_in_bytes"):
+        v = getattr(ma, field, None)
+        if v is not None:
+            out[field] = float(v)
+    if not out and ma is not None:
+        out["repr"] = str(ma)[:2000]
+    return out
+
+
+def cost_stats(lowered_or_compiled) -> Dict[str, float]:
+    try:
+        ca = lowered_or_compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    out = {}
+    for k in ("flops", "bytes accessed", "transcendentals",
+              "optimal_seconds"):
+        if k in ca:
+            out[k.replace(" ", "_")] = float(ca[k])
+    return out

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module constant) so importing this module never touches
+jax device state — required because tests/benches run with 1 CPU device
+while the dry-run forces 512 placeholder devices via XLA_FLAGS.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — the "
+            "dry-run entrypoint must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import")
+    import numpy as np
+    return jax.sharding.Mesh(np.array(devices).reshape(shape), axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests)."""
+    devices = jax.devices()[:data * model]
+    import numpy as np
+    return jax.sharding.Mesh(np.array(devices).reshape(data, model),
+                             ("data", "model"))

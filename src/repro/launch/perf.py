@@ -1,0 +1,133 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration harness (§Perf): lower+compile one cell under config/rule
+overrides and report the roofline-term deltas vs the recorded baseline.
+
+  python -m repro.launch.perf --arch granite-3-2b --shape decode_32k \
+      --set kv_update=mask --tag mask_update
+
+Artifacts land in experiments/perf/<arch>__<shape>__<tag>.json and are
+folded into EXPERIMENTS.md §Perf by hand with the hypothesis/confirmation
+narrative.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch import hlo
+from repro.launch.dryrun import _analysis_mode, _probe_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import make_rules
+from repro.launch.steps import build_cell
+from repro.models.sharding import sharding_rules
+
+OUT = Path("experiments/perf")
+
+
+def parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        out[k] = v
+    return out
+
+
+def run(arch: str, shape: str, tag: str, overrides: dict,
+        train_kw: dict, multipod: bool = False) -> dict:
+    OUT.mkdir(parents=True, exist_ok=True)
+    cfg = dataclasses.replace(get_config(arch), **overrides)
+    suite = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multipod)
+    rules = make_rules(cfg, mesh, suite)
+    result = {"arch": arch, "shape": shape, "tag": tag,
+              "overrides": overrides, "train_kw": train_kw, "ok": False}
+    try:
+        with mesh, sharding_rules(mesh, rules):
+            kw = dict(train_kw) if suite.kind == "train" else {}
+            t0 = time.time()
+            fn, args, _ = build_cell(cfg, suite, mesh, rules=rules, **kw)
+            compiled = fn.lower(*args).compile()
+            result["compile_seconds"] = round(time.time() - t0, 2)
+            result["memory_analysis"] = hlo.memory_stats(compiled)
+            del compiled
+
+            _analysis_mode(True)
+            try:
+                kw_a = dict(kw)
+                if suite.kind == "train":
+                    kw_a.update(ce_chunk=suite.seq_len, accum_steps=1)
+                fn_u, args_u, _ = build_cell(cfg, suite, mesh, rules=rules,
+                                             **kw_a)
+                result["cost_unrolled"] = hlo.cost_stats(fn_u.lower(*args_u))
+            finally:
+                _analysis_mode(False)
+            result["collectives"] = _probe_collectives(
+                cfg, suite, mesh, rules,
+                train_kw={"remat": train_kw.get("remat", "full")})
+        result["ok"] = True
+    except Exception as e:
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc(limit=10)
+    out_file = OUT / f"{arch}__{shape}__{tag}.json"
+    out_file.write_text(json.dumps(result, indent=1))
+    return result
+
+
+def summarize(result: dict, baseline: dict = None):
+    if not result.get("ok"):
+        print("FAIL:", result.get("error"))
+        return
+    coll = result["collectives"].get("extrapolated_total_bytes", 0)
+    flops = result.get("cost_unrolled", {}).get("flops", 0)
+    temp = result.get("memory_analysis", {}).get("temp_size_in_bytes", 0)
+    line = (f"{result['arch']} {result['shape']} [{result['tag']}]: "
+            f"coll={coll / 1e9:.2f}GB flops={flops:.3e} "
+            f"temp={temp / 1e9:.1f}GB")
+    if baseline and baseline.get("ok"):
+        b_coll = baseline.get("collectives", {}).get(
+            "extrapolated_total_bytes", 0)
+        if b_coll:
+            line += f"  (coll {100 * (coll - b_coll) / b_coll:+.1f}%)"
+    print(line)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="ModelConfig overrides k=v")
+    ap.add_argument("--accum", type=int, default=4)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--baseline", default=None,
+                    help="dry-run artifact to diff against")
+    args = ap.parse_args()
+    overrides = parse_overrides(args.set)
+    train_kw = {"accum_steps": args.accum, "remat": args.remat,
+                "ce_chunk": 512}
+    result = run(args.arch, args.shape, args.tag, overrides, train_kw,
+                 args.multipod)
+    baseline = None
+    if args.baseline:
+        baseline = json.loads(Path(args.baseline).read_text())
+    summarize(result, baseline)
+
+
+if __name__ == "__main__":
+    main()

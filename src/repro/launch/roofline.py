@@ -1,0 +1,176 @@
+"""Roofline derivation from dry-run artifacts.
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory term     = min_HBM_bytes / (chips * HBM_bw)     [analytic floor]
+                    (HLO bytes_accessed recorded as the pre-fusion bound)
+  collective term = collective_bytes_per_device / link_bw
+
+HLO_FLOPs come from the unrolled-layers lowering (global program FLOPs),
+divided by chip count. Collective bytes come from the per-layer probe
+extrapolation (already per-device post-GSPMD). The memory floor is
+analytic: weights read once per step + KV/state traffic + batch IO — the
+fusion-independent minimum; XLA's pre-fusion ``bytes_accessed`` wildly
+overcounts and is only reported as an upper bound.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+from typing import Dict, Optional
+
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops(cfg, suite) -> float:
+    """MODEL_FLOPS: 6*N*D for train, 2*N_active*D forward-only for serving."""
+    n = cfg.active_param_count()
+    if suite.kind == "train":
+        tokens = suite.global_batch * suite.seq_len
+        return 6.0 * n * tokens
+    if suite.kind == "prefill":
+        tokens = suite.global_batch * suite.seq_len
+        return 2.0 * n * tokens
+    tokens = suite.global_batch  # one new token per sequence
+    return 2.0 * n * tokens
+
+
+def analytic_min_bytes(cfg, suite) -> float:
+    """Fusion-independent minimum HBM traffic per step (whole cluster)."""
+    dtype = 2  # bf16
+    weights = cfg.param_count() * dtype
+    if suite.kind == "train":
+        # fwd+bwd read weights twice-ish + grads + opt state touch (f32)
+        weight_traffic = 2 * weights + cfg.param_count() * (2 + 4 + 4 + 4)
+        act = suite.global_batch * suite.seq_len * cfg.d_model * dtype
+        act_traffic = act * cfg.n_layers * 4  # saved residuals + recompute IO
+        return weight_traffic + act_traffic
+    kv_token = cfg.kv_bytes_per_token(1 if "8" in cfg.kv_cache_dtype
+                                      else 2)
+    if suite.kind == "prefill":
+        act = suite.global_batch * suite.seq_len * cfg.d_model * dtype
+        kv_write = suite.global_batch * suite.seq_len * kv_token
+        # blockwise attention re-reads KV per query chunk: O(S/C) passes
+        kv_reread = kv_write * max(1, suite.seq_len // 1024) * 0.5
+        return weights + act * cfg.n_layers * 2 + kv_write + kv_reread
+    # decode: read all weights + full KV/state once per token
+    window = cfg.sliding_window or suite.seq_len
+    kv_dtype_bytes = 1 if "8" in cfg.kv_cache_dtype else 2
+    kv = (suite.global_batch * min(window, suite.seq_len) *
+          cfg.kv_bytes_per_token(kv_dtype_bytes))
+    ssm_state = 0.0
+    if cfg.family in ("ssm", "hybrid"):
+        # recurrent state read+write (f32)
+        from repro.models.ssm import mamba2_dims, mlstm_dims
+        if cfg.family == "hybrid":
+            _, m_heads, _ = mamba2_dims(cfg)
+            ssm_state = (suite.global_batch * m_heads * cfg.ssm.state_dim *
+                         cfg.ssm.head_dim * 4 * cfg.n_layers * 2)
+        else:
+            _, hd = mlstm_dims(cfg)
+            per = cfg.n_heads * hd * (hd + 1) * 4
+            ssm_state = suite.global_batch * per * cfg.n_layers * 2
+    return weights + kv + ssm_state
+
+
+def cell_roofline(artifact: Dict) -> Optional[Dict]:
+    if artifact.get("skipped") or not artifact.get("ok"):
+        return None
+    cfg = get_config(artifact["arch"])
+    suite = SHAPES[artifact["shape"]]
+    chips = CHIPS[artifact["mesh"]]
+
+    gate_only = "cost_unrolled" not in artifact
+    hlo_flops = artifact.get("cost_unrolled", {}).get("flops")
+    if hlo_flops is None:  # gate-only runs: fall back to analytic
+        hlo_flops = model_flops(cfg, suite)
+    compute_s = hlo_flops / (chips * PEAK_FLOPS)
+
+    min_bytes = analytic_min_bytes(cfg, suite)
+    memory_s = min_bytes / (chips * HBM_BW)
+
+    coll = artifact.get("collectives", {})
+    coll_bytes = coll.get("extrapolated_total_bytes", 0.0)
+    collective_s = coll_bytes / ICI_BW  # already per-device
+
+    mf = model_flops(cfg, suite)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    useful = mf / (chips * PEAK_FLOPS)
+    return {
+        "arch": artifact["arch"], "shape": artifact["shape"],
+        "mesh": artifact["mesh"], "kind": artifact["kind"],
+        "gate_only": gate_only,
+        "hlo_flops": hlo_flops, "model_flops": mf,
+        "flops_ratio": mf / hlo_flops if hlo_flops else 0.0,
+        "min_hbm_bytes": min_bytes,
+        "hlo_bytes_prefusion": artifact.get("cost_unrolled", {}).get(
+            "bytes_accessed"),
+        "collective_bytes": coll_bytes,
+        "collective_by_kind": coll.get("by_kind", {}),
+        **{k: v for k, v in terms.items()},
+        "dominant": dominant,
+        "roofline_fraction": useful / bound if bound else 0.0,
+        "step_seconds_bound": bound,
+    }
+
+
+def load_table(dry_dir: str = "experiments/dryrun") -> list:
+    rows = []
+    for f in sorted(Path(dry_dir).glob("*.json")):
+        art = json.loads(f.read_text())
+        row = cell_roofline(art)
+        if row is None:
+            rows.append({"arch": art["arch"], "shape": art["shape"],
+                         "mesh": art.get("mesh"),
+                         "skipped": art.get("skipped", False),
+                         "error": art.get("error"),
+                         "skip_reason": art.get("skip_reason")})
+        else:
+            rows.append(row)
+    return rows
+
+
+def format_table(rows: list) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':8s} {'comp_ms':>9s} "
+           f"{'mem_ms':>9s} {'coll_ms':>9s} {'dominant':>12s} "
+           f"{'MF/HLO':>7s} {'roofline':>9s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("skipped"):
+            lines.append(f"{r['arch']:24s} {r['shape']:12s} "
+                         f"{r.get('mesh') or '':8s} SKIP "
+                         f"({(r.get('skip_reason') or '')[:60]})")
+            continue
+        if r.get("error"):
+            lines.append(f"{r['arch']:24s} {r['shape']:12s} "
+                         f"{r.get('mesh') or '':8s} FAIL "
+                         f"{r['error'][:60]}")
+            continue
+        if r.get("gate_only"):
+            lines.append(
+                f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+                f"GATE-ONLY (compile+memory pass; analysis on 16x16)")
+            continue
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{r['compute_s'] * 1e3:9.2f} {r['memory_s'] * 1e3:9.2f} "
+            f"{r['collective_s'] * 1e3:9.2f} "
+            f"{r['dominant'].replace('_s', ''):>12s} "
+            f"{r['flops_ratio']:7.2f} {r['roofline_fraction']:9.3f}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(format_table(load_table()))

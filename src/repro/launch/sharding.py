@@ -1,0 +1,208 @@
+"""Divisibility-aware sharding plans: logical rules + parameter specs.
+
+``make_rules`` decides, per (arch, shape, mesh), which logical activation
+axes map to which mesh axes — checking every divisibility constraint so the
+same code serves whisper's 12 heads (heads unsharded, d_ff sharded) and
+qwen3's 128 experts (8 experts/device EP). ``param_specs`` assigns a
+PartitionSpec to every parameter leaf by path+shape pattern; anything that
+fails a divisibility check falls back to replication (never a compile
+error).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSuite
+from repro.models.ssm import mamba2_dims, mlstm_dims
+
+
+def _tp(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def _batch_axes(mesh: Mesh, global_batch: int):
+    """Largest batch sharding the batch size supports."""
+    axes = []
+    size = 1
+    for name in ("pod", "data"):
+        if name in mesh.shape:
+            if global_batch % (size * mesh.shape[name]) == 0:
+                axes.append(name)
+                size *= mesh.shape[name]
+    return tuple(axes) if axes else None
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh, suite: Optional[ShapeSuite]
+               ) -> Dict[str, Any]:
+    tp = _tp(mesh)
+    gb = suite.global_batch if suite else 0
+    rules: Dict[str, Any] = {}
+    batch = _batch_axes(mesh, gb) if gb else ("data",)
+    if batch:
+        rules["batch"] = batch
+
+    if cfg.family == "ssm":
+        d_in, _ = mlstm_dims(cfg)
+        heads_ok = False                      # xlstm: 4 heads — replicate
+    elif cfg.family == "hybrid":
+        _, m_heads, _ = mamba2_dims(cfg)
+        heads_ok = cfg.n_heads % tp == 0 and m_heads % tp == 0
+    else:
+        heads_ok = cfg.n_heads % tp == 0
+    if heads_ok:
+        rules["heads"] = "model"
+
+    d_ff = cfg.d_ff or (cfg.moe.dense_d_ff if cfg.moe.enabled else 0)
+    if d_ff and d_ff % tp == 0:
+        rules["d_ff"] = "model"
+    if cfg.padded_vocab % tp == 0:
+        rules["vocab"] = "model"
+    if cfg.moe.enabled and cfg.moe.n_experts % tp == 0:
+        rules["experts"] = "model"
+
+    # decode KV cache: batch over data axes, cache-seq over model axis; when
+    # batch can't shard (long_500k B=1) give kv_seq the pod axis too
+    if suite is not None and suite.kind == "decode":
+        if batch is None and "pod" in mesh.shape:
+            rules["kv_seq"] = ("pod", "model")
+        else:
+            rules["kv_seq"] = "model"
+    return rules
+
+
+# -------------------------------------------------------- parameter specs --
+def _spec_from_trailing(path: str, shape: Tuple[int, ...], cfg: ModelConfig,
+                        rules: Dict[str, Any], tp: int) -> Tuple:
+    """PartitionSpec entries for the TRAILING (pattern) dims of a leaf."""
+    heads = rules.get("heads")
+    d_ff = rules.get("d_ff")
+    vocab = rules.get("vocab")
+    experts = rules.get("experts")
+    d = cfg.d_model
+
+    def ok(dim_size, axes):
+        if axes is None:
+            return None
+        n = 1
+        for a in ((axes,) if isinstance(axes, str) else axes):
+            n *= tp if a == "model" else 1
+        return axes if dim_size % max(n, 1) == 0 else None
+
+    if re.search(r"embed/tok$", path):
+        return (ok(shape[0], vocab), None)
+    if re.search(r"embed/unembed$", path):
+        return (None, ok(shape[1], vocab))
+    if re.search(r"(attn|self|cross|xattn)/(wq|wk|wv|w_uk|w_uv)$", path) \
+            and len(shape) >= 3:
+        return (None, ok(shape[-2], heads), None)
+    if re.search(r"(attn|self|cross|xattn)/wo$", path) and len(shape) >= 3:
+        return (ok(shape[-3], heads), None, None)
+    if re.search(r"(mlp|shared)/(up|gate)$", path):
+        return (None, ok(shape[-1], d_ff))
+    if re.search(r"(mlp|shared)/down$", path):
+        return (ok(shape[-2], d_ff), None)
+    if re.search(r"experts/(up|gate|down)$", path):
+        return (ok(shape[-3], experts), None, None)
+    if re.search(r"mamba/w_zx$", path):
+        return (None, ok(shape[-1], heads))      # [z|x]: both % tp == 0
+    if re.search(r"mamba/out_proj$", path):
+        return (ok(shape[-2], heads), None)
+    if re.search(r"mamba/(conv_x_w)$", path):
+        return (None, ok(shape[-1], heads))
+    if re.search(r"mamba/conv_x_b$", path):
+        return (ok(shape[-1], heads),)
+    return tuple(None for _ in shape)
+
+
+def _leading_dims(path: str, shape: Tuple[int, ...], trailing: Tuple) -> int:
+    return len(shape) - len(trailing)
+
+
+def param_specs(params_spec_tree, cfg: ModelConfig, mesh: Mesh,
+                rules: Dict[str, Any]):
+    """Pytree of PartitionSpec matching an (abstract) params pytree."""
+    tp = _tp(mesh)
+
+    def resolve(axes):
+        # map logical names in rules to mesh axes already done in rules
+        return axes
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_spec_tree)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(_pp(p) for p in path)
+        trailing = _spec_from_trailing(pstr, leaf.shape, cfg, rules, tp)
+        trailing = trailing[-len(leaf.shape):] if trailing else ()
+        lead = len(leaf.shape) - len(trailing)
+        entries = (None,) * lead + tuple(resolve(a) for a in trailing)
+        specs.append(P(*entries))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _pp(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+# ------------------------------------------------------------ cache specs --
+def cache_specs(cache_spec_tree, cfg: ModelConfig, mesh: Mesh,
+                rules: Dict[str, Any], batch: int, cache_len: int):
+    """Shard cache leaves: the axis equal to ``batch`` gets the batch rule,
+    the axis equal to the kv length gets the kv_seq rule (sizes are unique
+    per cell, so matching by size is unambiguous in practice)."""
+    batch_axes = rules.get("batch")
+    kv_axes = rules.get("kv_seq")
+    window = cfg.sliding_window or 0
+    kv_sizes = {cache_len}
+    if window:
+        kv_sizes.add(min(window, cache_len))
+
+    def n_shards(axes):
+        n = 1
+        for a in ((axes,) if isinstance(axes, str) else (axes or ())):
+            n *= mesh.shape[a]
+        return n
+
+    def spec_for(leaf):
+        entries = []
+        used_batch = used_kv = False
+        for dim in leaf.shape:
+            if (not used_batch and batch_axes and dim == batch
+                    and dim % n_shards(batch_axes) == 0):
+                entries.append(batch_axes)
+                used_batch = True
+            elif (not used_kv and kv_axes and dim in kv_sizes
+                    and dim % n_shards(kv_axes) == 0):
+                entries.append(kv_axes)
+                used_kv = True
+            else:
+                entries.append(None)
+        return P(*entries)
+
+    return jax.tree_util.tree_map(spec_for, cache_spec_tree)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(batch_tree, rules: Dict[str, Any]):
+    """Input batches: leading dim -> batch axes, everything else replicated."""
+    b = rules.get("batch")
+
+    def spec_for(leaf):
+        return P(*((b,) + (None,) * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map(spec_for, batch_tree)

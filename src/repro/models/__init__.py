@@ -1,0 +1,6 @@
+from repro.models.registry import (build_model, cache_spec, extra_inputs,
+                                   input_specs, params_spec)
+from repro.models.transformer import Model
+
+__all__ = ["build_model", "cache_spec", "extra_inputs", "input_specs",
+           "params_spec", "Model"]

@@ -1,0 +1,152 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv/mel frontend is a STUB per the assignment: the model consumes
+precomputed frame embeddings (B, encoder_seq_len, d_model) supplied by
+``input_specs``. Positional information enters through RoPE inside both
+encoder (bidirectional) and decoder self-attention (noted in DESIGN.md —
+the released Whisper uses absolute embeddings).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.sharding import layer_scan
+from repro.models.layers import (apply_mlp, apply_norm, cdt, embed,
+                                 init_embedding, init_mlp, init_norm,
+                                 stack_params, unembed)
+from repro.models.transformer import (Model, _kv_cache_shapes,
+                                      _write_prefill_kv, shard_kv_cache)
+
+
+def build_encdec(cfg) -> Model:
+    n_enc, n_dec = cfg.n_encoder_layers, cfg.n_layers
+
+    def init(rng):
+        keys = jax.random.split(rng, 2 * (n_enc + n_dec) + 2)
+        enc = [{"ln1": init_norm(cfg),
+                "attn": attn.init_attention(keys[2 * i], cfg),
+                "ln2": init_norm(cfg),
+                "mlp": init_mlp(keys[2 * i + 1], cfg)}
+               for i in range(n_enc)]
+        off = 2 * n_enc
+        dec = [{"ln1": init_norm(cfg),
+                "self": attn.init_attention(keys[off + 2 * i], cfg),
+                "ln2": init_norm(cfg),
+                "cross": attn.init_attention(keys[off + 2 * i + 1], cfg,
+                                             cross=True),
+                "ln3": init_norm(cfg),
+                "mlp": init_mlp(keys[off + 2 * i], cfg)}
+               for i in range(n_dec)]
+        return {"embed": init_embedding(keys[-1], cfg),
+                "enc_norm": init_norm(cfg),
+                "final_norm": init_norm(cfg),
+                "encoder": stack_params(enc),
+                "decoder": stack_params(dec)}
+
+    def encode(params, frames):
+        x = frames.astype(cdt(cfg))
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+        def body(x, lp):
+            h = apply_norm(lp["ln1"], x, cfg)
+            a, _ = attn.attend_prefill(lp["attn"], h, cfg,
+                                       positions=positions, causal=False)
+            x = x + a
+            h = apply_norm(lp["ln2"], x, cfg)
+            return x + apply_mlp(lp["mlp"], h, cfg), None
+
+        x, _ = layer_scan(body, x, params["encoder"])
+        return apply_norm(params["enc_norm"], x, cfg)
+
+    def _dec_block_prefill(lp, x, cfg_, positions, kv_len, enc_out):
+        h = apply_norm(lp["ln1"], x, cfg_)
+        a, kv = attn.attend_prefill(lp["self"], h, cfg_, positions=positions,
+                                    kv_len=kv_len, return_kv=True)
+        x = x + a
+        h = apply_norm(lp["ln2"], x, cfg_)
+        mem_k, mem_v = attn.project_memory_kv(lp["cross"], enc_out, cfg_)
+        x = x + attn.attend_cached_memory(lp["cross"], h, cfg_, mem_k, mem_v)
+        h = apply_norm(lp["ln3"], x, cfg_)
+        return x + apply_mlp(lp["mlp"], h, cfg_), kv, (mem_k, mem_v)
+
+    def forward_hidden(params, batch, train: bool = False):
+        enc_out = encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        x = embed(params["embed"], tokens, cfg)
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        kv_len = batch.get("lengths")
+
+        def body(x, lp):
+            x, _, _ = _dec_block_prefill(lp, x, cfg, positions, kv_len,
+                                         enc_out)
+            return x, None
+
+        fn = jax.checkpoint(body) if (train and cfg.remat != "none") else body
+        x, _ = layer_scan(fn, x, params["decoder"])
+        return apply_norm(params["final_norm"], x, cfg), jnp.float32(0.0)
+
+    def forward(params, batch, train: bool = False):
+        x, aux = forward_hidden(params, batch, train)
+        return unembed(params["embed"], x, cfg), aux
+
+    def init_cache(batch: int, cache_len: int, dtype=None):
+        dtype = dtype or cdt(cfg)
+        kv = _kv_cache_shapes(cfg, batch, cache_len, dtype)
+        hd = cfg.resolved_head_dim
+        cross = (jnp.zeros((batch, cfg.encoder_seq_len, cfg.n_heads, hd),
+                           dtype),) * 2
+        bcast = lambda a: jnp.broadcast_to(a[None], (n_dec,) + a.shape).copy()
+        return {"self": jax.tree_util.tree_map(bcast, kv),
+                "cross": jax.tree_util.tree_map(bcast, cross)}
+
+    def prefill(params, tokens, lengths, cache, extra=None):
+        enc_out = encode(params, extra["frames"])
+        x = embed(params["embed"], tokens, cfg)
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+        def body(x, xs):
+            lp, self_ckv = xs
+            x, kv, cross_kv = _dec_block_prefill(lp, x, cfg, positions,
+                                                 lengths, enc_out)
+            return x, (_write_prefill_kv(self_ckv, kv, 0),
+                       tuple(c.astype(self_ckv[0].dtype) for c in cross_kv))
+
+        x, (self_kv, cross_kv) = layer_scan(
+            body, x, (params["decoder"], cache["self"]))
+        x = apply_norm(params["final_norm"], x, cfg)
+        last = jnp.take_along_axis(
+            x, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)[:, 0]
+        logits = unembed(params["embed"], last[:, None], cfg)[:, 0]
+        return logits, {"self": self_kv, "cross": cross_kv}
+
+    def decode_step(params, tokens, lengths, cache, extra=None):
+        x = embed(params["embed"], tokens, cfg)
+
+        def body(x, xs):
+            lp, self_ckv, cross_kv = xs
+            self_ckv = shard_kv_cache(self_ckv)
+            h = apply_norm(lp["ln1"], x, cfg)
+            a, ck, cv = attn.attend_decode(lp["self"], h, cfg,
+                                           cache_k=self_ckv[0],
+                                           cache_v=self_ckv[1],
+                                           lengths=lengths, layer_window=0)
+            x = x + a
+            h = apply_norm(lp["ln2"], x, cfg)
+            x = x + attn.attend_cached_memory(lp["cross"], h, cfg,
+                                              cross_kv[0], cross_kv[1])
+            h = apply_norm(lp["ln3"], x, cfg)
+            x = x + apply_mlp(lp["mlp"], h, cfg)
+            return x, shard_kv_cache((ck, cv))
+
+        x, self_kv = layer_scan(
+            body, x, (params["decoder"], cache["self"], cache["cross"]))
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = unembed(params["embed"], x, cfg)[:, 0]
+        return logits, {"self": self_kv, "cross": cache["cross"]}
+
+    return Model(cfg=cfg, init=init, forward_hidden=forward_hidden,
+                 forward=forward, init_cache=init_cache, prefill=prefill,
+                 decode_step=decode_step)

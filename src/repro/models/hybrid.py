@@ -1,0 +1,194 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block.
+
+Layer pattern (every = cfg.shared_attn_every):
+  [shared_attn] m m m m m m  [shared_attn] m m m m m m ... + tail mambas
+
+The shared attention+MLP block has a SINGLE weight set (a closure constant
+inside the group scan — true weight sharing); each *application* keeps its
+own KV cache (inputs differ per application), stacked (n_groups, ...).
+
+Simplification vs. the released Zamba2 (noted in DESIGN.md): the shared
+block consumes the current hidden state rather than concat(hidden,
+embedding), and per-application LoRA deltas are omitted.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm
+from repro.models.sharding import layer_scan
+from repro.models.layers import (apply_norm, cdt, embed, init_embedding,
+                                 init_norm, stack_params, unembed)
+from repro.models.transformer import (Model, _kv_cache_shapes,
+                                      _write_prefill_kv, dense_block_decode,
+                                      dense_block_prefill, init_dense_block,
+                                      shard_kv_cache)
+
+
+def _counts(cfg):
+    every = cfg.shared_attn_every
+    n_groups = cfg.n_layers // every
+    tail = cfg.n_layers - n_groups * every
+    return every, n_groups, tail
+
+
+def build_hybrid(cfg) -> Model:
+    every, n_groups, tail = _counts(cfg)
+
+    def init(rng):
+        keys = jax.random.split(rng, cfg.n_layers + 3)
+        mamba = [{"ln": init_norm(cfg), "mamba": ssm.init_mamba2(keys[i], cfg)}
+                 for i in range(cfg.n_layers)]
+        grouped = stack_params([
+            stack_params(mamba[g * every:(g + 1) * every])
+            for g in range(n_groups)])                      # (G, every, ...)
+        p = {"embed": init_embedding(keys[-1], cfg),
+             "final_norm": init_norm(cfg),
+             "shared_block": init_dense_block(keys[-2], cfg, use_moe=False),
+             "groups": grouped}
+        if tail:
+            p["tail"] = stack_params(mamba[n_groups * every:])
+        return p
+
+    def _mamba_layer_prefill(x, lp, want_state, valid=None):
+        h = apply_norm(lp["ln"], x, cfg)
+        y, st = ssm.mamba2_prefill(lp["mamba"], h, cfg,
+                                   return_state=want_state, valid=valid)
+        return x + y, st
+
+    def _mamba_layer_decode(x, lp, st):
+        h = apply_norm(lp["ln"], x, cfg)
+        y, st = ssm.mamba2_decode(lp["mamba"], h, cfg, st)
+        return x + y, st
+
+    def forward_hidden(params, batch, train: bool = False):
+        tokens = batch["tokens"]
+        S = tokens.shape[1]
+        x = embed(params["embed"], tokens, cfg)
+        positions = jnp.arange(S, dtype=jnp.int32)
+        kv_len = batch.get("lengths")
+        valid = (None if kv_len is None
+                 else positions[None, :] < kv_len[:, None])
+        shared = params["shared_block"]
+
+        def group_body(x, group_params):
+            x, _, _ = dense_block_prefill(shared, x, cfg, positions=positions,
+                                          kv_len=kv_len, window=0)
+
+            def inner(x, lp):
+                x, _ = _mamba_layer_prefill(x, lp, False, valid)
+                return x, None
+
+            x, _ = layer_scan(inner, x, group_params)
+            return x, None
+
+        body = group_body
+        if train and cfg.remat in ("block", "full"):
+            body = jax.checkpoint(group_body)
+        x, _ = layer_scan(body, x, params["groups"])
+        if "tail" in params:
+            def inner(x, lp):
+                x, _ = _mamba_layer_prefill(x, lp, False, valid)
+                return x, None
+            x, _ = layer_scan(inner, x, params["tail"])
+        x = apply_norm(params["final_norm"], x, cfg)
+        return x, jnp.float32(0.0)
+
+    def forward(params, batch, train: bool = False):
+        x, aux = forward_hidden(params, batch, train)
+        return unembed(params["embed"], x, cfg), aux
+
+    def init_cache(batch: int, cache_len: int, dtype=None):
+        dtype = dtype or cdt(cfg)
+        kv = _kv_cache_shapes(cfg, batch, cache_len, dtype)
+        attn_kv = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape).copy(),
+            kv)
+        m1 = ssm.mamba2_init_cache(cfg, batch, dtype)
+        grouped = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(
+                a[None, None], (n_groups, every) + a.shape).copy(), m1)
+        cache = {"attn": attn_kv, "groups": grouped}
+        if tail:
+            cache["tail"] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (tail,) + a.shape).copy(),
+                m1)
+        return cache
+
+    def prefill(params, tokens, lengths, cache, extra=None):
+        S = tokens.shape[1]
+        x = embed(params["embed"], tokens, cfg)
+        positions = jnp.arange(S, dtype=jnp.int32)
+        valid = positions[None, :] < lengths[:, None]
+        shared = params["shared_block"]
+
+        def group_body(x, xs):
+            group_params, attn_ckv = xs
+            x, _, kv = dense_block_prefill(shared, x, cfg,
+                                           positions=positions,
+                                           kv_len=lengths, window=0)
+
+            def inner(x, lp):
+                x, st = _mamba_layer_prefill(x, lp, True, valid)
+                return x, st
+
+            x, states = layer_scan(inner, x, group_params)
+            return x, (_write_prefill_kv(attn_ckv, kv, 0), states)
+
+        x, (attn_kv, grouped) = layer_scan(
+            group_body, x, (params["groups"], cache["attn"]))
+        new_cache = {"attn": attn_kv, "groups": grouped}
+        if tail:
+            def inner(x, lp):
+                x, st = _mamba_layer_prefill(x, lp, True, valid)
+                return x, st
+            x, tail_states = layer_scan(inner, x, params["tail"])
+            new_cache["tail"] = tail_states
+        x = apply_norm(params["final_norm"], x, cfg)
+        last = jnp.take_along_axis(
+            x, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)[:, 0]
+        logits = unembed(params["embed"], last[:, None], cfg)[:, 0]
+        return logits, new_cache
+
+    def decode_step(params, tokens, lengths, cache, extra=None):
+        x = embed(params["embed"], tokens, cfg)
+        shared = params["shared_block"]
+
+        def group_body(x, xs):
+            group_params, attn_ckv, states = xs
+            attn_ckv = shard_kv_cache(attn_ckv)
+            x, new_kv = dense_block_decode(shared, x, cfg, lengths=lengths,
+                                           window=0, cache_kv=attn_ckv)
+
+            def inner(x, lp_st):
+                lp, st = lp_st
+                return _mamba_layer_decode(x, lp, st)
+
+            def inner_wrap(x, xs_):
+                x, st = inner(x, xs_)
+                return x, st
+
+            x, new_states = layer_scan(inner_wrap, x,
+                                         (group_params, states))
+            return x, (shard_kv_cache(new_kv), new_states)
+
+        x, (attn_kv, grouped) = layer_scan(
+            group_body, x, (params["groups"], cache["attn"],
+                            cache["groups"]))
+        new_cache = {"attn": attn_kv, "groups": grouped}
+        if tail:
+            def inner(x, xs_):
+                lp, st = xs_
+                return _mamba_layer_decode(x, lp, st)
+            x, tail_states = layer_scan(inner, x,
+                                          (params["tail"], cache["tail"]))
+            new_cache["tail"] = tail_states
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = unembed(params["embed"], x, cfg)[:, 0]
+        return logits, new_cache
+
+    return Model(cfg=cfg, init=init, forward_hidden=forward_hidden,
+                 forward=forward, init_cache=init_cache, prefill=prefill,
+                 decode_step=decode_step)

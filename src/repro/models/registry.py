@@ -1,0 +1,79 @@
+"""Model registry: family -> builder dispatch, plus input_specs() stand-ins
+for the dry-run (ShapeDtypeStruct only — never allocates)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSuite
+from repro.models.transformer import Model, build_decoder
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe"):
+        return build_decoder(cfg)
+    if cfg.family == "audio":
+        from repro.models.encdec import build_encdec
+        return build_encdec(cfg)
+    if cfg.family == "ssm":
+        from repro.models.xlstm import build_xlstm
+        return build_xlstm(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import build_hybrid
+        return build_hybrid(cfg)
+    if cfg.family == "vlm":
+        from repro.models.vision import build_vlm
+        return build_vlm(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def extra_inputs(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> Dict:
+    """Modality-frontend STUB inputs (precomputed embeddings)."""
+    if cfg.family == "audio":
+        return {"frames": jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq_len, cfg.d_model), dtype)}
+    if cfg.family == "vlm":
+        return {"patches": jax.ShapeDtypeStruct(
+            (batch, cfg.vision_tokens, cfg.vision_dim), dtype)}
+    return {}
+
+
+def input_specs(cfg: ModelConfig, suite: ShapeSuite) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of a shape suite.
+
+    train:   {tokens, labels (+frontend)}       -> train_step
+    prefill: {tokens, lengths (+frontend)}      -> prefill
+    decode:  {tokens (B,1), lengths}            -> serve_step (cache built
+                                                   separately via eval_shape)
+    """
+    B, S = suite.global_batch, suite.seq_len
+    tok = jnp.int32
+    if suite.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), tok),
+                 "labels": jax.ShapeDtypeStruct((B, S), tok)}
+        specs.update(extra_inputs(cfg, B))
+        return specs
+    if suite.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), tok),
+                 "lengths": jax.ShapeDtypeStruct((B,), tok)}
+        specs.update(extra_inputs(cfg, B))
+        return specs
+    if suite.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), tok),
+                "lengths": jax.ShapeDtypeStruct((B,), tok)}
+    raise ValueError(suite.kind)
+
+
+def params_spec(model: Model, rng=None):
+    """Abstract parameter shapes (no allocation)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(model.init, rng)
+
+
+def cache_spec(model: Model, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, cache_len, dtype))

@@ -1,0 +1,119 @@
+"""Logical-axis sharding for model code.
+
+Model code annotates activations/params with *logical* axis names
+(``batch``, ``seq``, ``heads``, ``kv_heads``, ``d_model``, ``d_ff``,
+``vocab``, ``experts``, ``state``). The launcher maps logical names to mesh
+axes (e.g. ``batch -> ("pod", "data")``, ``heads -> "model"``) via
+``set_rules``; with no rules installed every annotation is a no-op, so the
+same model code runs on 1 CPU device and on a 512-chip mesh unchanged.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+_state = threading.local()
+
+
+def _get() -> Tuple[Optional[Mesh], Dict[str, MeshAxes]]:
+    return getattr(_state, "mesh", None), getattr(_state, "rules", {})
+
+
+def set_rules(mesh: Optional[Mesh], rules: Optional[Dict[str, MeshAxes]]) -> None:
+    _state.mesh = mesh
+    _state.rules = dict(rules or {})
+
+
+@contextmanager
+def sharding_rules(mesh: Optional[Mesh], rules: Optional[Dict[str, MeshAxes]]):
+    prev = _get()
+    set_rules(mesh, rules)
+    try:
+        yield
+    finally:
+        set_rules(*prev)
+
+
+def logical_to_spec(logical_axes: Sequence[Optional[str]]) -> P:
+    """Translate logical axis names to a PartitionSpec under current rules."""
+    _, rules = _get()
+    parts = []
+    used: set = set()
+    for name in logical_axes:
+        axes = rules.get(name) if name else None
+        if axes is None:
+            parts.append(None)
+            continue
+        flat = (axes,) if isinstance(axes, str) else tuple(axes)
+        flat = tuple(a for a in flat if a not in used)
+        used.update(flat)
+        if not flat:
+            parts.append(None)
+        elif len(flat) == 1:
+            parts.append(flat[0])
+        else:
+            parts.append(flat)
+    return P(*parts)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op without rules)."""
+    mesh, rules = _get()
+    if mesh is None or not rules:
+        return x
+    if x.ndim != len(logical_axes):
+        raise ValueError(
+            f"shard(): rank {x.ndim} array got {len(logical_axes)} axis names")
+    spec = logical_to_spec(logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _get()[0]
+
+
+def current_rules() -> Dict[str, MeshAxes]:
+    return dict(_get()[1])
+
+
+def set_layer_unroll(on: bool) -> None:
+    """Dry-run analysis mode: fully unroll layer scans so HLO cost analysis
+    sees every layer (XLA's HloCostAnalysis counts while bodies once)."""
+    _state.unroll = on
+
+
+def layer_unroll() -> bool:
+    return getattr(_state, "unroll", False)
+
+
+def layer_scan(body, init, xs, length=None):
+    """lax.scan for LAYER loops (depth), honoring the dry-run unroll switch.
+
+    Time/chunk scans should keep using jax.lax.scan directly — their trip
+    counts are algorithmic and are accounted analytically (see
+    launch/roofline.py)."""
+    if layer_unroll():
+        if length is None:
+            length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+        return jax.lax.scan(body, init, xs, unroll=length)
+    return jax.lax.scan(body, init, xs)
+
+
+def axis_size(logical: str) -> int:
+    """Size of the mesh extent a logical axis maps to (1 if unmapped)."""
+    mesh, rules = _get()
+    axes = rules.get(logical)
+    if mesh is None or axes is None:
+        return 1
+    flat = (axes,) if isinstance(axes, str) else tuple(axes)
+    size = 1
+    for a in flat:
+        size *= mesh.shape[a]
+    return size

@@ -1,0 +1,431 @@
+"""Recurrent blocks: Mamba2 (SSD), mLSTM and sLSTM (xLSTM).
+
+One chunked linear-attention core serves both Mamba2 and mLSTM — both are
+gated outer-product recurrences  state_t = a_t * state_{t-1} + k_t v_t^T
+with per-(step, head) scalar decay ``a_t``:
+
+  * Mamba2: a = exp(-exp(A_log) * dt), k = B (group-broadcast), q = C,
+    v = dt * x  (ZOH discretization), plus the D skip and gated RMSNorm.
+  * mLSTM:  a = sigmoid(f_pre), k scaled by input gate i, q = q / sqrt(d),
+    denominator tracked by augmenting v with a constant-1 channel.
+
+Chunked form (chunk L): intra-chunk attention is an (L x L) masked einsum
+(MXU-friendly), inter-chunk state is a short lax.scan over S/L steps —
+O(S * L) work instead of O(S^2), and the production target of the
+``repro.kernels.ssm_scan`` Pallas kernel.
+
+sLSTM has a true hidden-to-gate recurrence, so prefill is a sequential
+lax.scan over time (decode is a single step either way).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import cdt, init_norm, normal_init, pdt
+from repro.models.sharding import shard
+
+
+# ---------------------------------------------------------------- core -----
+def chunked_linear_attention(q, k, v, log_a, chunk: int,
+                             initial_state: Optional[jax.Array] = None):
+    """q,k (B,S,H,Dk); v (B,S,H,Dv); log_a (B,S,H) per-step log-decay.
+
+    Returns (y (B,S,H,Dv), final_state (B,H,Dk,Dv)).
+    """
+    B, S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, f"seq {S} not divisible by chunk {L}"
+    nc = S // L
+
+    qc = q.reshape(B, nc, L, H, Dk)
+    kc = k.reshape(B, nc, L, H, Dk)
+    vc = v.reshape(B, nc, L, H, Dv)
+    la = log_a.reshape(B, nc, L, H).astype(jnp.float32)
+    lcum = jnp.cumsum(la, axis=2)                       # inclusive within chunk
+    total = lcum[:, :, -1]                              # (B,nc,H)
+
+    # ---- intra-chunk: masked decay attention -------------------------------
+    # score[s,t] = (q_s . k_t) * exp(lcum_s - lcum_t) for t <= s (strictly the
+    # decay from step t+1..s; k_t enters the state *after* its own decay).
+    rel = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]   # (B,nc,S,T,H)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    scores = jnp.einsum("bnshk,bnthk->bnsth", qc.astype(jnp.float32),
+                        kc.astype(jnp.float32))
+    y_intra = jnp.einsum("bnsth,bnthv->bnshv", scores * decay,
+                         vc.astype(jnp.float32))
+
+    # ---- chunk summaries + inter-chunk recurrence ---------------------------
+    w_in = jnp.exp(total[:, :, None, :] - lcum)             # decay t+1..end
+    s_chunk = jnp.einsum("bnthk,bnth,bnthv->bnhkv", kc.astype(jnp.float32),
+                         w_in, vc.astype(jnp.float32))      # (B,nc,H,Dk,Dv)
+
+    state0 = (jnp.zeros((B, H, Dk, Dv), jnp.float32) if initial_state is None
+              else initial_state.astype(jnp.float32))
+
+    def step(state, inp):
+        tot_n, s_n = inp                                    # (B,H), (B,H,Dk,Dv)
+        new = state * jnp.exp(tot_n)[:, :, None, None] + s_n
+        return new, state                                   # emit state BEFORE chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step, state0, (total.swapaxes(0, 1), s_chunk.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                # (B,nc,H,Dk,Dv)
+
+    y_inter = jnp.einsum("bnshk,bnsh,bnhkv->bnshv", qc.astype(jnp.float32),
+                         jnp.exp(lcum), prev_states)
+    y = (y_intra + y_inter).reshape(B, S, H, Dv)
+    return y.astype(q.dtype), final_state
+
+
+def linear_attention_step(state, q, k, v, a):
+    """One decode step. state (B,H,Dk,Dv); q,k (B,H,Dk); v (B,H,Dv); a (B,H)."""
+    state = state * a[:, :, None, None].astype(state.dtype) + \
+        jnp.einsum("bhk,bhv->bhkv", k.astype(state.dtype),
+                   v.astype(state.dtype))
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(state.dtype), state)
+    return y, state
+
+
+# ================================================================= Mamba2 ==
+def mamba2_dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.state_dim
+    return d_in, n_heads, conv_ch
+
+
+def init_mamba2(key, cfg) -> dict:
+    """Projections are SPLIT by role (not the reference's packed in_proj):
+    [z|x] shards cleanly on the inner-channel (head) axis for TP, while the
+    small B/C/dt projection and conv stay replicated — see launch/sharding."""
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, n_heads, conv_ch = mamba2_dims(cfg)
+    bc = 2 * s.n_groups * s.state_dim
+    keys = jax.random.split(key, 5)
+    return {
+        "w_zx": normal_init(keys[0], (d, 2 * d_in), d, pdt(cfg)),
+        "w_bcdt": normal_init(keys[1], (d, bc + n_heads), d, pdt(cfg)),
+        "conv_x_w": normal_init(keys[2], (s.conv_dim, d_in), s.conv_dim,
+                                pdt(cfg)),
+        "conv_x_b": jnp.zeros((d_in,), pdt(cfg)),
+        "conv_bc_w": normal_init(keys[3], (s.conv_dim, bc), s.conv_dim,
+                                 pdt(cfg)),
+        "conv_bc_b": jnp.zeros((bc,), pdt(cfg)),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),   # A = -exp(A_log) = -1
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": init_norm(cfg, d_in),
+        "out_proj": normal_init(keys[4], (d_in, d), d_in, pdt(cfg)),
+    }
+
+
+def _mamba2_split(p, u, cfg):
+    s = cfg.ssm
+    d_in, n_heads, conv_ch = mamba2_dims(cfg)
+    bc = 2 * s.n_groups * s.state_dim
+    zx = jnp.einsum("bsd,dp->bsp", u.astype(cdt(cfg)),
+                    p["w_zx"].astype(cdt(cfg)))
+    bcdt = jnp.einsum("bsd,dp->bsp", u.astype(cdt(cfg)),
+                      p["w_bcdt"].astype(cdt(cfg)))
+    z, xin = zx[..., :d_in], zx[..., d_in:]
+    bc_flat, dt = bcdt[..., :bc], bcdt[..., bc:]
+    return z, xin, bc_flat, dt
+
+
+def _ragged_conv_state(x_raw, K, valid):
+    """Conv state = last K-1 *valid* inputs of each ragged row."""
+    lengths = jnp.sum(valid.astype(jnp.int32), axis=1)              # (B,)
+    ext = jnp.concatenate(
+        [jnp.zeros((x_raw.shape[0], K - 1, x_raw.shape[2]), x_raw.dtype),
+         x_raw], axis=1)
+    idx = lengths[:, None] + jnp.arange(K - 1)[None, :]             # (B,K-1)
+    return jnp.take_along_axis(ext, idx[:, :, None], axis=1)
+
+
+def _mamba2_core_inputs(p, xBC, dt, cfg, valid=None):
+    """Post-conv split into SSD core operands.
+
+    ``valid`` (B,S) bool: padding steps become exact state no-ops
+    (dt -> 0 => decay 1 and zero input)."""
+    s = cfg.ssm
+    d_in, n_heads, _ = mamba2_dims(cfg)
+    B_sz, S = xBC.shape[0], xBC.shape[1]
+    x = xBC[..., :d_in].reshape(B_sz, S, n_heads, s.head_dim)
+    Bm = xBC[..., d_in:d_in + s.n_groups * s.state_dim].reshape(
+        B_sz, S, s.n_groups, s.state_dim)
+    Cm = xBC[..., d_in + s.n_groups * s.state_dim:].reshape(
+        B_sz, S, s.n_groups, s.state_dim)
+    rep = n_heads // s.n_groups
+    Bm = jnp.repeat(Bm, rep, axis=2)                        # (B,S,H,N)
+    Cm = jnp.repeat(Cm, rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"][None, None, :])       # (B,S,H)
+    if valid is not None:
+        dt = dt * valid[:, :, None].astype(dt.dtype)
+    log_a = -jnp.exp(p["A_log"])[None, None, :] * dt        # (B,S,H)
+    v = x.astype(jnp.float32) * dt[..., None]               # ZOH input scaling
+    return x, Bm, Cm, v, dt, log_a
+
+
+def _causal_conv(xBC, w, b, state=None):
+    """Depthwise causal conv. xBC (B,S,C); w (K,C); state (B,K-1,C) or None.
+
+    Returns (y (B,S,C), new_state (B,K-1,C))."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    ext = jnp.concatenate([state, xBC], axis=1)
+    y = sum(ext[:, i:i + xBC.shape[1]] * w[i][None, None, :]
+            for i in range(K))
+    y = jax.nn.silu(y + b[None, None, :])
+    new_state = ext[:, -(K - 1):] if K > 1 else state
+    return y, new_state
+
+
+def mamba2_prefill(p, u, cfg, return_state: bool = False, valid=None):
+    """u (B,S,d) -> (out (B,S,d), cache dict or None)."""
+    s = cfg.ssm
+    d_in, n_heads, _ = mamba2_dims(cfg)
+    K = p["conv_x_w"].shape[0]
+    z, x_raw, bc_raw, dt = _mamba2_split(p, u, cfg)
+    x_c, conv_x_state = _causal_conv(x_raw, p["conv_x_w"].astype(x_raw.dtype),
+                                     p["conv_x_b"].astype(x_raw.dtype))
+    bc_c, conv_bc_state = _causal_conv(bc_raw,
+                                       p["conv_bc_w"].astype(bc_raw.dtype),
+                                       p["conv_bc_b"].astype(bc_raw.dtype))
+    if valid is not None:
+        conv_x_state = _ragged_conv_state(x_raw, K, valid)
+        conv_bc_state = _ragged_conv_state(bc_raw, K, valid)
+    xBC = jnp.concatenate([x_c, bc_c], axis=-1)
+    x, Bm, Cm, v, dt_sp, log_a = _mamba2_core_inputs(p, xBC, dt, cfg,
+                                                     valid=valid)
+    x_sh = shard(x, "batch", "seq", "heads", None)
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        y, state = kops.ssm_scan(Cm, Bm, v, log_a, chunk=s.chunk)
+    else:
+        y, state = chunked_linear_attention(Cm, Bm, v, log_a, s.chunk)
+    y = y + x_sh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(u.shape[0], u.shape[1], d_in)
+    y = _gated_norm(p["norm"], y, z, cfg)
+    out = jnp.einsum("bsp,pd->bsd", y.astype(cdt(cfg)),
+                     p["out_proj"].astype(cdt(cfg)))
+    out = shard(out, "batch", "seq", None)
+    cache = ({"ssm": state, "conv_x": conv_x_state,
+              "conv_bc": conv_bc_state} if return_state else None)
+    return out, cache
+
+
+def mamba2_decode(p, u, cfg, cache: dict):
+    """u (B,1,d); cache {'ssm', 'conv_x', 'conv_bc'}."""
+    s = cfg.ssm
+    d_in, n_heads, _ = mamba2_dims(cfg)
+    z, x_raw, bc_raw, dt = _mamba2_split(p, u, cfg)
+    x_c, conv_x_state = _causal_conv(x_raw, p["conv_x_w"].astype(x_raw.dtype),
+                                     p["conv_x_b"].astype(x_raw.dtype),
+                                     state=cache["conv_x"])
+    bc_c, conv_bc_state = _causal_conv(bc_raw,
+                                       p["conv_bc_w"].astype(bc_raw.dtype),
+                                       p["conv_bc_b"].astype(bc_raw.dtype),
+                                       state=cache["conv_bc"])
+    xBC = jnp.concatenate([x_c, bc_c], axis=-1)
+    x, Bm, Cm, v, dt_sp, log_a = _mamba2_core_inputs(p, xBC, dt, cfg)
+    a = jnp.exp(log_a[:, 0])                                # (B,H)
+    y, state = linear_attention_step(cache["ssm"], Cm[:, 0], Bm[:, 0],
+                                     v[:, 0], a)
+    y = y + x[:, 0].astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(u.shape[0], 1, d_in)
+    y = _gated_norm(p["norm"], y, z, cfg)
+    out = jnp.einsum("bsp,pd->bsd", y.astype(cdt(cfg)),
+                     p["out_proj"].astype(cdt(cfg)))
+    return out, {"ssm": state, "conv_x": conv_x_state,
+                 "conv_bc": conv_bc_state}
+
+
+def mamba2_init_cache(cfg, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d_in, n_heads, conv_ch = mamba2_dims(cfg)
+    bc = 2 * s.n_groups * s.state_dim
+    return {
+        "ssm": jnp.zeros((batch, n_heads, s.state_dim, s.head_dim),
+                         jnp.float32),
+        "conv_x": jnp.zeros((batch, s.conv_dim - 1, d_in), dtype),
+        "conv_bc": jnp.zeros((batch, s.conv_dim - 1, bc), dtype),
+    }
+
+
+def _gated_norm(norm_p, y, z, cfg):
+    """Mamba2 gated RMSNorm: norm(y * silu(z))."""
+    from repro.models.layers import apply_norm
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    return apply_norm(norm_p, g.astype(y.dtype), cfg)
+
+
+# ================================================================== mLSTM ==
+def mlstm_dims(cfg):
+    d_in = int(cfg.d_model * cfg.ssm.mlstm_proj_factor)
+    head_dim = d_in // cfg.n_heads
+    return d_in, head_dim
+
+
+def init_mlstm(key, cfg) -> dict:
+    d = cfg.d_model
+    d_in, hd = mlstm_dims(cfg)
+    keys = jax.random.split(key, 7)
+    return {
+        "up": normal_init(keys[0], (d, 2 * d_in), d, pdt(cfg)),   # [x | z]
+        "wq": normal_init(keys[1], (d_in, d_in), d_in, pdt(cfg)),
+        "wk": normal_init(keys[2], (d_in, d_in), d_in, pdt(cfg)),
+        "wv": normal_init(keys[3], (d_in, d_in), d_in, pdt(cfg)),
+        "w_gates": normal_init(keys[4], (d_in, 2 * cfg.n_heads), d_in,
+                               pdt(cfg)),                         # [i | f]
+        "gate_bias": jnp.concatenate([jnp.zeros((cfg.n_heads,)),
+                                      3.0 * jnp.ones((cfg.n_heads,))]
+                                     ).astype(jnp.float32),
+        "norm": init_norm(cfg, d_in),
+        "down": normal_init(keys[5], (d_in, d), d_in, pdt(cfg)),
+    }
+
+
+def _mlstm_qkvg(p, u, cfg):
+    c = cdt(cfg)
+    d_in, hd = mlstm_dims(cfg)
+    B, S = u.shape[0], u.shape[1]
+    xz = jnp.einsum("bsd,dp->bsp", u.astype(c), p["up"].astype(c))
+    xin, z = xz[..., :d_in], xz[..., d_in:]
+    q = jnp.einsum("bsp,pq->bsq", xin, p["wq"].astype(c))
+    k = jnp.einsum("bsp,pq->bsq", xin, p["wk"].astype(c))
+    v = jnp.einsum("bsp,pq->bsq", xin, p["wv"].astype(c))
+    H = cfg.n_heads
+    q = q.reshape(B, S, H, hd) / math.sqrt(hd)
+    k = k.reshape(B, S, H, hd)
+    v = v.reshape(B, S, H, hd)
+    gates = jnp.einsum("bsp,pg->bsg", xin, p["w_gates"].astype(c)
+                       ).astype(jnp.float32) + p["gate_bias"][None, None, :]
+    i_gate = jax.nn.sigmoid(gates[..., :H])       # bounded input gate (simplified)
+    f_gate = jax.nn.sigmoid(gates[..., H:])
+    return q, k * i_gate[..., None].astype(k.dtype), v, f_gate, z
+
+
+def _mlstm_finish(p, num, den, z, u_shape, cfg):
+    d_in, hd = mlstm_dims(cfg)
+    h = num / jnp.maximum(jnp.abs(den), 1.0)
+    h = h.reshape(u_shape[0], u_shape[1], d_in)
+    h = _gated_norm(p["norm"], h, z, cfg)
+    return jnp.einsum("bsp,pd->bsd", h.astype(cdt(cfg)),
+                      p["down"].astype(cdt(cfg)))
+
+
+def mlstm_prefill(p, u, cfg, return_state: bool = False, valid=None):
+    q, k, v, f, z = _mlstm_qkvg(p, u, cfg)
+    if valid is not None:
+        vm = valid[:, :, None, None].astype(k.dtype)
+        k = k * vm                            # zero input gate at pads
+        f = jnp.where(valid[:, :, None], f, 1.0)   # no decay at pads
+    # denominator: augment v with a ones channel
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    log_a = jnp.log(f + 1e-9)
+    y, state = chunked_linear_attention(q, k, v_aug, log_a, cfg.ssm.chunk)
+    num, den = y[..., :-1], y[..., -1:]
+    out = _mlstm_finish(p, num.astype(jnp.float32), den.astype(jnp.float32),
+                        z, u.shape, cfg)
+    return out, ({"state": state} if return_state else None)
+
+
+def mlstm_decode(p, u, cfg, cache: dict):
+    q, k, v, f, z = _mlstm_qkvg(p, u, cfg)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    y, state = linear_attention_step(cache["state"], q[:, 0], k[:, 0],
+                                     v_aug[:, 0], f[:, 0])
+    y = y[:, None]                                          # (B,1,H,Dv+1)
+    out = _mlstm_finish(p, y[..., :-1].astype(jnp.float32),
+                        y[..., -1:].astype(jnp.float32), z, u.shape, cfg)
+    return out, {"state": state}
+
+
+def mlstm_init_cache(cfg, batch: int) -> dict:
+    d_in, hd = mlstm_dims(cfg)
+    return {"state": jnp.zeros((batch, cfg.n_heads, hd, hd + 1), jnp.float32)}
+
+
+# ================================================================== sLSTM ==
+def init_slstm(key, cfg) -> dict:
+    d = cfg.d_model
+    d_ff = int(d * cfg.ssm.slstm_proj_factor)
+    keys = jax.random.split(key, 4)
+    return {
+        "w_in": normal_init(keys[0], (d, 4 * d), d, pdt(cfg)),    # i,f,z,o
+        "w_rec": normal_init(keys[1], (d, 4 * d), d, pdt(cfg)),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "ffn_up": normal_init(keys[2], (d, d_ff), d, pdt(cfg)),
+        "ffn_down": normal_init(keys[3], (d_ff, d), d_ff, pdt(cfg)),
+        "norm": init_norm(cfg, d),
+    }
+
+
+def _slstm_step(p, x_t, h, c_state, n_state, cfg):
+    """One sLSTM step. x_t (B,d); states (B,d)."""
+    c = cdt(cfg)
+    d = x_t.shape[-1]
+    pre = (jnp.einsum("bd,dg->bg", x_t.astype(c), p["w_in"].astype(c)) +
+           jnp.einsum("bd,dg->bg", h.astype(c), p["w_rec"].astype(c))
+           ).astype(jnp.float32) + p["bias"][None, :]
+    i = jax.nn.sigmoid(pre[:, :d])
+    f = jax.nn.sigmoid(pre[:, d:2 * d])
+    zt = jnp.tanh(pre[:, 2 * d:3 * d])
+    o = jax.nn.sigmoid(pre[:, 3 * d:])
+    c_state = f * c_state + i * zt
+    n_state = f * n_state + i
+    h_new = o * (c_state / jnp.maximum(n_state, 1.0))
+    return h_new.astype(x_t.dtype), c_state, n_state
+
+
+def slstm_forward(p, u, cfg, cache: Optional[dict] = None,
+                  return_state: bool = False, valid=None):
+    """Sequential scan over time. u (B,S,d). ``valid`` (B,S) freezes state
+    at padding steps."""
+    B, S, d = u.shape
+    if cache is None:
+        h0 = jnp.zeros((B, d), u.dtype)
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.zeros((B, d), jnp.float32)
+    else:
+        h0, c0, n0 = cache["h"], cache["c"], cache["n"]
+
+    def step(carry, xs):
+        h, c_s, n_s = carry
+        x_t, v_t = xs
+        h_new, c_new, n_new = _slstm_step(p, x_t, h, c_s, n_s, cfg)
+        keep = v_t[:, None]
+        h_new = jnp.where(keep, h_new, h)
+        c_new = jnp.where(keep, c_new, c_s)
+        n_new = jnp.where(keep, n_new, n_s)
+        return (h_new, c_new, n_new), h_new
+
+    v_seq = (jnp.ones((B, S), bool) if valid is None else valid)
+    (h, c_s, n_s), hs = jax.lax.scan(
+        step, (h0, c0, n0), (u.swapaxes(0, 1), v_seq.swapaxes(0, 1)))
+    y = hs.swapaxes(0, 1)                                   # (B,S,d)
+    c_dt = cdt(cfg)
+    ff = jnp.einsum("bsd,df->bsf", y.astype(c_dt), p["ffn_up"].astype(c_dt))
+    ff = jax.nn.gelu(ff)
+    y = y + jnp.einsum("bsf,fd->bsd", ff, p["ffn_down"].astype(c_dt))
+    new_cache = {"h": h, "c": c_s, "n": n_s} if (return_state or cache
+                                                 is not None) else None
+    return y, new_cache
+
+
+def slstm_init_cache(cfg, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    return {"h": jnp.zeros((batch, d), dtype),
+            "c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32)}

@@ -1,0 +1,277 @@
+"""Decoder-only transformer assembly (dense + MoE families).
+
+Layers are *stacked* (leading layer axis on every param leaf) and driven by
+``lax.scan`` so HLO size and compile memory are O(1) in depth — required for
+the 94-layer MoE dry-run on a 512-device mesh and the production-correct
+choice generally.
+
+The public surface is a ``Model`` record of pure functions:
+
+  init(rng) -> params
+  forward_hidden(params, batch) -> (hidden (B,S,d), aux)     # pre-unembed
+  forward(params, batch) -> (logits (B,S,V), aux)            # tests / small
+  init_cache(batch, cache_len, dtype) -> cache
+  prefill(params, tokens, lengths, cache) -> (last_logits (B,V), cache)
+  decode_step(params, tokens (B,1), lengths, cache) -> (logits (B,V), cache)
+
+KV caches are stacked over layers and threaded through the layer scan as
+``xs``/``ys`` (scan stacking re-assembles the updated cache), so decode is a
+single fused XLA while-loop over layers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models.layers import (apply_mlp, apply_norm, cdt, embed,
+                                 init_embedding, init_mlp, init_norm,
+                                 layer_slice, pdt, stack_params, unembed)
+from repro.models.sharding import layer_scan, shard
+
+
+@dataclass
+class Model:
+    cfg: Any
+    init: Callable
+    forward_hidden: Callable
+    forward: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+# ---------------------------------------------------------- block pieces ---
+def init_dense_block(key, cfg, use_moe: bool, d_ff_override: int = 0) -> dict:
+    k1, k2 = jax.random.split(key)
+    is_mla = cfg.attention == "mla"
+    p = {
+        "ln1": init_norm(cfg),
+        "attn": attn.init_mla(k1, cfg) if is_mla else attn.init_attention(
+            k1, cfg),
+        "ln2": init_norm(cfg),
+    }
+    if use_moe:
+        p["moe"] = moe_lib.init_moe(k2, cfg)
+    else:
+        p["mlp"] = init_mlp(k2, cfg, d_ff=d_ff_override or cfg.d_ff)
+    return p
+
+
+def dense_block_prefill(p, x, cfg, *, positions, kv_len, window,
+                        capacity_factor=None):
+    """Returns (x, aux, kv) — kv is the narrow (k, v) pair or MLA latents."""
+    h = apply_norm(p["ln1"], x, cfg)
+    if cfg.attention == "mla":
+        a, kv = attn.mla_prefill(p["attn"], h, cfg, positions=positions,
+                                 kv_len=kv_len, return_kv=True)
+    else:
+        a, kv = attn.attend_prefill(p["attn"], h, cfg, positions=positions,
+                                    layer_window=window, kv_len=kv_len,
+                                    return_kv=True)
+    x = x + a
+    h = apply_norm(p["ln2"], x, cfg)
+    if "moe" in p:
+        m, aux = moe_lib.apply_moe(p["moe"], h, cfg,
+                                   capacity_factor=capacity_factor)
+    else:
+        m, aux = apply_mlp(p["mlp"], h, cfg), jnp.float32(0.0)
+    return x + m, aux, kv
+
+
+def dense_block_decode(p, x, cfg, *, lengths, window, cache_kv):
+    h = apply_norm(p["ln1"], x, cfg)
+    if cfg.attention == "mla":
+        a, ck, kr = attn.mla_decode(p["attn"], h, cfg, cache_ckv=cache_kv[0],
+                                    cache_krope=cache_kv[1], lengths=lengths)
+        new_kv = (ck, kr)
+    else:
+        a, ck, cv = attn.attend_decode(p["attn"], h, cfg, cache_k=cache_kv[0],
+                                       cache_v=cache_kv[1], lengths=lengths,
+                                       layer_window=window)
+        new_kv = (ck, cv)
+    x = x + a
+    h = apply_norm(p["ln2"], x, cfg)
+    if "moe" in p:
+        m, _ = moe_lib.apply_moe(p["moe"], h, cfg, capacity_factor=2.0)
+    else:
+        m = apply_mlp(p["mlp"], h, cfg)
+    return x + m, new_kv
+
+
+def _window(cfg) -> int:
+    return cfg.sliding_window if cfg.attention == "sliding_window" else 0
+
+
+def _kv_cache_shapes(cfg, batch: int, cache_len: int, dtype):
+    """Per-layer KV cache arrays (no layer axis)."""
+    if cfg.attention == "mla":
+        m = cfg.mla
+        return (jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+                jnp.zeros((batch, cache_len, m.qk_rope_head_dim), dtype))
+    hd = cfg.resolved_head_dim
+    s = min(cache_len, _window(cfg)) if _window(cfg) else cache_len
+    return (jnp.zeros((batch, s, cfg.n_kv_heads, hd), dtype),
+            jnp.zeros((batch, s, cfg.n_kv_heads, hd), dtype))
+
+
+def shard_kv_cache(kv):
+    """Decode KV caches: batch over data axes, cache-seq over model axis
+    (uniform across archs — independent of head-count divisibility)."""
+    if kv[0].ndim == 4:
+        return tuple(shard(c, "batch", "kv_seq", None, None) for c in kv)
+    return tuple(shard(c, "batch", "kv_seq", None) for c in kv)
+
+
+def _write_prefill_kv(cache_kv, new_kv, window: int):
+    """Write prefill K/V (narrow heads or MLA latents) into a cache slice."""
+    out = []
+    for dst, src in zip(cache_kv, new_kv):
+        S = src.shape[1]
+        if window and S > dst.shape[1]:
+            src = src[:, -dst.shape[1]:]      # keep the last `window` tokens
+            S = src.shape[1]
+        pad = [(0, 0), (0, dst.shape[1] - S)] + [(0, 0)] * (src.ndim - 2)
+        upd = jnp.pad(src.astype(dst.dtype), pad)
+        mask = (jnp.arange(dst.shape[1]) < S)
+        mask = mask.reshape((1, -1) + (1,) * (src.ndim - 2))
+        out.append(jnp.where(mask, upd, dst))
+    return tuple(out)
+
+
+# --------------------------------------------------------------- builder ---
+def build_decoder(cfg) -> Model:
+    """Dense + MoE decoder-only families (stablelm, nemotron, granite,
+    danube, smollm2, qwen3-moe, deepseek-v2)."""
+    n_scan = cfg.n_layers - cfg.moe.first_dense_layers
+    window = _window(cfg)
+
+    def init(rng):
+        keys = jax.random.split(rng, cfg.n_layers + 2)
+        layers = [init_dense_block(keys[i], cfg, use_moe=cfg.moe.enabled)
+                  for i in range(n_scan)]
+        p = {"embed": init_embedding(keys[-1], cfg),
+             "final_norm": init_norm(cfg),
+             "layers": stack_params(layers)}
+        if cfg.moe.first_dense_layers:
+            p["dense0"] = [init_dense_block(keys[n_scan + 0], cfg,
+                                            use_moe=False,
+                                            d_ff_override=cfg.moe.dense_d_ff)
+                           for _ in range(cfg.moe.first_dense_layers)]
+        return p
+
+    def _maybe_remat(fn, train):
+        if train and cfg.remat in ("block", "full"):
+            policy = (None if cfg.remat == "full"
+                      else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            return jax.checkpoint(fn, policy=policy)
+        return fn
+
+    def forward_hidden(params, batch, train: bool = False,
+                       capacity_factor=None):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed(params["embed"], tokens, cfg)
+        positions = jnp.arange(S, dtype=jnp.int32)
+        kv_len = batch.get("lengths")
+        aux0 = jnp.float32(0.0)
+
+        for blk in params.get("dense0", []):
+            x, a, _ = dense_block_prefill(blk, x, cfg, positions=positions,
+                                          kv_len=kv_len, window=window)
+            aux0 = aux0 + a
+
+        def body(carry, layer_params):
+            x, aux = carry
+            x, a, _ = dense_block_prefill(
+                layer_params, x, cfg, positions=positions, kv_len=kv_len,
+                window=window, capacity_factor=capacity_factor)
+            return (x, aux + a), None
+
+        (x, aux), _ = layer_scan(_maybe_remat(body, train), (x, aux0),
+                                 params["layers"])
+        x = apply_norm(params["final_norm"], x, cfg)
+        return x, aux
+
+    def forward(params, batch, train: bool = False):
+        x, aux = forward_hidden(params, batch, train)
+        return unembed(params["embed"], x, cfg), aux
+
+    def init_cache(batch: int, cache_len: int, dtype=None):
+        dtype = dtype or cdt(cfg)
+        per_layer = _kv_cache_shapes(cfg, batch, cache_len, dtype)
+        layers_kv = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n_scan,) + a.shape).copy(),
+            per_layer)
+        cache = {"layers": layers_kv}
+        if cfg.moe.first_dense_layers:
+            cache["dense0"] = [_kv_cache_shapes(cfg, batch, cache_len, dtype)
+                               for _ in range(cfg.moe.first_dense_layers)]
+        return cache
+
+    def prefill(params, tokens, lengths, cache, extra=None):
+        B, S = tokens.shape
+        x = embed(params["embed"], tokens, cfg)
+        positions = jnp.arange(S, dtype=jnp.int32)
+
+        new_dense0 = []
+        for blk, ckv in zip(params.get("dense0", []),
+                            cache.get("dense0", [])):
+            x, _, kv = dense_block_prefill(blk, x, cfg, positions=positions,
+                                           kv_len=lengths, window=window)
+            new_dense0.append(_write_prefill_kv(ckv, kv, window))
+
+        def body(x, xs):
+            layer_params, ckv = xs
+            x, _, kv = dense_block_prefill(
+                layer_params, x, cfg, positions=positions, kv_len=lengths,
+                window=window, capacity_factor=2.0)
+            return x, _write_prefill_kv(ckv, kv, window)
+
+        x, layers_kv = layer_scan(body, x, (params["layers"],
+                                            cache["layers"]))
+        x = apply_norm(params["final_norm"], x, cfg)
+        last = jnp.take_along_axis(
+            x, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)[:, 0]
+        logits = unembed(params["embed"], last[:, None], cfg)[:, 0]
+        new_cache = {"layers": layers_kv}
+        if new_dense0:
+            new_cache["dense0"] = new_dense0
+        return logits, new_cache
+
+    def decode_step(params, tokens, lengths, cache, extra=None):
+        B = tokens.shape[0]
+        x = embed(params["embed"], tokens, cfg)
+
+        new_dense0 = []
+        for blk, ckv in zip(params.get("dense0", []),
+                            cache.get("dense0", [])):
+            x, kv = dense_block_decode(blk, x, cfg, lengths=lengths,
+                                       window=window, cache_kv=ckv)
+            new_dense0.append(kv)
+
+        def body(x, xs):
+            layer_params, ckv = xs
+            ckv = shard_kv_cache(ckv)
+            x, new_kv = dense_block_decode(layer_params, x, cfg,
+                                           lengths=lengths, window=window,
+                                           cache_kv=ckv)
+            return x, shard_kv_cache(new_kv)
+
+        x, layers_kv = layer_scan(body, x, (params["layers"],
+                                            cache["layers"]))
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = unembed(params["embed"], x, cfg)[:, 0]
+        new_cache = {"layers": layers_kv}
+        if new_dense0:
+            new_cache["dense0"] = new_dense0
+        return logits, new_cache
+
+    return Model(cfg=cfg, init=init, forward_hidden=forward_hidden,
+                 forward=forward, init_cache=init_cache, prefill=prefill,
+                 decode_step=decode_step)

@@ -1,0 +1,162 @@
+"""Llama-3.2-Vision-style VLM: text decoder with gated cross-attention
+image layers every ``cross_attn_every`` layers.
+
+The vision tower is a STUB per the assignment: the model consumes
+precomputed patch embeddings (B, vision_tokens, vision_dim); cross-attention
+K/V project straight from those embeddings and are cached at prefill.
+Cross-attn and its MLP are tanh-gated (zero-init), as in the released model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.sharding import layer_scan
+from repro.models.layers import (apply_mlp, apply_norm, cdt, embed,
+                                 init_embedding, init_mlp, init_norm,
+                                 stack_params, unembed)
+from repro.models.transformer import (Model, _kv_cache_shapes,
+                                      _write_prefill_kv, dense_block_decode,
+                                      dense_block_prefill, init_dense_block,
+                                      shard_kv_cache)
+
+
+def _counts(cfg):
+    every = cfg.cross_attn_every
+    n_groups = cfg.n_layers // every
+    return every, n_groups
+
+
+def build_vlm(cfg) -> Model:
+    every, n_groups = _counts(cfg)
+
+    def init(rng):
+        keys = jax.random.split(rng, cfg.n_layers + n_groups + 1)
+        self_groups = stack_params([
+            stack_params([init_dense_block(keys[g * every + i], cfg,
+                                           use_moe=False)
+                          for i in range(every)])
+            for g in range(n_groups)])                   # (G, every, ...)
+        cross = [{"ln1": init_norm(cfg),
+                  "xattn": attn.init_attention(keys[cfg.n_layers + g], cfg,
+                                               cross=True),
+                  "gate_attn": jnp.zeros((), jnp.float32),
+                  "ln2": init_norm(cfg),
+                  "mlp": init_mlp(keys[cfg.n_layers + g], cfg),
+                  "gate_mlp": jnp.zeros((), jnp.float32)}
+                 for g in range(n_groups)]
+        return {"embed": init_embedding(keys[-1], cfg),
+                "final_norm": init_norm(cfg),
+                "self_groups": self_groups,
+                "cross": stack_params(cross)}
+
+    def _cross_block(cp, x, mem_k, mem_v):
+        h = apply_norm(cp["ln1"], x, cfg)
+        a = attn.attend_cached_memory(cp["xattn"], h, cfg, mem_k, mem_v)
+        x = x + jnp.tanh(cp["gate_attn"]).astype(x.dtype) * a
+        h = apply_norm(cp["ln2"], x, cfg)
+        m = apply_mlp(cp["mlp"], h, cfg)
+        return x + jnp.tanh(cp["gate_mlp"]).astype(x.dtype) * m
+
+    def forward_hidden(params, batch, train: bool = False):
+        tokens = batch["tokens"]
+        x = embed(params["embed"], tokens, cfg)
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        kv_len = batch.get("lengths")
+        patches = batch["patches"]
+
+        def body(x, xs):
+            cp, group_params = xs
+            mem_k, mem_v = attn.project_memory_kv(cp["xattn"], patches, cfg)
+            x = _cross_block(cp, x, mem_k, mem_v)
+
+            def inner(x, lp):
+                x, _, _ = dense_block_prefill(lp, x, cfg,
+                                              positions=positions,
+                                              kv_len=kv_len, window=0)
+                return x, None
+
+            x, _ = layer_scan(inner, x, group_params)
+            return x, None
+
+        fn = jax.checkpoint(body) if (train and cfg.remat != "none") else body
+        x, _ = layer_scan(fn, x, (params["cross"], params["self_groups"]))
+        return apply_norm(params["final_norm"], x, cfg), jnp.float32(0.0)
+
+    def forward(params, batch, train: bool = False):
+        x, aux = forward_hidden(params, batch, train)
+        return unembed(params["embed"], x, cfg), aux
+
+    def init_cache(batch: int, cache_len: int, dtype=None):
+        dtype = dtype or cdt(cfg)
+        kv = _kv_cache_shapes(cfg, batch, cache_len, dtype)
+        hd = cfg.resolved_head_dim
+        self_kv = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(
+                a[None, None], (n_groups, every) + a.shape).copy(), kv)
+        cross = (jnp.zeros((batch, cfg.vision_tokens, cfg.n_kv_heads, hd),
+                           dtype),) * 2
+        cross_kv = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape).copy(),
+            cross)
+        return {"self": self_kv, "cross": cross_kv}
+
+    def prefill(params, tokens, lengths, cache, extra=None):
+        x = embed(params["embed"], tokens, cfg)
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        patches = extra["patches"]
+
+        def body(x, xs):
+            cp, group_params, self_ckv = xs
+            mem_k, mem_v = attn.project_memory_kv(cp["xattn"], patches, cfg)
+            x = _cross_block(cp, x, mem_k, mem_v)
+
+            def inner(x, xs_):
+                lp, ckv = xs_
+                x, _, kv = dense_block_prefill(lp, x, cfg,
+                                               positions=positions,
+                                               kv_len=lengths, window=0)
+                return x, _write_prefill_kv(ckv, kv, 0)
+
+            x, new_kv = layer_scan(inner, x, (group_params, self_ckv))
+            cross_kv = tuple(c.astype(self_ckv[0].dtype)
+                             for c in (mem_k, mem_v))
+            return x, (new_kv, cross_kv)
+
+        x, (self_kv, cross_kv) = layer_scan(
+            body, x, (params["cross"], params["self_groups"], cache["self"]))
+        x = apply_norm(params["final_norm"], x, cfg)
+        last = jnp.take_along_axis(
+            x, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)[:, 0]
+        logits = unembed(params["embed"], last[:, None], cfg)[:, 0]
+        return logits, {"self": self_kv, "cross": cross_kv}
+
+    def decode_step(params, tokens, lengths, cache, extra=None):
+        x = embed(params["embed"], tokens, cfg)
+
+        def body(x, xs):
+            cp, group_params, self_ckv, cross_kv = xs
+            x = _cross_block(cp, x, cross_kv[0], cross_kv[1])
+
+            def inner(x, xs_):
+                lp, ckv = xs_
+                ckv = shard_kv_cache(ckv)
+                x, kv = dense_block_decode(lp, x, cfg, lengths=lengths,
+                                           window=0, cache_kv=ckv)
+                return x, shard_kv_cache(kv)
+
+            x, new_kv = layer_scan(inner, x, (group_params, self_ckv))
+            return x, new_kv
+
+        x, self_kv = layer_scan(
+            body, x, (params["cross"], params["self_groups"], cache["self"],
+                      cache["cross"]))
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = unembed(params["embed"], x, cfg)[:, 0]
+        return logits, {"self": self_kv, "cross": cache["cross"]}
+
+    return Model(cfg=cfg, init=init, forward_hidden=forward_hidden,
+                 forward=forward, init_cache=init_cache, prefill=prefill,
+                 decode_step=decode_step)

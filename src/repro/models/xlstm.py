@@ -1,0 +1,146 @@
+"""xLSTM assembly: groups of [sLSTM, mLSTM x (g-1)] blocks.
+
+All state is O(1) per sequence (matrix memories + scalar cells), so this
+family runs the ``long_500k`` decode cell. sLSTM prefill is a sequential
+time scan (true hidden recurrence); mLSTM prefill uses the shared chunked
+linear-attention core (MXU-friendly).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm
+from repro.models.sharding import layer_scan
+from repro.models.layers import (apply_norm, cdt, embed, init_embedding,
+                                 init_norm, stack_params, unembed)
+from repro.models.transformer import Model
+
+
+def _counts(cfg):
+    g = cfg.ssm.slstm_every
+    n_groups = cfg.n_layers // g
+    return g, n_groups
+
+
+def build_xlstm(cfg) -> Model:
+    g, n_groups = _counts(cfg)
+    n_m = g - 1  # mLSTM blocks per group
+
+    def init(rng):
+        keys = jax.random.split(rng, cfg.n_layers + 1)
+        s_blocks, m_blocks = [], []
+        ki = 0
+        for _ in range(n_groups):
+            s_blocks.append({"ln": init_norm(cfg),
+                             "core": ssm.init_slstm(keys[ki], cfg)})
+            ki += 1
+            group_m = []
+            for _ in range(n_m):
+                group_m.append({"ln": init_norm(cfg),
+                                "core": ssm.init_mlstm(keys[ki], cfg)})
+                ki += 1
+            m_blocks.append(stack_params(group_m))
+        return {"embed": init_embedding(keys[-1], cfg),
+                "final_norm": init_norm(cfg),
+                "slstm": stack_params(s_blocks),          # (G, ...)
+                "mlstm": stack_params(m_blocks)}          # (G, n_m, ...)
+
+    def _apply_group_prefill(x, s_p, m_p, want_state, valid=None):
+        h = apply_norm(s_p["ln"], x, cfg)
+        y, s_cache = ssm.slstm_forward(s_p["core"], h, cfg,
+                                       return_state=want_state, valid=valid)
+        x = x + y
+
+        def inner(x, lp):
+            h = apply_norm(lp["ln"], x, cfg)
+            y, st = ssm.mlstm_prefill(lp["core"], h, cfg,
+                                      return_state=want_state, valid=valid)
+            return x + y, st
+
+        x, m_states = layer_scan(inner, x, m_p)
+        return x, s_cache, m_states
+
+    def forward_hidden(params, batch, train: bool = False):
+        x = embed(params["embed"], batch["tokens"], cfg)
+        kv_len = batch.get("lengths")
+        valid = None
+        if kv_len is not None:
+            S = batch["tokens"].shape[1]
+            valid = jnp.arange(S)[None, :] < kv_len[:, None]
+
+        def body(x, xs):
+            s_p, m_p = xs
+            x, _, _ = _apply_group_prefill(x, s_p, m_p, False, valid)
+            return x, None
+
+        fn = jax.checkpoint(body) if (train and cfg.remat != "none") else body
+        x, _ = layer_scan(fn, x, (params["slstm"], params["mlstm"]))
+        x = apply_norm(params["final_norm"], x, cfg)
+        return x, jnp.float32(0.0)
+
+    def forward(params, batch, train: bool = False):
+        x, aux = forward_hidden(params, batch, train)
+        return unembed(params["embed"], x, cfg), aux
+
+    def init_cache(batch: int, cache_len: int, dtype=None):
+        dtype = dtype or cdt(cfg)
+        s1 = ssm.slstm_init_cache(cfg, batch, dtype)
+        m1 = ssm.mlstm_init_cache(cfg, batch)
+        stack = jax.tree_util.tree_map
+        return {
+            "slstm": stack(lambda a: jnp.broadcast_to(
+                a[None], (n_groups,) + a.shape).copy(), s1),
+            "mlstm": stack(lambda a: jnp.broadcast_to(
+                a[None, None], (n_groups, n_m) + a.shape).copy(), m1),
+        }
+
+    def prefill(params, tokens, lengths, cache, extra=None):
+        # right-padded prompts: padding steps are exact state no-ops via
+        # the `valid` mask (dt/gates frozen), so state == state at `length`.
+        x = embed(params["embed"], tokens, cfg)
+        S = tokens.shape[1]
+        valid = jnp.arange(S)[None, :] < lengths[:, None]
+
+        def body(x, xs):
+            s_p, m_p = xs
+            x, s_c, m_c = _apply_group_prefill(x, s_p, m_p, True, valid)
+            return x, (s_c, m_c)
+
+        x, (s_cache, m_cache) = layer_scan(
+            body, x, (params["slstm"], params["mlstm"]))
+        x = apply_norm(params["final_norm"], x, cfg)
+        last = jnp.take_along_axis(
+            x, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)[:, 0]
+        logits = unembed(params["embed"], last[:, None], cfg)[:, 0]
+        return logits, {"slstm": s_cache, "mlstm": m_cache}
+
+    def decode_step(params, tokens, lengths, cache, extra=None):
+        x = embed(params["embed"], tokens, cfg)
+
+        def body(x, xs):
+            s_p, m_p, s_c, m_c = xs
+            h = apply_norm(s_p["ln"], x, cfg)
+            y, s_c = ssm.slstm_forward(s_p["core"], h, cfg, cache=s_c)
+            x = x + y
+
+            def inner(x, xs_):
+                lp, st = xs_
+                h = apply_norm(lp["ln"], x, cfg)
+                y, st = ssm.mlstm_decode(lp["core"], h, cfg, st)
+                return x + y, st
+
+            x, m_c = layer_scan(inner, x, (m_p, m_c))
+            return x, (s_c, m_c)
+
+        x, (s_cache, m_cache) = layer_scan(
+            body, x, (params["slstm"], params["mlstm"], cache["slstm"],
+                      cache["mlstm"]))
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = unembed(params["embed"], x, cfg)[:, 0]
+        return logits, {"slstm": s_cache, "mlstm": m_cache}
+
+    return Model(cfg=cfg, init=init, forward_hidden=forward_hidden,
+                 forward=forward, init_cache=init_cache, prefill=prefill,
+                 decode_step=decode_step)

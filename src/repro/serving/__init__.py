@@ -1,0 +1,4 @@
+from repro.serving.engine import InferenceEngine
+from repro.serving.request import EngineStats, Request, RequestState
+
+__all__ = ["InferenceEngine", "Request", "RequestState", "EngineStats"]

@@ -1,0 +1,58 @@
+"""Slot-structured KV cache management for continuous batching.
+
+Caches are family-specific pytrees (dense KV, MLA latents, Mamba2 states,
+xLSTM matrix memories...) whose batch axis sits at a *different* position
+per leaf. The engine discovers each leaf's batch axis once — by building
+abstract caches at two batch sizes and diffing shapes — then scatter-merges
+freshly-prefilled request caches into the live slot cache with a single
+jitted update, whatever the family.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def batch_axes(init_cache: Callable, cache_len: int, dtype) -> Any:
+    """Pytree of ints: the batch-axis index of every cache leaf."""
+    a = jax.eval_shape(lambda: init_cache(2, cache_len, dtype))
+    b = jax.eval_shape(lambda: init_cache(3, cache_len, dtype))
+
+    def find(sa, sb):
+        diff = [i for i, (x, y) in enumerate(zip(sa.shape, sb.shape))
+                if x != y]
+        if len(diff) != 1:
+            raise ValueError(f"ambiguous batch axis: {sa.shape} vs {sb.shape}")
+        return diff[0]
+
+    return jax.tree_util.tree_map(find, a, b)
+
+
+def merge_slots(global_cache, new_cache, slots: jax.Array, axes) -> Any:
+    """Scatter new_cache (batch n) into global_cache (batch B) at ``slots``.
+
+    ``slots`` (n,) int32. Jit-friendly (axes is a static pytree of ints)."""
+
+    def upd(g, n, ax):
+        gm = jnp.moveaxis(g, ax, 0)
+        nm = jnp.moveaxis(n, ax, 0).astype(gm.dtype)
+        return jnp.moveaxis(gm.at[slots].set(nm), 0, ax)
+
+    return jax.tree_util.tree_map(upd, global_cache, new_cache, axes)
+
+
+def gather_slots(global_cache, slots: jax.Array, axes) -> Any:
+    """Extract a sub-batch cache at ``slots`` (checkpoint/migration path)."""
+
+    def take(g, ax):
+        return jnp.moveaxis(jnp.moveaxis(g, ax, 0)[slots], 0, ax)
+
+    return jax.tree_util.tree_map(take, global_cache, axes)
+
+
+def cache_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(cache))

@@ -1,0 +1,52 @@
+"""Request/result types for the inference engine."""
+
+from __future__ import annotations
+
+import enum
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+_ids = itertools.count()
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    DONE = "done"
+    CANCELLED = "cancelled"
+
+
+@dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0            # 0 => greedy
+    top_k: int = 0
+    stop_tokens: tuple = (1,)           # EOS id from repro.data.tokenizer
+    request_id: int = field(default_factory=lambda: next(_ids))
+    arrival_time: float = field(default_factory=time.monotonic)
+    state: RequestState = RequestState.QUEUED
+    generated: List[int] = field(default_factory=list)
+    slot: Optional[int] = None
+
+    @property
+    def done(self) -> bool:
+        return self.state in (RequestState.DONE, RequestState.CANCELLED)
+
+
+@dataclass
+class EngineStats:
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    completed: int = 0
+    steps: int = 0
+    prefill_batches: int = 0
+
+    def as_dict(self) -> Dict:
+        return dict(prefill_tokens=self.prefill_tokens,
+                    decode_tokens=self.decode_tokens,
+                    completed=self.completed, steps=self.steps,
+                    prefill_batches=self.prefill_batches)

@@ -1,0 +1,24 @@
+"""Token sampling (pure JAX, jit-safe)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jax.Array, rng: jax.Array, temperature: jax.Array,
+           top_k: int = 0, vocab_size: int = 0) -> jax.Array:
+    """logits (B,V) -> tokens (B,). temperature (B,): 0 => greedy.
+
+    ``vocab_size`` masks out padded vocab rows (padded_vocab > vocab)."""
+    lf = logits.astype(jnp.float32)
+    if vocab_size and vocab_size < lf.shape[-1]:
+        mask = jnp.arange(lf.shape[-1]) < vocab_size
+        lf = jnp.where(mask[None, :], lf, -1e30)
+    greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    if top_k:
+        kth = jnp.sort(lf, axis=-1)[:, -top_k][:, None]
+        lf = jnp.where(lf >= kth, lf, -1e30)
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jax.random.categorical(rng, lf / t, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, sampled, greedy)

@@ -1,0 +1,4 @@
+from repro.train.optimizer import OptimizerConfig, apply_updates, init_state
+from repro.train.trainstep import (chunked_cross_entropy, make_eval_step,
+                                   make_loss_fn, make_train_step)
+from repro.train.loop import LoopConfig, train

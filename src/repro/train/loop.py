@@ -1,0 +1,86 @@
+"""Training loop with checkpoint/restart and step-time telemetry.
+
+Restart semantics match the paper's no-warning preemption model: the loop
+can be killed at ANY point; on relaunch it restores the newest *valid*
+checkpoint (manifest-committed) and replays the data stream from the saved
+step — no coordination, no partial state.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.train import optimizer as opt_lib
+from repro.train.trainstep import make_train_step
+
+
+@dataclass
+class LoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    log_every: int = 10
+    keep_checkpoints: int = 3
+    accum_steps: int = 1
+    ce_chunk: int = 512
+
+
+@dataclass
+class StepRecord:
+    step: int
+    loss: float
+    seconds: float
+    lr: float
+    grad_norm: float
+
+
+def train(model, data_iter_fn: Callable[[int], Iterator],
+          opt_cfg: opt_lib.OptimizerConfig, loop_cfg: LoopConfig,
+          checkpoint_dir: Optional[str] = None, rng=None,
+          params=None, log_fn: Callable = print) -> Dict:
+    """data_iter_fn(start_step) -> iterator of host batches."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    if params is None:
+        params = model.init(rng)
+    opt_state = opt_lib.init_state(params)
+    state = {"params": params, "opt": opt_state}
+    start_step = 0
+    manager = None
+    if checkpoint_dir:
+        manager = CheckpointManager(checkpoint_dir,
+                                    keep=loop_cfg.keep_checkpoints)
+        state, start_step = manager.restore_or_init(state)
+        if start_step:
+            log_fn(f"[loop] resumed from step {start_step}")
+
+    step_fn = jax.jit(make_train_step(model, opt_cfg,
+                                      accum_steps=loop_cfg.accum_steps,
+                                      ce_chunk=loop_cfg.ce_chunk),
+                      donate_argnums=(0, 1))
+    records: List[StepRecord] = []
+    data = data_iter_fn(start_step)
+    params, opt_state = state["params"], state["opt"]
+
+    for step in range(start_step, loop_cfg.total_steps):
+        batch = {k: jax.numpy.asarray(v) for k, v in next(data).items()}
+        t0 = time.monotonic()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])           # sync point = step boundary
+        dt = time.monotonic() - t0
+        records.append(StepRecord(step=step + 1, loss=loss, seconds=dt,
+                                  lr=float(metrics["lr"]),
+                                  grad_norm=float(metrics["grad_norm"])))
+        if (step + 1) % loop_cfg.log_every == 0:
+            log_fn(f"[loop] step {step + 1} loss {loss:.4f} "
+                   f"({dt * 1e3:.0f} ms)")
+        if manager and (step + 1) % loop_cfg.checkpoint_every == 0:
+            manager.save(step + 1, {"params": params, "opt": opt_state})
+    if manager:
+        manager.save(loop_cfg.total_steps, {"params": params,
+                                            "opt": opt_state})
+    return {"params": params, "opt": opt_state, "records": records}

@@ -1,0 +1,73 @@
+"""Config registry + parameter accounting sanity."""
+
+import pytest
+
+from repro.configs import (ALL_ARCHS, ASSIGNED_ARCHS, SHAPES, get_config,
+                           get_reduced_config, shapes_for, skip_reason)
+
+# published (approximate) parameter counts, billions
+EXPECTED_PARAMS_B = {
+    "stablelm-12b": (10.0, 14.5),
+    "nemotron-4-15b": (14.0, 17.5),
+    "granite-3-2b": (2.0, 3.3),
+    "h2o-danube-1.8b": (1.5, 2.2),
+    "whisper-small": (0.15, 0.45),
+    "xlstm-350m": (0.25, 0.55),
+    "zamba2-7b": (6.0, 8.5),
+    "llama-3.2-vision-11b": (9.0, 12.5),
+    "qwen3-moe-235b-a22b": (200.0, 250.0),
+    "deepseek-v2-lite-16b": (13.0, 18.0),
+    "smollm2-1.7b": (1.4, 2.1),
+}
+
+
+def test_ten_assigned_archs():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert "smollm2-1.7b" not in ASSIGNED_ARCHS
+    assert "smollm2-1.7b" in ALL_ARCHS
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_PARAMS_B))
+def test_param_counts_in_published_range(arch):
+    cfg = get_config(arch)
+    lo, hi = EXPECTED_PARAMS_B[arch]
+    n = cfg.param_count() / 1e9
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B params outside [{lo},{hi}]"
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    active = cfg.active_param_count() / 1e9
+    assert 18 <= active <= 26, active          # "A22B"
+    cfg = get_config("deepseek-v2-lite-16b")
+    active = cfg.active_param_count() / 1e9
+    assert 1.5 <= active <= 4.0, active        # ~2.4B active
+
+
+def test_vocab_padding():
+    cfg = get_config("granite-3-2b")
+    assert cfg.vocab_size == 49155
+    assert cfg.padded_vocab % 256 == 0
+    assert cfg.padded_vocab >= cfg.vocab_size
+
+
+def test_long500k_applicability():
+    runs = {a for a in ALL_ARCHS
+            if SHAPES["long_500k"] in shapes_for(get_config(a))}
+    assert runs == {"h2o-danube-1.8b", "xlstm-350m", "zamba2-7b"}
+    assert skip_reason(get_config("stablelm-12b"), SHAPES["long_500k"])
+    assert skip_reason(get_config("zamba2-7b"), SHAPES["long_500k"]) is None
+
+
+def test_config_keys_stable_and_distinct():
+    keys = {get_config(a).key() for a in ALL_ARCHS}
+    assert len(keys) == len(ALL_ARCHS)
+    assert get_config("smollm2-1.7b").key() == get_config(
+        "smollm2-1.7b").key()
+
+
+@pytest.mark.parametrize("arch", sorted(ALL_ARCHS))
+def test_reduced_configs_small(arch):
+    cfg = get_reduced_config(arch)
+    assert cfg.param_count() < 30e6, cfg.param_count()
+    assert cfg.arch_id == arch

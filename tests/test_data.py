@@ -1,0 +1,74 @@
+"""Data pipeline: tokenizer, synthetic FEVER, host-sharded batching."""
+
+import numpy as np
+
+from repro.data import HashTokenizer, PipelineConfig, batches, fever
+from repro.data.tokenizer import BOS, EOS, LABEL_TOKENS, N_SPECIAL
+
+
+def test_tokenizer_determinism_and_range():
+    t1, t2 = HashTokenizer(1000), HashTokenizer(1000)
+    ids1 = t1.encode("the quick brown fox")
+    ids2 = t2.encode("the quick brown fox")
+    assert ids1 == ids2
+    assert ids1[0] == BOS
+    assert all(N_SPECIAL <= i < 1000 for i in ids1[1:])
+
+
+def test_tokenizer_decode():
+    t = HashTokenizer(10_000)
+    ids = t.encode("paris is the capital of france", add_eos=True)
+    assert t.decode(ids) == "paris is the capital of france"
+
+
+def test_claims_deterministic_and_labeled():
+    a = fever.claim_batch([0, 1, 2, 99_999])
+    b = fever.claim_batch([0, 1, 2, 99_999])
+    assert a == b
+    assert all(c.label in fever.LABELS for c in a)
+
+
+def test_claim_label_distribution():
+    claims = list(fever.claims(2000))
+    frac = {lbl: sum(c.label == lbl for c in claims) / 2000
+            for lbl in fever.LABELS}
+    assert 0.3 < frac["SUPPORTED"] < 0.5
+    assert 0.3 < frac["REFUTED"] < 0.5
+    assert 0.1 < frac["NOT ENOUGH INFO"] < 0.3
+
+
+def test_nei_claims_use_unknown_subjects():
+    for c in fever.claims(500):
+        if c.label == "NOT ENOUGH INFO":
+            assert any(u in c.text for u in
+                       ["zorblax", "quixel", "vantor", "mirelle", "koppen",
+                        "drayune", "selvath", "ombrix"])
+
+
+def test_pipeline_shapes_and_label_masking():
+    cfg = PipelineConfig(batch_size=4, seq_len=32, vocab_size=1000)
+    batch = next(batches(cfg))
+    assert batch["tokens"].shape == (4, 32)
+    assert batch["labels"].shape == (4, 32)
+    # prompt positions masked, answer positions supervised
+    for i in range(4):
+        sup = batch["labels"][i][batch["labels"][i] != -100]
+        assert len(sup) >= 1
+        assert sup[-1] == EOS or sup[-1] in LABEL_TOKENS.values() \
+            or sup[-1] >= 0
+
+
+def test_host_sharding_disjoint():
+    cfg0 = PipelineConfig(batch_size=4, seq_len=16, host_id=0, host_count=2)
+    cfg1 = PipelineConfig(batch_size=4, seq_len=16, host_id=1, host_count=2)
+    b0 = next(batches(cfg0))
+    b1 = next(batches(cfg1))
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_resume_reproduces_stream():
+    cfg = PipelineConfig(batch_size=2, seq_len=16)
+    it = batches(cfg)
+    first = [next(it) for _ in range(5)]
+    resumed = next(batches(cfg, start_step=3))
+    assert np.array_equal(first[3]["tokens"], resumed["tokens"])

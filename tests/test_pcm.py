@@ -1,0 +1,241 @@
+"""Pervasive Context Management unit + integration tests."""
+
+import time
+
+import pytest
+
+from repro.core import (Action, ContextAwareScheduler, ContextMode,
+                        ContextRecipe, ContextStore, Library, PCMManager,
+                        Task, Tier, TransferPlanner, context_app,
+                        load_context, make_recipe)
+from repro.core.context import GB
+
+R = ContextRecipe(name="m", artifact_bytes=4 * GB, env_bytes=10 * GB,
+                  host_bytes=7 * GB, device_bytes=4 * GB)
+
+
+# ------------------------------------------------------------- store -------
+class TestStore:
+    def test_tiers_and_modes(self):
+        s = ContextStore()
+        assert s.has("x", Tier.SHARED_FS)
+        assert not s.has("x", Tier.DEVICE)
+        s.admit_recipe(R, Tier.DEVICE)
+        assert s.has(R.key(), Tier.DEVICE)
+        assert s.has(R.key(), Tier.LOCAL_DISK)
+        s.drop(R.key(), down_to=Tier.LOCAL_DISK)
+        assert not s.has(R.key(), Tier.DEVICE)
+        assert s.has(R.key(), Tier.LOCAL_DISK)
+
+    def test_lru_eviction(self):
+        s = ContextStore(device_bytes=10 * GB)
+        r1 = ContextRecipe(name="a", device_bytes=6 * GB)
+        r2 = ContextRecipe(name="b", device_bytes=6 * GB)
+        s.admit(r1.key(), Tier.DEVICE, r1.device_bytes, now=1.0)
+        evicted = s.admit(r2.key(), Tier.DEVICE, r2.device_bytes, now=2.0)
+        assert evicted == [r1.key()]
+        assert s.has(r2.key(), Tier.DEVICE)
+        assert not s.has(r1.key(), Tier.DEVICE)
+
+    def test_oversized_rejected(self):
+        s = ContextStore(device_bytes=1 * GB)
+        with pytest.raises(ValueError):
+            s.admit("big", Tier.DEVICE, 2 * GB)
+
+    def test_mode_persist_tiers(self):
+        assert ContextMode.AGNOSTIC.persist_tier == Tier.SHARED_FS
+        assert ContextMode.PARTIAL.persist_tier == Tier.LOCAL_DISK
+        assert ContextMode.FULL.persist_tier == Tier.DEVICE
+
+
+# ------------------------------------------------------------ library ------
+class TestLibrary:
+    def test_cold_then_warm(self):
+        builds = []
+        recipe = ContextRecipe(name="t").with_builder(
+            lambda: builds.append(1) or {"v": 42})
+        lib = Library("w0")
+        out = lib.invoke(lambda: load_context_val(), recipe=recipe,
+                         task_id="a")
+        out2 = lib.invoke(lambda: load_context_val(), recipe=recipe,
+                          task_id="b")
+        assert out == out2 == 42
+        assert len(builds) == 1
+        assert [r.cold for r in lib.records] == [True, False]
+
+    def test_eviction_forces_rebuild(self):
+        builds = []
+        recipe = ContextRecipe(name="t2").with_builder(
+            lambda: builds.append(1) or {"v": 1})
+        lib = Library("w0")
+        lib.invoke(lambda: 0, recipe=recipe)
+        lib.evict(recipe.key())
+        lib.invoke(lambda: 0, recipe=recipe)
+        assert len(builds) == 2
+
+
+def load_context_val():
+    from repro.core import load_variable_from_context
+    return load_variable_from_context("v")
+
+
+# ---------------------------------------------------------- transfer -------
+class TestTransferPlanner:
+    def test_p2p_beats_contended_fs(self):
+        p = TransferPlanner(fs_bytes_per_s=10 * GB, p2p_bytes_per_s=10 * GB,
+                            nic_bytes_per_s=10 * GB)
+        # saturate the FS with 9 flows
+        for _ in range(9):
+            p.plan(100 * GB, donors=set(), now=0.0)
+        plan = p.plan(10 * GB, donors={"w1"}, now=0.0)
+        assert plan.p2p and plan.source == "w1"
+
+    def test_fs_when_no_donors(self):
+        p = TransferPlanner()
+        plan = p.plan(10 * GB, donors=set(), now=0.0)
+        assert not plan.p2p
+
+    def test_donor_fanout_respected(self):
+        p = TransferPlanner(donor_fanout=1, fs_bytes_per_s=0.001 * GB,
+                            nic_bytes_per_s=10 * GB)
+        a = p.plan(10 * GB, donors={"w1"}, now=0.0)
+        b = p.plan(10 * GB, donors={"w1"}, now=0.0)
+        assert a.p2p and not b.p2p   # donor busy -> falls back to FS
+
+    def test_agnostic_disallows_p2p(self):
+        p = TransferPlanner(fs_bytes_per_s=0.001 * GB)
+        plan = p.plan(10 * GB, donors={"w1"}, now=0.0, allow_p2p=False)
+        assert not plan.p2p
+
+
+# ---------------------------------------------------------- scheduler ------
+def mk_task(i, recipe=R, n=100):
+    return Task(task_id=f"t{i}", recipe=recipe, n_items=n)
+
+
+class TestScheduler:
+    def test_warm_affinity(self):
+        s = ContextAwareScheduler(mode=ContextMode.FULL)
+        s.on_worker_join("w0", 0.0)
+        s.on_worker_join("w1", 0.0)
+        # w1 holds the context
+        s.workers["w1"].store.admit_recipe(R, Tier.DEVICE)
+        acts = s.submit(mk_task(0), 1.0)
+        starts = [a for a in acts if a.kind == "start"]
+        assert starts[0].worker_id == "w1" and starts[0].warm
+
+    def test_requeue_on_preemption(self):
+        s = ContextAwareScheduler(mode=ContextMode.FULL)
+        s.on_worker_join("w0", 0.0)
+        s.submit(mk_task(0), 0.0)
+        assert "t0" in s.running
+        acts = s.on_worker_leave("w0", 5.0)
+        assert "t0" not in s.running
+        assert s.queue and s.queue[0].task_id == "t0"
+        # new worker joins -> task restarts
+        acts = s.on_worker_join("w1", 6.0)
+        assert any(a.kind == "start" and a.task_id == "t0" for a in acts)
+        s.on_task_done("w1", "t0", 10.0)
+        assert s.all_done()
+
+    def test_prefetch_only_in_full_mode(self):
+        for mode, expect in [(ContextMode.FULL, True),
+                             (ContextMode.PARTIAL, False)]:
+            s = ContextAwareScheduler(mode=mode)
+            s.on_worker_join("w0", 0.0)
+            s.on_worker_join("w1", 0.0)
+            acts = s.submit(mk_task(0), 0.0)   # w0 starts; w1 idle
+            fetches = [a for a in acts if a.kind == "fetch"]
+            assert bool(fetches) == expect
+
+    def test_mode_cleanup_after_task(self):
+        s = ContextAwareScheduler(mode=ContextMode.AGNOSTIC)
+        s.on_worker_join("w0", 0.0)
+        s.submit(mk_task(0), 0.0)
+        s.on_task_done("w0", "t0", 1.0)
+        assert not s.workers["w0"].store.has(R.key(), Tier.LOCAL_DISK)
+        s2 = ContextAwareScheduler(mode=ContextMode.PARTIAL)
+        s2.on_worker_join("w0", 0.0)
+        s2.submit(mk_task(0), 0.0)
+        s2.on_task_done("w0", "t0", 1.0)
+        assert s2.workers["w0"].store.has(R.key(), Tier.LOCAL_DISK)
+        assert not s2.workers["w0"].store.has(R.key(), Tier.DEVICE)
+
+    def test_straggler_duplication_first_result_wins(self):
+        s = ContextAwareScheduler(mode=ContextMode.FULL,
+                                  straggler_factor=2.0)
+        s.on_worker_join("w0", 0.0)
+        s.on_worker_join("w1", 0.0)
+        # five quick completions to establish the median
+        for i in range(5):
+            s.submit(mk_task(i), float(i))
+            s.on_task_done("w0", f"t{i}", float(i) + 1.0)
+        s.submit(mk_task(9), 10.0)
+        # the idle worker prefetches the running task's context (warm
+        # standby); deliver its completion so it is IDLE for duplication
+        for w in list(s.workers.values()):
+            if w.fetching_key:
+                s.on_fetch_done(w.worker_id, w.fetching_key, 11.0)
+        (wid, t0) = s.running["t9"]
+        # long past 2x median -> dispatch duplicates
+        acts = s.dispatch(t0 + 50.0)
+        dups = [a for a in acts if a.kind == "start" and "~dup" in a.task_id]
+        assert dups
+        # duplicate finishes first; original gets cancelled implicitly
+        acts = s.on_task_done(dups[0].worker_id, dups[0].task_id, 60.0)
+        assert "t9" in s.done_ids
+        assert len([c for c in s.completions if c.task_id == "t9"]) == 1
+        assert any(a.kind == "cancel" for a in acts)
+
+    def test_no_double_completion(self):
+        s = ContextAwareScheduler(mode=ContextMode.FULL)
+        s.on_worker_join("w0", 0.0)
+        s.submit(mk_task(0), 0.0)
+        s.on_task_done("w0", "t0", 1.0)
+        s.on_task_done("w0", "t0", 2.0)     # spurious double event
+        assert len(s.completions) == 1
+
+
+# ------------------------------------------------------------ manager ------
+class TestManagerLive:
+    def test_full_vs_agnostic_amortization(self):
+        builds = []
+
+        def loader():
+            builds.append(1)
+            return {"m": 7}
+
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=2)
+        rec = make_recipe("ctx", loader)
+
+        @context_app(recipe=rec, manager=mgr)
+        def f(x):
+            return load_context("m") + x
+
+        assert [f(i).result() for i in range(8)] == [7 + i for i in range(8)]
+        assert len(builds) <= 2
+        st = mgr.stats()
+        assert st["warm_invocations"] >= 6
+
+    def test_preemption_requeues_and_completes(self):
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=2)
+        rec = make_recipe("ctx2", lambda: {"m": 1})
+
+        @context_app(recipe=rec, manager=mgr)
+        def f(x):
+            return x * 2
+
+        futs = [f(i) for i in range(5)]
+        mgr.preempt_worker(next(iter(mgr.workers)))
+        mgr.add_worker()
+        assert [fu.result() for fu in futs] == [0, 2, 4, 6, 8]
+
+    def test_task_exception_reported(self):
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=1)
+
+        @context_app(manager=mgr)
+        def bad():
+            raise ValueError("boom")
+
+        with pytest.raises(ValueError):
+            bad().result()

@@ -1,0 +1,97 @@
+"""Continuous-batching inference engine tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models import build_model
+from repro.serving import InferenceEngine, Request
+from repro.serving.kvcache import batch_axes, gather_slots, merge_slots
+
+
+@pytest.fixture(scope="module")
+def smol():
+    cfg = get_reduced_config("smollm2-1.7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def prompts(cfg, n, seed=0):
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(8, cfg.vocab_size,
+                             size=rng.randint(3, 14))) for _ in range(n)]
+
+
+def test_generate_and_determinism(smol):
+    cfg, model, params = smol
+    ps = prompts(cfg, 9)
+    e1 = InferenceEngine(model, params, slots=4, cache_len=64,
+                         prefill_buckets=(16, 32))
+    o1 = e1.generate(ps, max_new_tokens=6)
+    e2 = InferenceEngine(model, params, slots=4, cache_len=64,
+                         prefill_buckets=(16, 32))
+    o2 = e2.generate(ps, max_new_tokens=6)
+    assert o1 == o2
+    assert len(o1) == 9 and all(1 <= len(o) <= 6 for o in o1)
+
+
+def test_batching_invariance(smol):
+    """Result of a request must not depend on what shares its batch."""
+    cfg, model, params = smol
+    ps = prompts(cfg, 6, seed=3)
+    multi = InferenceEngine(model, params, slots=3, cache_len=64,
+                            prefill_buckets=(16,)).generate(
+        ps, max_new_tokens=5)
+    solo = [InferenceEngine(model, params, slots=1, cache_len=64,
+                            prefill_buckets=(16,)).generate(
+        [p], max_new_tokens=5)[0] for p in ps]
+    assert multi == solo
+
+
+def test_slot_reuse_and_stats(smol):
+    cfg, model, params = smol
+    eng = InferenceEngine(model, params, slots=2, cache_len=64,
+                          prefill_buckets=(16,))
+    outs = eng.generate(prompts(cfg, 7), max_new_tokens=3)
+    assert len(outs) == 7
+    st = eng.snapshot()
+    assert st["stats"]["completed"] == 7
+    assert st["free_slots"] == 2 and st["active"] == 0
+
+
+def test_prompt_too_long_rejected(smol):
+    cfg, model, params = smol
+    eng = InferenceEngine(model, params, slots=1, cache_len=16)
+    with pytest.raises(ValueError):
+        eng.submit(Request(prompt=list(range(99))))
+
+
+def test_cache_slot_merge_gather(smol):
+    cfg, model, params = smol
+    axes = batch_axes(model.init_cache, 32, jnp.float32)
+    big = model.init_cache(4, 32, jnp.float32)
+    small = jax.tree_util.tree_map(
+        lambda a: jnp.ones_like(a),
+        model.init_cache(2, 32, jnp.float32))
+    merged = merge_slots(big, small, jnp.array([1, 3]), axes)
+    back = gather_slots(merged, jnp.array([1, 3]), axes)
+    for leaf in jax.tree_util.tree_leaves(back):
+        assert float(jnp.min(leaf)) == 1.0
+    untouched = gather_slots(merged, jnp.array([0, 2]), axes)
+    for leaf in jax.tree_util.tree_leaves(untouched):
+        assert float(jnp.max(jnp.abs(leaf))) == 0.0
+
+
+def test_temperature_sampling_differs(smol):
+    cfg, model, params = smol
+    ps = prompts(cfg, 2, seed=5)
+    eng = InferenceEngine(model, params, slots=2, cache_len=64,
+                          prefill_buckets=(16,), rng_seed=0)
+    hot = eng.generate(ps, max_new_tokens=8, temperature=5.0)
+    eng2 = InferenceEngine(model, params, slots=2, cache_len=64,
+                           prefill_buckets=(16,), rng_seed=0)
+    cold = eng2.generate(ps, max_new_tokens=8, temperature=0.0)
+    assert hot != cold
