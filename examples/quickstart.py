@@ -1,10 +1,39 @@
-"""Quickstart: the Pervasive Context Management API in ~60 lines.
+"""Quickstart: the PCMClient session API in ~100 lines.
 
-Shows the paper's Fig. 5 transformation: an expensive ``load_model`` context
-builder decoupled from cheap ``infer_model`` tasks, submitted through the
-context-aware scheduler. The context (weights + compiled executables + KV
-pools) is built ONCE per worker and reused by every subsequent task —
-including after a no-warning preemption.
+The paper's Fig. 5 transformation, session-style: an expensive
+``load_model`` context builder is declared ONCE as a first-class
+ContextHandle, decoupled from cheap ``infer_model`` tasks submitted in
+bulk. The context (weights + compiled executables + KV pools) is built
+once per worker and reused by every subsequent task — including after a
+no-warning preemption.
+
+The SAME workload function runs against two backends:
+
+  1. the LIVE backend (PCMManager): real JAX inference on this host;
+  2. the SIMULATOR backend: a dry run against the paper's calibrated
+     device cost models — no model is built, Futures resolve to modeled
+     placement/timing records. This is how cluster-scale figures are
+     explored before burning GPU hours.
+
+Migrating from the PR-0 decorator API:
+
+    @context_app(context=(load_model, ("smollm2-1.7b",)))   # old
+    def infer_model(texts): ...
+    fut = infer_model(texts); fut.result()
+
+becomes
+
+    client = PCMClient(n_workers=2)
+    ctx = client.context(load_model, "smollm2-1.7b")        # new: handle
+    @client.task(context=ctx)
+    def infer_model(texts): ...
+    fut = infer_model(texts); fut.result(timeout=120)
+
+``context_app``/``load_context`` still work as shims, but the client adds
+context pinning/warm-up/residency, multi-context tasks
+(``contexts={"a": h1, "b": h2}`` + ``load_context("a.var")``), bulk
+``client.map(...) -> FutureBatch`` with ``as_completed()``/``gather()``,
+priorities, and backend swapping.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,8 +43,7 @@ import time
 import jax
 
 from repro.configs import get_reduced_config
-from repro.core import (ContextMode, PCMManager, context_app, load_context,
-                        make_recipe, set_default_manager)
+from repro.core import ContextMode, PCMClient, SimulatorBackend, load_context
 from repro.data.tokenizer import HashTokenizer
 from repro.models import build_model
 from repro.serving import InferenceEngine
@@ -34,7 +62,6 @@ def load_model(arch: str):
 
 
 # ---- 2. the inference task (the paper's `infer_model`) --------------------
-@context_app(context=(load_model, ("smollm2-1.7b",)))
 def infer_model(texts):
     engine = load_context("engine")
     tok = load_context("tokenizer")
@@ -42,29 +69,56 @@ def infer_model(texts):
     return engine.generate(prompts, max_new_tokens=4)
 
 
-def main():
-    mgr = PCMManager(mode=ContextMode.FULL, n_workers=2)
-    set_default_manager(mgr)
+# ---- 3. one workload, any backend -----------------------------------------
+def run_workload(client: PCMClient, claims, batch_size=4):
+    """Declare the context, warm it, sweep the claims. Identical code for
+    the live runtime and the dry-run simulator."""
+    ctx = client.context(load_model, "smollm2-1.7b",
+                         name="smollm2.verifier")
+    ctx.warm_up()            # materialize off the task critical path
+    with ctx:                # pinned for the block: survives mode eviction
+        batch = client.map(infer_model, claims, batch_size=batch_size,
+                           context=ctx)
+        results = batch.gather(timeout=600)
+    tiers = {w: t.name for w, t in ctx.residency().items()}
+    return results, tiers
 
+
+def main():
     claims = [f"claim number {i} about the capital of somewhere"
               for i in range(12)]
-    t0 = time.monotonic()
-    futures = [infer_model([c]) for c in claims]       # submit all tasks
-    results = [f.result() for f in futures]            # PCM schedules them
-    dt = time.monotonic() - t0
 
-    st = mgr.stats()
-    print(f"verified {len(results)} claims in {dt:.2f}s")
-    print(f"context built {st['cold_invocations']}x (once per worker), "
-          f"reused {st['warm_invocations']}x")
+    print("== live backend: real JAX inference ==")
+    client = PCMClient(mode=ContextMode.FULL, n_workers=2)
+    t0 = time.monotonic()
+    results, tiers = run_workload(client, claims)
+    st = client.stats()
+    print(f"verified {sum(len(r) for r in results)} claims in "
+          f"{time.monotonic() - t0:.2f}s")
+    print(f"context prewarmed on {len(tiers)} workers "
+          f"({st['cold_invocations']} cold invocations, "
+          f"{st['warm_invocations']} warm); residency: {tiers}")
 
     # no-warning preemption: the warm worker dies, tasks requeue elsewhere
-    victim = next(iter(mgr.workers))
+    victim = client.workers[0]
     print(f"preempting worker {victim} (no warning)...")
-    mgr.preempt_worker(victim)
-    more = [infer_model([c]) for c in claims[:4]]
-    assert all(f.result() is not None for f in more)
+    client.backend.preempt_worker(victim)
+    ctx = client.context(load_model, "smollm2-1.7b", name="smollm2.verifier")
+    more = client.map(infer_model, claims[:4], batch_size=2, context=ctx)
+    for fut in more.as_completed(timeout=600):
+        assert fut.result() is not None
     print("requeued tasks completed on the surviving warm worker.")
+
+    print("== simulator backend: same workload, modeled cluster time ==")
+    sim = PCMClient(backend=SimulatorBackend(n_workers=8, profile="a10",
+                                             mode=ContextMode.FULL))
+    sim_claims = [f"claim {i}" for i in range(800)]
+    results, tiers = run_workload(sim, sim_claims, batch_size=50)
+    st = sim.stats()
+    print(f"modeled {sum(r.n_items for r in results)} inferences on 8xA10 "
+          f"in {st['now']:.0f} simulated seconds "
+          f"({st['warm_starts']} warm / {st['cold_starts']} cold starts, "
+          f"{st['p2p_transfers']} P2P bootstraps)")
 
 
 if __name__ == "__main__":

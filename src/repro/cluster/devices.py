@@ -105,10 +105,13 @@ def fs_fetch_bytes(recipe: ContextRecipe, cost: CostModel) -> int:
 
 def load_seconds(profile: DeviceProfile, recipe: ContextRecipe,
                  cost: CostModel, from_disk: bool,
-                 page_cached: bool = False) -> float:
+                 page_cached: bool = False,
+                 include_warmup: bool = True) -> float:
     """disk -> host RAM -> HBM (+ framework warm-up). The paper's
-    'minutes-long' startup, minus the network fetch handled separately."""
-    t = cost.framework_warmup_s
+    'minutes-long' startup, minus the network fetch handled separately.
+    ``include_warmup=False`` for the 2nd..Nth context of a multi-context
+    start: the CUDA/XLA init is paid once per process, not per context."""
+    t = cost.framework_warmup_s if include_warmup else 0.0
     if from_disk:
         factor = cost.page_cache_factor if page_cached else 1.0
         t += factor * recipe.transfer_bytes / (profile.disk_gbps * GB)

@@ -36,6 +36,18 @@ class EventLoop:
     def schedule_in(self, dt: float, fn: Callable) -> Event:
         return self.schedule(self.now + dt, fn)
 
+    def run_one(self) -> bool:
+        """Process exactly one (non-cancelled) event; False when empty."""
+        while self._heap:
+            ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
+            self.now = ev.t
+            self.processed += 1
+            ev.fn()
+            return True
+        return False
+
     def run(self, until: Optional[float] = None, max_events: int = 10_000_000):
         while self._heap and self.processed < max_events:
             if until is not None and self._heap[0].t > until:

@@ -16,14 +16,87 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.cluster.devices import (CostModel, DeviceProfile, PROFILES,
-                                   fs_fetch_bytes, load_seconds,
-                                   task_seconds)
+                                   fs_fetch_bytes, inference_seconds,
+                                   load_seconds)
 from repro.cluster.events import Event, EventLoop
 from repro.core.context import ContextRecipe
 from repro.core.factory import WorkerFactory
 from repro.core.scheduler import Action, ContextAwareScheduler, Task
 from repro.core.store import ContextMode, ContextStore, Tier
 from repro.core.transfer import TransferPlanner
+
+
+def modeled_start_seconds(a: Action, task: Task, profile: DeviceProfile,
+                          scheduler: ContextAwareScheduler,
+                          planner: TransferPlanner, cost: CostModel,
+                          mode: ContextMode, page_cached: set, stats: dict,
+                          now: float) -> float:
+    """Modeled duration (startup + execution) of one start action.
+
+    The single cost model behind BOTH dry-run surfaces (ClusterSimulator
+    sweeps and the SimulatorBackend behind PCMClient). Updates ``stats``
+    counters (warm/disk/cold/p2p/fs) and the ``page_cached`` working-set
+    tracker in place.
+
+    Startup is charged only for contexts not already device-resident
+    (``a.device_resident``): a recipe on the worker's local disk
+    (``a.disk_resident``) pays only the disk->HBM load, colder ones pay a
+    planned transfer too, and the framework warm-up is paid ONCE per start
+    rather than once per context. Execution charges one task dispatch
+    overhead plus the per-item inference cost of EVERY attached context (a
+    multi-context pipeline runs each engine per item); contextless tasks
+    pay overheads only.
+    """
+    startup = 0.0
+    if a.warm:     # includes contextless tasks (always-warm)
+        stats["warm"] += 1
+    else:
+        if a.had_disk:
+            stats["disk"] += 1
+        else:
+            stats["cold"] += 1
+        disk_resident = a.disk_resident or (False,) * len(a.recipes)
+        device_resident = a.device_resident or (False,) * len(a.recipes)
+        loaded_any = False
+        for recipe, on_disk, on_device in zip(a.recipes, disk_resident,
+                                              device_resident):
+            if on_device:
+                continue     # already in HBM: nothing to fetch or load
+            key = recipe.key()
+            if not on_disk:
+                donors = {
+                    wid for wid, info in scheduler.workers.items()
+                    if wid != a.worker_id
+                    and info.store.has(key, Tier.LOCAL_DISK)}
+                plan = planner.plan(
+                    recipe.transfer_bytes, donors, now,
+                    allow_p2p=mode != ContextMode.AGNOSTIC,
+                    fs_nbytes=fs_fetch_bytes(recipe, cost))
+                stats["p2p" if plan.p2p else "fs"] += 1
+                startup += plan.seconds
+            startup += load_seconds(
+                profile, recipe, cost, from_disk=True,
+                page_cached=(a.worker_id, key) in page_cached,
+                include_warmup=not loaded_any)
+            loaded_any = True
+            page_cached.add((a.worker_id, key))
+    exec_s = cost.task_overhead_s + task.n_items * (
+        sum(inference_seconds(profile, r, cost) for r in task.recipes)
+        or cost.inference_overhead_s)
+    if exec_s > cost.page_cache_evict_s:
+        # the inference working set evicts the cached model/env pages
+        for recipe in a.recipes:
+            page_cached.discard((a.worker_id, recipe.key()))
+    return startup + exec_s
+
+
+def modeled_fetch_seconds(a: Action, profile: DeviceProfile,
+                          cost: CostModel, stats: dict) -> float:
+    """Modeled duration of one prefetch action (transfer + load), shared by
+    ClusterSimulator and SimulatorBackend. Updates transfer stats."""
+    stats["p2p" if a.plan.p2p else "fs"] += 1
+    return a.plan.seconds + load_seconds(profile, a.recipe, cost,
+                                         from_disk=True)
 
 
 @dataclass
@@ -154,10 +227,8 @@ class ClusterSimulator:
                     ev.cancel()
 
     def _start_fetch(self, a: Action):
-        profile = self.profiles[a.worker_id]
-        dur = a.plan.seconds + load_seconds(profile, a.recipe, self.cost,
-                                            from_disk=True)
-        self._stats["p2p" if a.plan.p2p else "fs"] += 1
+        dur = modeled_fetch_seconds(a, self.profiles[a.worker_id],
+                                    self.cost, self._stats)
         wid, key = a.worker_id, a.recipe.key()
 
         def done():
@@ -174,35 +245,10 @@ class ClusterSimulator:
     def _start_task(self, a: Action):
         profile = self.profiles[a.worker_id]
         task = self.scheduler.tasks[a.task_id]
-        now = self.loop.now
-        key = a.recipe.key()
-        startup = 0.0
-        if a.warm:
-            self._stats["warm"] += 1
-        else:
-            if a.had_disk:
-                self._stats["disk"] += 1
-            else:
-                self._stats["cold"] += 1
-                donors = {
-                    wid for wid, info in self.scheduler.workers.items()
-                    if wid != a.worker_id
-                    and info.store.has(key, Tier.LOCAL_DISK)}
-                plan = self.planner.plan(
-                    a.recipe.transfer_bytes, donors, now,
-                    allow_p2p=self.mode != ContextMode.AGNOSTIC,
-                    fs_nbytes=fs_fetch_bytes(a.recipe, self.cost))
-                self._stats["p2p" if plan.p2p else "fs"] += 1
-                startup += plan.seconds
-            startup += load_seconds(
-                profile, a.recipe, self.cost, from_disk=True,
-                page_cached=(a.worker_id, key) in self._page_cached)
-            self._page_cached.add((a.worker_id, key))
-        exec_s = task_seconds(profile, a.recipe, self.cost, task.n_items)
-        if exec_s > self.cost.page_cache_evict_s:
-            # the inference working set evicts the cached model/env pages
-            self._page_cached.discard((a.worker_id, key))
-        dur = startup + exec_s
+        dur = modeled_start_seconds(a, task, profile, self.scheduler,
+                                    self.planner, self.cost, self.mode,
+                                    self._page_cached, self._stats,
+                                    self.loop.now)
         wid, tid = a.worker_id, a.task_id
 
         def done():

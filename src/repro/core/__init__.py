@@ -1,17 +1,37 @@
 """Pervasive Context Management — the paper's primary contribution.
 
-context.py   ContextRecipe / Context (first-class LLM contexts)
-store.py     tiered per-worker residency (agnostic/partial/full modes)
-library.py   persistent executor holding materialized contexts
-transfer.py  shared-FS vs peer-to-peer bootstrap planning
-scheduler.py context-aware placement, requeue-on-preemption, stragglers
-factory.py   reactive opportunistic pool reconciliation
-manager.py   live in-process runtime (real JAX execution)
-api.py       @context_app / load_context user API (paper Fig. 5)
+The user entry point is the **PCMClient session API** (api.py): declare
+contexts as first-class handles (``client.context`` -> pin / release /
+warm_up / residency), attach one or several named contexts to tasks
+(``@client.task(contexts={...})``), and submit work as Futures
+(``client.submit``) or FutureBatches (``client.map`` ->
+``as_completed()`` / ``gather()``, per-future timeouts and callbacks,
+priority hints). The client drives a pluggable **ExecutionBackend**
+(backend.py): ``PCMManager`` runs tasks live (real JAX inference);
+``SimulatorBackend`` dry-runs the identical application against the
+discrete-event cluster model — swap one constructor argument to go from
+serving to paper-figure simulation.
+
+Module map:
+  context.py   ContextRecipe / Context (first-class LLM contexts)
+  store.py     tiered per-worker residency + pinning (agnostic/partial/full)
+  library.py   persistent executor holding materialized (named) contexts
+  transfer.py  shared-FS vs peer-to-peer bootstrap planning
+  scheduler.py context-aware placement (multi-context, contextless,
+               priority hints), requeue-on-preemption, stragglers
+  factory.py   reactive opportunistic pool reconciliation
+  manager.py   live in-process runtime (real JAX execution) + Future
+  backend.py   ExecutionBackend protocol + SimulatorBackend dry-run
+  api.py       PCMClient / ContextHandle / FutureBatch (+ legacy
+               @context_app shim, paper Fig. 5)
 """
 
-from repro.core.api import (context_app, get_default_manager, load_context,
-                            make_recipe, set_default_manager)
+from repro.core.api import (ContextHandle, FutureBatch, PCMClient,
+                            context_app, get_default_client,
+                            get_default_manager, load_context, make_recipe,
+                            set_default_manager)
+from repro.core.backend import (ExecutionBackend, LiveBackend, SimTaskResult,
+                                SimulatorBackend)
 from repro.core.context import Context, ContextRecipe, materialize
 from repro.core.library import (Library, current_context,
                                 load_variable_from_context)
@@ -22,10 +42,13 @@ from repro.core.store import ContextMode, ContextStore, Tier
 from repro.core.transfer import TransferPlan, TransferPlanner
 
 __all__ = [
-    "context_app", "get_default_manager", "load_context", "make_recipe",
-    "set_default_manager", "Context", "ContextRecipe", "materialize",
-    "Library", "current_context", "load_variable_from_context", "Future",
-    "PCMManager", "Action", "Completion", "ContextAwareScheduler", "Task",
-    "WorkerPhase", "ContextMode", "ContextStore", "Tier", "TransferPlan",
+    "ContextHandle", "FutureBatch", "PCMClient", "context_app",
+    "get_default_client", "get_default_manager", "load_context",
+    "make_recipe", "set_default_manager", "ExecutionBackend", "LiveBackend",
+    "SimTaskResult", "SimulatorBackend", "Context", "ContextRecipe",
+    "materialize", "Library", "current_context",
+    "load_variable_from_context", "Future", "PCMManager", "Action",
+    "Completion", "ContextAwareScheduler", "Task", "WorkerPhase",
+    "ContextMode", "ContextStore", "Tier", "TransferPlan",
     "TransferPlanner",
 ]

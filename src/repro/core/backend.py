@@ -1,0 +1,309 @@
+"""Pluggable execution backends behind the PCMClient session API.
+
+An ``ExecutionBackend`` is anything that can accept PCM task submissions
+and resolve their Futures. Two implementations ship:
+
+  * :class:`repro.core.manager.PCMManager` — the LIVE backend: tasks run
+    real JAX inference in-process, contexts are actual (weights,
+    executables, KV pool) objects.
+  * :class:`SimulatorBackend` (here) — the DRY-RUN backend: the identical
+    ContextAwareScheduler drives a discrete-event clock with the paper's
+    calibrated device cost models. Task functions are **never executed**;
+    each Future resolves to a :class:`SimTaskResult` describing the modeled
+    placement and timing. This is how one application script doubles as a
+    paper-figure simulation: ``PCMClient(backend=SimulatorBackend(...))``.
+
+Both backends share the scheduler, the tiered ContextStore residency
+bookkeeping, pinning, and the transfer planner — the only thing that
+changes is whether wall-clock work happens.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Protocol,
+                    runtime_checkable)
+
+from repro.core.context import ContextRecipe
+from repro.core.manager import Future, PCMManager
+from repro.core.scheduler import Action, ContextAwareScheduler, Task
+from repro.core.store import ContextMode, ContextStore, Tier
+from repro.core.transfer import TransferPlanner
+
+
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """What the PCMClient needs from a runtime. ``PCMManager`` and
+    ``SimulatorBackend`` both satisfy it."""
+
+    def submit(self, fn: Callable, args: tuple = (), kwargs: dict = None,
+               recipe: Optional[ContextRecipe] = None,
+               recipes: Optional[Mapping[str, ContextRecipe]] = None,
+               n_items: int = 1, priority: int = 0) -> Future: ...
+
+    def step(self) -> bool: ...
+
+    def run_until_idle(self) -> int: ...
+
+    def warm_up(self, recipe: ContextRecipe,
+                worker_ids: Optional[List[str]] = None) -> List[str]: ...
+
+    def pin_context(self, recipe: ContextRecipe) -> None: ...
+
+    def release_context(self, recipe: ContextRecipe) -> None: ...
+
+    def residency(self, recipe: ContextRecipe) -> Dict[str, Tier]: ...
+
+    def lookup_task(self, task_id: str) -> Optional[Task]: ...
+
+    @property
+    def outstanding(self) -> int: ...
+
+    def stats(self) -> Dict: ...
+
+
+LiveBackend = PCMManager     # the live runtime under its backend name
+
+
+@dataclass(frozen=True)
+class SimTaskResult:
+    """What a dry-run Future resolves to: the modeled execution record."""
+
+    task_id: str
+    worker_id: str
+    n_items: int
+    finished_at: float        # modeled seconds since t=0
+    duration: float           # modeled startup + execution seconds
+    warm: bool                # all contexts device-resident at start
+
+
+class SimulatorBackend:
+    """Discrete-event dry-run ExecutionBackend.
+
+    Runs the production ContextAwareScheduler against modeled time using
+    the calibrated device cost models from :mod:`repro.cluster.devices`.
+    ``capacity_fn`` (a trace from :mod:`repro.cluster.traces`) makes the
+    pool opportunistic; without one, a static pool of ``n_workers`` x
+    ``profile`` joins at t=0.
+    """
+
+    def __init__(self, n_workers: int = 4, profile: str = "a10",
+                 mode: ContextMode = ContextMode.FULL,
+                 cost=None, capacity_fn: Optional[Callable] = None,
+                 planner: Optional[TransferPlanner] = None,
+                 straggler_factor: float = 0.0,
+                 reconcile_every: float = 15.0):
+        # cluster imports stay local: core does not depend on cluster at
+        # module load, so the live path never pays for the simulator
+        from repro.cluster.devices import PROFILES, CostModel
+        from repro.cluster.events import EventLoop
+
+        self.mode = mode
+        self.cost = cost or CostModel()
+        self.loop = EventLoop()
+        self.planner = planner or TransferPlanner()
+        self.scheduler = ContextAwareScheduler(
+            mode=mode, planner=self.planner,
+            straggler_factor=straggler_factor)
+        self._profiles_db = PROFILES
+        self.profiles: Dict[str, Any] = {}
+        self.reconcile_every = reconcile_every
+        self._futures: Dict[str, Future] = {}
+        self._unresolved = 0
+        self._ids = itertools.count()
+        self._task_ids = itertools.count()
+        self._task_events: Dict[str, Any] = {}
+        self._fetch_events: Dict[str, Any] = {}
+        self._page_cached: set = set()
+        self._pinned: set = set()
+        self._pending: List[Action] = []
+        self._stats = dict(cold=0, warm=0, disk=0, preempt=0, p2p=0, fs=0)
+        self._reconcile_ev = None
+        self.factory = None
+        if capacity_fn is not None:
+            from repro.core.factory import WorkerFactory
+            self.factory = WorkerFactory(capacity_fn)
+            self._reconcile()
+        else:
+            for _ in range(n_workers):
+                self.add_worker(profile)
+
+    # ------------------------------------------------------------- pool ----
+    def add_worker(self, profile: str = "a10") -> str:
+        wid = f"sim{next(self._ids):03d}"
+        self._join(wid, profile)
+        return wid
+
+    def _join(self, worker_id: str, profile_name: str):
+        prof = self._profiles_db[profile_name]
+        store = ContextStore(device_bytes=int(prof.hbm_gb * 1024 ** 3))
+        store.pinned.update(self._pinned)
+        self.profiles[worker_id] = prof
+        self._apply(self.scheduler.on_worker_join(
+            worker_id, self.loop.now, profile=prof, store=store))
+
+    def preempt_worker(self, worker_id: str):
+        self._stats["preempt"] += 1
+        for evmap in (self._task_events, self._fetch_events):
+            ev = evmap.pop(worker_id, None)
+            if ev:
+                ev.cancel()
+        self._page_cached = {(w, k) for (w, k) in self._page_cached
+                             if w != worker_id}
+        self.profiles.pop(worker_id, None)
+        self._apply(self.scheduler.on_worker_leave(worker_id, self.loop.now))
+
+    def _reconcile(self):
+        now = self.loop.now
+        for d in self.factory.reconcile(now):
+            if d.kind == "join":
+                self._join(d.worker_id, d.profile_name)
+            else:
+                self.preempt_worker(d.worker_id)
+        self._reconcile_ev = None
+        if self.scheduler.outstanding:
+            self._reconcile_ev = self.loop.schedule_in(
+                self.reconcile_every, self._reconcile)
+
+    # ------------------------------------------------------------ submit ---
+    def submit(self, fn: Callable, args: tuple = (), kwargs: dict = None,
+               recipe: Optional[ContextRecipe] = None,
+               recipes: Optional[Mapping[str, ContextRecipe]] = None,
+               n_items: int = 1, priority: int = 0) -> Future:
+        """Dry-run submission: ``fn`` is recorded but never called."""
+        named: Dict[str, ContextRecipe] = dict(recipes or {})
+        if recipe is not None and not named:
+            named = {recipe.name: recipe}
+        task_id = f"s{next(self._task_ids):05d}"
+        task = Task(task_id=task_id, recipes=tuple(named.values()),
+                    context_names=tuple(named.keys()), n_items=n_items,
+                    priority=priority, payload=(fn, args, kwargs or {}))
+        fut = Future(task_id, self)
+        self._futures[task_id] = fut
+        self._unresolved += 1
+        fut.add_done_callback(self._on_resolved)
+        self._apply(self.scheduler.submit(task, self.loop.now))
+        if self.factory is not None and self._reconcile_ev is None:
+            self._reconcile_ev = self.loop.schedule_in(
+                self.reconcile_every, self._reconcile)
+        return fut
+
+    # ----------------------------------------------------------- contexts --
+    def warm_up(self, recipe: ContextRecipe,
+                worker_ids: Optional[List[str]] = None) -> List[str]:
+        """Mark the context resident (modeled as prewarmed before t=0)."""
+        warmed = []
+        for wid in list(worker_ids or self.scheduler.workers):
+            info = self.scheduler.workers.get(wid)
+            if info is None:
+                continue
+            info.store.admit_recipe(recipe, self.mode.persist_tier,
+                                    now=self.loop.now)
+            warmed.append(wid)
+        return warmed
+
+    def pin_context(self, recipe: ContextRecipe):
+        key = recipe.key()
+        self._pinned.add(key)
+        for info in self.scheduler.workers.values():
+            info.store.pin(key)
+
+    def release_context(self, recipe: ContextRecipe):
+        key = recipe.key()
+        self._pinned.discard(key)
+        for info in self.scheduler.workers.values():
+            info.store.unpin(key)
+
+    def residency(self, recipe: ContextRecipe) -> Dict[str, Tier]:
+        key = recipe.key()
+        return {wid: info.store.highest_tier(key)
+                for wid, info in self.scheduler.workers.items()}
+
+    # --------------------------------------------------------- execution ---
+    def step(self) -> bool:
+        """Advance modeled time by one event; False when none pending."""
+        return self.loop.run_one()
+
+    def _on_resolved(self, fut: Future):
+        self._unresolved -= 1
+
+    def run_until_idle(self) -> int:
+        n = 0
+        while self._unresolved and self.loop.run_one():
+            n += 1
+        return n
+
+    def _apply(self, actions: List[Action]):
+        for a in actions:
+            if a.kind == "start":
+                self._start_task(a)
+            elif a.kind == "fetch":
+                self._start_fetch(a)
+            elif a.kind == "cancel":
+                ev = self._task_events.pop(a.worker_id, None)
+                if ev:
+                    ev.cancel()
+
+    def _start_fetch(self, a: Action):
+        from repro.cluster.simulator import modeled_fetch_seconds
+        dur = modeled_fetch_seconds(a, self.profiles[a.worker_id],
+                                    self.cost, self._stats)
+        wid, key = a.worker_id, a.recipe.key()
+
+        def done():
+            self._fetch_events.pop(wid, None)
+            info = self.scheduler.workers.get(wid)
+            if info is not None:
+                info.store.admit_recipe(a.recipe, Tier.DEVICE,
+                                        now=self.loop.now)
+            self._apply(self.scheduler.on_fetch_done(wid, key,
+                                                     self.loop.now))
+
+        self._fetch_events[wid] = self.loop.schedule_in(dur, done)
+
+    def _start_task(self, a: Action):
+        from repro.cluster.simulator import modeled_start_seconds
+        profile = self.profiles[a.worker_id]
+        task = self.scheduler.tasks[a.task_id]
+        dur = modeled_start_seconds(a, task, profile, self.scheduler,
+                                    self.planner, self.cost, self.mode,
+                                    self._page_cached, self._stats,
+                                    self.loop.now)
+        wid, tid = a.worker_id, a.task_id
+        warm_start = a.warm
+
+        def done():
+            self._task_events.pop(wid, None)
+            fut = self._futures.get(task.duplicates_of or tid)
+            if fut:
+                fut.set_result(SimTaskResult(
+                    task_id=task.duplicates_of or tid, worker_id=wid,
+                    n_items=task.n_items, finished_at=self.loop.now,
+                    duration=dur, warm=warm_start))
+            self._apply(self.scheduler.on_task_done(wid, tid, self.loop.now))
+
+        self._task_events[wid] = self.loop.schedule_in(dur, done)
+
+    # ------------------------------------------------------------- status --
+    @property
+    def outstanding(self) -> int:
+        return self.scheduler.outstanding
+
+    def lookup_task(self, task_id: str) -> Optional[Task]:
+        return self.scheduler.tasks.get(task_id)
+
+    @property
+    def now(self) -> float:
+        """Modeled seconds since the backend was created."""
+        return self.loop.now
+
+    def stats(self) -> Dict:
+        return {"now": self.loop.now,
+                "completed": len(self.scheduler.completions),
+                "cold_starts": self._stats["cold"],
+                "warm_starts": self._stats["warm"],
+                "disk_hits": self._stats["disk"],
+                "preemptions": self._stats["preempt"],
+                "p2p_transfers": self._stats["p2p"],
+                "fs_transfers": self._stats["fs"]}

@@ -22,6 +22,28 @@ from typing import Any, Callable, Dict, Optional, Tuple
 GB = 1024 ** 3
 
 
+def _arg_token(x: Any) -> str:
+    """Stable identity token for a builder argument. ``repr`` alone is not
+    enough: numpy/JAX arrays truncate their repr (distinct arrays would
+    collide), so array-likes hash their bytes. Objects with default reprs
+    (memory addresses) stay distinct per object — conservative: logically
+    equal but distinct objects rebuild rather than alias."""
+    if isinstance(x, (str, int, float, bool, bytes, type(None))):
+        return repr(x)
+    if isinstance(x, (tuple, list)):
+        return "[" + ",".join(_arg_token(i) for i in x) + "]"
+    if isinstance(x, dict):
+        items = sorted(x.items(), key=lambda kv: repr(kv[0]))
+        return "{" + ",".join(f"{_arg_token(k)}:{_arg_token(v)}"
+                              for k, v in items) + "}"
+    if hasattr(x, "__array__") and hasattr(x, "shape"):   # numpy/JAX array
+        import numpy as np
+        arr = np.asarray(x)
+        digest = hashlib.sha256(arr.tobytes()).hexdigest()[:16]
+        return f"array{arr.shape}:{arr.dtype}:{digest}"
+    return f"{type(x).__qualname__}:{repr(x)}"
+
+
 @dataclass(frozen=True)
 class ContextRecipe:
     """Declarative description of an LLM context.
@@ -44,14 +66,23 @@ class ContextRecipe:
     version: int = 0
 
     def key(self) -> str:
+        # cached: the scheduler recomputes keys in per-dispatch hot loops
+        cached = self.__dict__.get("_key")
+        if cached is not None:
+            return cached
         ident = {
             "name": self.name, "model_key": self.model_key,
             "artifact": self.artifact_bytes, "env": self.env_bytes,
             "version": self.version,
             "builder": getattr(self.builder, "__qualname__", str(self.builder)),
+            # same builder with different inputs is a DIFFERENT context
+            "args": _arg_token(self.builder_args),
+            "kwargs": _arg_token(self.builder_kwargs),
         }
         blob = json.dumps(ident, sort_keys=True)
-        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+        key = hashlib.sha256(blob.encode()).hexdigest()[:16]
+        object.__setattr__(self, "_key", key)
+        return key
 
     @property
     def transfer_bytes(self) -> int:

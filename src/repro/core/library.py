@@ -7,6 +7,12 @@ resident context. On TPU the materialization includes AOT compilation, so
 the Library doubles as a compile cache: the (weights, executables, KV pool)
 triple survives across tasks.
 
+A task may hold SEVERAL named contexts at once (e.g. a verifier engine and
+a reranker engine); ``invoke`` installs the whole mapping and
+``load_variable_from_context`` resolves both unqualified variable names
+(``"engine"``, searched across the installed contexts) and qualified
+``"ctxname.var"`` references.
+
 ``current_context()`` is the in-task accessor — the JAX-world analogue of
 the paper's ``load_variable_from_serverless``.
 """
@@ -16,7 +22,7 @@ from __future__ import annotations
 import contextvars
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Mapping, Optional, Set
 
 from repro.core.context import Context, ContextRecipe, materialize
 
@@ -25,20 +31,48 @@ _current: contextvars.ContextVar = contextvars.ContextVar(
 
 
 def current_context() -> Any:
-    """Inside a PCM task: the context value built by the recipe's builder."""
-    ctx = _current.get()
-    if ctx is None:
+    """Inside a PCM task: the context value built by the recipe's builder.
+
+    With a single installed context this is that context's value; with
+    multiple named contexts it is a ``{name: value}`` mapping.
+    """
+    installed: Optional[Dict[str, Context]] = _current.get()
+    if not installed:
         raise RuntimeError("no PCM context installed — is this function "
                            "running under a Library / PCMManager?")
-    return ctx.value
+    if len(installed) == 1:
+        return next(iter(installed.values())).value
+    return {name: ctx.value for name, ctx in installed.items()}
 
 
 def load_variable_from_context(name: str) -> Any:
-    """Paper Fig. 5 compatibility shim: context builders return dicts."""
-    value = current_context()
-    if not isinstance(value, dict) or name not in value:
-        raise KeyError(f"context has no variable {name!r}")
-    return value[name]
+    """Resolve a context variable for the running task.
+
+    ``"var"``          searched across every installed context whose value
+                       is a dict; must match exactly one.
+    ``"ctxname.var"``  looked up in the named context (multi-context tasks).
+    """
+    installed: Optional[Dict[str, Context]] = _current.get()
+    if not installed:
+        raise RuntimeError("no PCM context installed — is this function "
+                           "running under a Library / PCMManager?")
+    if "." in name:
+        ctx_name, var = name.split(".", 1)
+        if ctx_name in installed:
+            value = installed[ctx_name].value
+            if isinstance(value, dict) and var in value:
+                return value[var]
+            raise KeyError(f"context {ctx_name!r} has no variable {var!r}")
+    hits = [(cname, ctx.value[name]) for cname, ctx in installed.items()
+            if isinstance(ctx.value, dict) and name in ctx.value]
+    if len(hits) == 1:
+        return hits[0][1]
+    if not hits:
+        raise KeyError(f"no installed context has variable {name!r} "
+                       f"(contexts: {sorted(installed)})")
+    raise KeyError(f"variable {name!r} is ambiguous across contexts "
+                   f"{sorted(c for c, _ in hits)} — qualify as "
+                   f"'<context>.{name}'")
 
 
 @dataclass
@@ -55,6 +89,7 @@ class Library:
     def __init__(self, worker_id: str = "local"):
         self.worker_id = worker_id
         self._contexts: Dict[str, Context] = {}
+        self.pinned: Set[str] = set()
         self.records: List[InvocationRecord] = []
         self.build_seconds_total = 0.0
 
@@ -75,11 +110,23 @@ class Library:
         """Adopt a context transferred from a peer (P2P bootstrap)."""
         self._contexts[ctx.key] = ctx
 
-    def evict(self, key: str) -> Optional[Context]:
+    def pin(self, key: str):
+        self.pinned.add(key)
+
+    def unpin(self, key: str):
+        self.pinned.discard(key)
+
+    def evict(self, key: str, force: bool = False) -> Optional[Context]:
+        if key in self.pinned and not force:
+            return None
         return self._contexts.pop(key, None)
 
-    def evict_all(self):
-        self._contexts.clear()
+    def evict_all(self, force: bool = False):
+        if force or not self.pinned:
+            self._contexts.clear()
+        else:
+            self._contexts = {k: v for k, v in self._contexts.items()
+                              if k in self.pinned}
 
     def context(self, key: str) -> Context:
         return self._contexts[key]
@@ -91,25 +138,37 @@ class Library:
     # -------------------------------------------------------- invocation --
     def invoke(self, fn: Callable, args: tuple = (), kwargs: dict = None,
                recipe: Optional[ContextRecipe] = None,
+               recipes: Optional[Mapping[str, ContextRecipe]] = None,
                task_id: str = "") -> Any:
-        """Execute fn with the recipe's context installed.
+        """Execute fn with the recipes' contexts installed.
 
-        ``cold`` in the record marks invocations that had to materialize the
-        context first (the startup the paper amortizes away)."""
+        ``recipes`` is an ordered ``{name: recipe}`` mapping (multi-context
+        tasks); ``recipe`` is the single-context shorthand, installed under
+        its own ``recipe.name``. ``cold`` in the record marks invocations
+        that had to materialize at least one context first (the startup the
+        paper amortizes away)."""
         kwargs = kwargs or {}
+        named: Dict[str, ContextRecipe] = dict(recipes or {})
+        if recipe is not None and recipe.key() not in {
+                r.key() for r in named.values()}:
+            named.setdefault(recipe.name, recipe)
         t0 = time.monotonic()
         cold = False
         token = None
-        if recipe is not None:
-            cold = not self.has(recipe.key())
-            ctx = self.ensure(recipe)
-            ctx.touch()
-            token = _current.set(ctx)
+        if named:
+            installed: Dict[str, Context] = {}
+            for cname, rec in named.items():
+                cold = cold or not self.has(rec.key())
+                ctx = self.ensure(rec)
+                ctx.touch()
+                installed[cname] = ctx
+            token = _current.set(installed)
         try:
             return fn(*args, **kwargs)
         finally:
             if token is not None:
                 _current.reset(token)
             self.records.append(InvocationRecord(
-                task_id=task_id, ctx_key=recipe.key() if recipe else "",
+                task_id=task_id,
+                ctx_key=",".join(r.key() for r in named.values()),
                 seconds=time.monotonic() - t0, cold=cold))

@@ -10,6 +10,10 @@ Live preemption (``preempt_worker``) drops the worker and its device-tier
 contexts mid-flight; the scheduler requeues and the task re-runs on a warm
 worker — the end-to-end mechanism of the paper, measurable with real
 inference (examples/opportunistic_serving.py).
+
+PCMManager implements the ``ExecutionBackend`` protocol
+(:mod:`repro.core.backend`): the PCMClient session API drives it
+interchangeably with the simulator-backed dry-run backend.
 """
 
 from __future__ import annotations
@@ -17,7 +21,7 @@ from __future__ import annotations
 import itertools
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Mapping, Optional
 
 from repro.core.context import ContextRecipe
 from repro.core.library import Library
@@ -27,23 +31,84 @@ from repro.core.store import ContextStore, Tier
 from repro.core.transfer import TransferPlanner
 
 
-@dataclass
 class Future:
-    task_id: str
-    _manager: "PCMManager"
-    _value: Any = None
-    _ready: bool = False
-    error: Optional[BaseException] = None
+    """Handle to one submitted task. Resolved by the backend's event loop;
+    ``result(timeout=...)`` drives the backend until the value is ready."""
 
-    def result(self) -> Any:
+    def __init__(self, task_id: str, backend):
+        self.task_id = task_id
+        self._backend = backend
+        self._value: Any = None
+        self._ready = False
+        self.error: Optional[BaseException] = None
+        self._callbacks: List[Callable[["Future"], None]] = []
+
+    # ------------------------------------------------------- resolution ----
+    def set_result(self, value: Any):
+        if self._ready:
+            return
+        self._value = value
+        self._ready = True
+        self._fire_callbacks()
+
+    def set_exception(self, error: BaseException):
+        if self._ready:
+            return
+        self.error = error
+        self._ready = True
+        self._fire_callbacks()
+
+    def _fire_callbacks(self):
+        callbacks, self._callbacks = self._callbacks, []
+        for cb in callbacks:
+            cb(self)
+
+    def add_done_callback(self, cb: Callable[["Future"], None]):
+        """Run ``cb(self)`` once the future resolves (immediately if it
+        already has)."""
+        if self._ready:
+            cb(self)
+        else:
+            self._callbacks.append(cb)
+
+    # --------------------------------------------------------- consumers ---
+    def result(self, timeout: Optional[float] = None) -> Any:
+        # stepwise, not run_until_idle: the deadline is checked between
+        # actions, so a timeout can't be overshot by the whole backlog
+        deadline = None if timeout is None else time.monotonic() + timeout
         while not self._ready:
-            self._manager.run_until_idle()
-            if not self._ready and self._manager.scheduler.outstanding == 0:
-                raise RuntimeError(f"task {self.task_id} lost "
-                                   "(exceeded max attempts?)")
+            progressed = self._backend.step()
+            if self._ready:
+                break
+            if not progressed:
+                if self._backend.outstanding == 0:
+                    raise RuntimeError(self._lost_message())
+                if deadline is None:
+                    # single-threaded runtime: no event can arrive while we
+                    # block here, so a stall with work outstanding is final
+                    raise RuntimeError(
+                        f"backend stalled with {self._backend.outstanding} "
+                        f"task(s) outstanding and no runnable workers "
+                        f"while waiting on {self.task_id} — add workers or "
+                        "pass result(timeout=...)")
+                time.sleep(0.001)   # bounded wait until the deadline
+            if deadline is not None and time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"task {self.task_id} did not complete within "
+                    f"{timeout:.3f}s ({self._backend.outstanding} tasks "
+                    "still outstanding)")
         if self.error is not None:
             raise self.error
         return self._value
+
+    def _lost_message(self) -> str:
+        task = self._backend.lookup_task(self.task_id)
+        if task is None:
+            return f"task {self.task_id} lost (unknown to the scheduler)"
+        where = task.last_worker or "<never placed>"
+        return (f"task {self.task_id} lost after {task.attempts} attempt(s); "
+                f"last worker {where} — exceeded max_attempts or the pool "
+                "drained with the task unfinished")
 
     @property
     def done(self) -> bool:
@@ -66,6 +131,8 @@ class PCMManager:
         self.workers: Dict[str, LiveWorker] = {}
         self._futures: Dict[str, Future] = {}
         self._ids = itertools.count()
+        self._task_ids = itertools.count()
+        self._pinned: set = set()
         self._pending_actions: List[Action] = []
         for _ in range(n_workers):
             self.add_worker()
@@ -74,6 +141,8 @@ class PCMManager:
     def add_worker(self) -> str:
         wid = f"live{next(self._ids):03d}"
         w = LiveWorker(wid, Library(wid), ContextStore())
+        w.store.pinned.update(self._pinned)
+        w.library.pinned.update(self._pinned)
         self.workers[wid] = w
         acts = self.scheduler.on_worker_join(wid, time.monotonic(),
                                              store=w.store)
@@ -81,38 +150,90 @@ class PCMManager:
         return wid
 
     def preempt_worker(self, worker_id: str):
-        """No-warning eviction: device contexts are gone instantly."""
+        """No-warning eviction: device contexts are gone instantly (pins
+        don't survive losing the device)."""
         w = self.workers.pop(worker_id, None)
         if w is not None:
-            w.library.evict_all()
+            w.library.evict_all(force=True)
         acts = self.scheduler.on_worker_leave(worker_id, time.monotonic())
         self._pending_actions.extend(acts)
 
     # ------------------------------------------------------------ submit ---
     def submit(self, fn: Callable, args: tuple = (), kwargs: dict = None,
                recipe: Optional[ContextRecipe] = None,
-               n_items: int = 1) -> Future:
-        task_id = f"t{len(self.scheduler.tasks):05d}"
-        task = Task(task_id=task_id, recipe=recipe or ContextRecipe(
-            name="null", artifact_bytes=0, env_bytes=0, host_bytes=0,
-            device_bytes=0), n_items=n_items,
-            payload=(fn, args, kwargs or {}))
-        fut = Future(task_id=task_id, _manager=self)
+               recipes: Optional[Mapping[str, ContextRecipe]] = None,
+               n_items: int = 1, priority: int = 0) -> Future:
+        """Submit one task. ``recipe=None`` (and no ``recipes``) is an
+        explicitly contextless task — the scheduler treats it as warm on
+        every worker. ``recipes`` maps context names to recipes for
+        multi-context tasks."""
+        named: Dict[str, ContextRecipe] = dict(recipes or {})
+        if recipe is not None and not named:
+            named = {recipe.name: recipe}
+        task_id = f"t{next(self._task_ids):05d}"
+        task = Task(task_id=task_id, recipes=tuple(named.values()),
+                    context_names=tuple(named.keys()), n_items=n_items,
+                    priority=priority, payload=(fn, args, kwargs or {}))
+        fut = Future(task_id, self)
         self._futures[task_id] = fut
         acts = self.scheduler.submit(task, time.monotonic())
         self._pending_actions.extend(acts)
         return fut
 
+    # ----------------------------------------------------------- contexts --
+    def warm_up(self, recipe: ContextRecipe,
+                worker_ids: Optional[List[str]] = None) -> List[str]:
+        """Materialize ``recipe`` on the given (default: all) workers now,
+        off the task critical path."""
+        warmed = []
+        for wid in list(worker_ids or self.workers):
+            w = self.workers.get(wid)
+            if w is None:
+                continue
+            w.library.ensure(recipe)
+            w.store.admit_recipe(recipe, self.mode.persist_tier)
+            warmed.append(wid)
+        return warmed
+
+    def pin_context(self, recipe: ContextRecipe):
+        """Exempt the context from mode-driven eviction on every current
+        and future worker."""
+        key = recipe.key()
+        self._pinned.add(key)
+        for w in self.workers.values():
+            w.store.pin(key)
+            w.library.pin(key)
+
+    def release_context(self, recipe: ContextRecipe):
+        key = recipe.key()
+        self._pinned.discard(key)
+        for w in self.workers.values():
+            w.store.unpin(key)
+            w.library.unpin(key)
+
+    def residency(self, recipe: ContextRecipe) -> Dict[str, Tier]:
+        """Highest tier at which each worker currently holds the context."""
+        key = recipe.key()
+        return {wid: w.store.highest_tier(key)
+                for wid, w in self.workers.items()}
+
     # --------------------------------------------------------- execution ---
-    def run_until_idle(self):
-        """Drain actions; single-host execution is synchronous per action."""
-        guard = 0
-        while self._pending_actions:
-            guard += 1
-            if guard > 100_000:
+    def step(self) -> bool:
+        """Execute one pending scheduler action; False when idle."""
+        if not self._pending_actions:
+            return False
+        self._execute(self._pending_actions.pop(0))
+        return True
+
+    def run_until_idle(self) -> int:
+        """Drain actions; single-host execution is synchronous per action.
+        Returns the number of actions executed."""
+        n = 0
+        while self.step():
+            n += 1
+            if n > 100_000:
                 raise RuntimeError("scheduler action loop did not converge")
-            action = self._pending_actions.pop(0)
-            self._execute(action)
+        return n
 
     def _execute(self, action: Action):
         now = time.monotonic()
@@ -134,27 +255,34 @@ class PCMManager:
             fn, args, kwargs = task.payload
             fut = self._futures.get(task.duplicates_of or task.task_id)
             try:
-                value = w.library.invoke(
-                    fn, args, kwargs,
-                    recipe=task.recipe if task.recipe.name != "null" else None,
-                    task_id=task.task_id)
+                named = dict(zip(task.context_names, task.recipes))
+                value = w.library.invoke(fn, args, kwargs,
+                                         recipes=named or None,
+                                         task_id=task.task_id)
                 if self.mode == ContextMode.AGNOSTIC:
                     w.library.evict_all()
                 elif self.mode == ContextMode.PARTIAL:
-                    w.library.evict(task.recipe.key())
-                if fut and not fut._ready:
-                    fut._value = value
-                    fut._ready = True
+                    for key in task.keys():
+                        w.library.evict(key)
+                if fut:
+                    fut.set_result(value)
             except BaseException as e:   # report, don't wedge the pool
-                if fut and not fut._ready:
-                    fut.error = e
-                    fut._ready = True
+                if fut:
+                    fut.set_exception(e)
             acts = self.scheduler.on_task_done(action.worker_id,
                                                action.task_id,
                                                time.monotonic())
             self._pending_actions.extend(acts)
         elif action.kind == "cancel":
             pass  # synchronous execution never has an in-flight copy
+
+    # ------------------------------------------------------------- status ---
+    @property
+    def outstanding(self) -> int:
+        return self.scheduler.outstanding
+
+    def lookup_task(self, task_id: str) -> Optional[Task]:
+        return self.scheduler.tasks.get(task_id)
 
     # ------------------------------------------------------------- stats ---
     def stats(self) -> Dict:

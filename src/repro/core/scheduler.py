@@ -35,13 +35,33 @@ from repro.core.transfer import TransferPlan, TransferPlanner
 # ------------------------------------------------------------------ types --
 @dataclass
 class Task:
+    """One unit of work. ``recipes`` lists EVERY context the task needs
+    (multi-context tasks hold several); an empty tuple means a contextless
+    task, which the scheduler treats as always-warm. ``recipe`` remains the
+    single-context shorthand and aliases ``recipes[0]``."""
+
     task_id: str
-    recipe: ContextRecipe
+    recipe: Optional[ContextRecipe] = None
+    recipes: Tuple[ContextRecipe, ...] = ()
+    context_names: Tuple[str, ...] = () # names aligned with ``recipes``
     n_items: int = 1                    # inferences in this task
     payload: object = None              # live mode: (fn, args, kwargs)
     attempts: int = 0
     submitted_at: float = 0.0
     duplicates_of: Optional[str] = None
+    priority: int = 0                   # >0 = front-of-queue hint
+    last_worker: str = ""               # most recent placement (diagnostics)
+
+    def __post_init__(self):
+        if self.recipe is not None and not self.recipes:
+            self.recipes = (self.recipe,)
+        elif self.recipes and self.recipe is None:
+            self.recipe = self.recipes[0]
+        if not self.context_names:
+            self.context_names = tuple(r.name for r in self.recipes)
+
+    def keys(self) -> List[str]:
+        return [r.key() for r in self.recipes]
 
 
 class WorkerPhase(enum.Enum):
@@ -69,8 +89,11 @@ class Action:
     task_id: str
     plan: Optional[TransferPlan] = None
     recipe: Optional[ContextRecipe] = None
+    recipes: Tuple[ContextRecipe, ...] = ()   # all contexts for a start
     warm: bool = False                  # device-resident before this start
-    had_disk: bool = False              # disk-resident before this start
+    had_disk: bool = False              # ALL contexts disk-resident
+    disk_resident: Tuple[bool, ...] = ()      # per-recipe disk residency
+    device_resident: Tuple[bool, ...] = ()    # per-recipe HBM residency
 
 
 @dataclass
@@ -106,8 +129,22 @@ class ContextAwareScheduler:
     def submit(self, task: Task, t: float = 0.0) -> List[Action]:
         task.submitted_at = t
         self.tasks[task.task_id] = task
-        self.queue.append(task)
+        self._enqueue(task)
         return self.dispatch(t)
+
+    def _enqueue(self, task: Task):
+        """FIFO, except priority>0 tasks slot in ahead of lower-priority
+        work (behind earlier tasks of equal-or-higher priority)."""
+        if task.priority <= 0:
+            self.queue.append(task)
+            return
+        idx = 0
+        for queued in self.queue:
+            if queued.priority >= task.priority:
+                idx += 1
+            else:
+                break
+        self.queue.insert(idx, task)
 
     def on_worker_join(self, worker_id: str, t: float, profile=None,
                        store: Optional[ContextStore] = None) -> List[Action]:
@@ -159,7 +196,8 @@ class ContextAwareScheduler:
             if self.mode == ContextMode.AGNOSTIC:
                 info.store.clear()
             elif self.mode == ContextMode.PARTIAL and task is not None:
-                info.store.drop(task.recipe.key(), down_to=Tier.LOCAL_DISK)
+                for key in task.keys():
+                    info.store.drop(key, down_to=Tier.LOCAL_DISK)
         actions: List[Action] = []
         primary = task.duplicates_of or task_id if task else task_id
         if primary not in self.done_ids:
@@ -177,18 +215,22 @@ class ContextAwareScheduler:
         actions: List[Action] = []
         idle = [w for w in self.workers.values()
                 if w.phase == WorkerPhase.IDLE]
-        # 1) warm-affinity placement
-        persist = self.mode.persist_tier
+        # 1) warm-affinity placement — a worker is warm for a task iff ALL
+        #    its contexts are device-resident; contextless tasks (no
+        #    recipes) are vacuously warm anywhere.
         while self.queue and idle:
             task = self.queue[0]
-            key = task.recipe.key()
-            warm = [w for w in idle if w.store.has(key, Tier.DEVICE)]
+            keys = task.keys()
+            warm = [w for w in idle
+                    if all(w.store.has(k, Tier.DEVICE) for k in keys)]
             target = None
             warm_start = False
             if warm:
                 target, warm_start = warm[0], True
             else:
-                disk = [w for w in idle if w.store.has(key, Tier.LOCAL_DISK)]
+                disk = [w for w in idle
+                        if all(w.store.has(k, Tier.LOCAL_DISK)
+                               for k in keys)]
                 target = disk[0] if disk else idle[0]
             self.queue.popleft()
             idle.remove(target)
@@ -199,14 +241,19 @@ class ContextAwareScheduler:
         #    with a running task's context catches its requeue after a
         #    preemption (and hosts straggler duplicates) with zero startup.
         if self.mode == ContextMode.FULL:
-            needed = self._pending_context_demand()
-            for w in idle:
-                if not needed:
+            free = list(idle)
+            for recipe in self._pending_context_demand():
+                if not free:
                     break
-                recipe = needed.pop(0)
                 key = recipe.key()
-                if w.store.has(key, Tier.DEVICE):
+                # offer each demanded recipe to a worker that LACKS it —
+                # a worker already warm for it must not consume the demand
+                cands = [w for w in free
+                         if not w.store.has(key, Tier.DEVICE)]
+                if not cands:
                     continue
+                w = cands[0]
+                free.remove(w)
                 actions.append(self._fetch(recipe, w, t))
         # 3) straggler duplication
         if self.straggler_factor and not self.queue:
@@ -215,17 +262,26 @@ class ContextAwareScheduler:
 
     def _start(self, task: Task, w: WorkerInfo, t: float, warm: bool
                ) -> Action:
-        key = task.recipe.key()
-        had_disk = w.store.has(key, Tier.LOCAL_DISK)
+        # snapshot per-recipe residency BEFORE admitting (admission
+        # populates every tier, which would pollute the reading)
+        disk_resident = tuple(w.store.has(r.key(), Tier.LOCAL_DISK)
+                              for r in task.recipes)
+        device_resident = tuple(w.store.has(r.key(), Tier.DEVICE)
+                                for r in task.recipes)
+        had_disk = bool(disk_resident) and all(disk_resident)
         w.phase = WorkerPhase.BUSY
         w.current = task.task_id
+        task.last_worker = w.worker_id
         self.running[task.task_id] = (w.worker_id, t)
         # residency the task execution will create:
-        w.store.admit_recipe(task.recipe, Tier.DEVICE, now=t)
-        w.store.touch(key, now=t)
+        for recipe in task.recipes:
+            w.store.admit_recipe(recipe, Tier.DEVICE, now=t)
+            w.store.touch(recipe.key(), now=t)
         return Action(kind="start", worker_id=w.worker_id,
-                      task_id=task.task_id, recipe=task.recipe, warm=warm,
-                      had_disk=had_disk)
+                      task_id=task.task_id, recipe=task.recipe,
+                      recipes=task.recipes, warm=warm, had_disk=had_disk,
+                      disk_resident=disk_resident,
+                      device_resident=device_resident)
 
     def _fetch(self, recipe: ContextRecipe, w: WorkerInfo, t: float
                ) -> Action:
@@ -246,11 +302,13 @@ class ContextAwareScheduler:
         # dominated by the first few distinct recipes anyway
         seen = {}
         for task in itertools.islice(self.queue, 256):
-            seen.setdefault(task.recipe.key(), task.recipe)
+            for recipe in task.recipes:
+                seen.setdefault(recipe.key(), recipe)
         for tid in itertools.islice(self.running, 64):
             task = self.tasks.get(tid)
             if task is not None:
-                seen.setdefault(task.recipe.key(), task.recipe)
+                for recipe in task.recipes:
+                    seen.setdefault(recipe.key(), recipe)
         return list(seen.values())
 
     # ---------------------------------------------------------- straggler --
@@ -272,17 +330,21 @@ class ContextAwareScheduler:
             if self._has_live_duplicate(task, exclude=task_id):
                 continue
             if (t - t0) > self.straggler_factor * med:
-                key = task.recipe.key()
+                keys = task.keys()
                 cands = [w for w in idle_warm
-                         if w.store.has(key, Tier.DEVICE)] or idle_warm
+                         if all(w.store.has(k, Tier.DEVICE) for k in keys)
+                         ] or idle_warm
                 w = cands[0]
                 idle_warm.remove(w)
                 dup = Task(task_id=f"{task_id}~dup{task.attempts}",
-                           recipe=task.recipe, n_items=task.n_items,
+                           recipes=task.recipes,
+                           context_names=task.context_names,
+                           n_items=task.n_items,
                            payload=task.payload, duplicates_of=task_id)
                 self.tasks[dup.task_id] = dup
-                actions.append(self._start(dup, w, t,
-                                           w.store.has(key, Tier.DEVICE)))
+                actions.append(self._start(
+                    dup, w, t,
+                    all(w.store.has(k, Tier.DEVICE) for k in keys)))
         return actions
 
     def _has_live_duplicate(self, task: Task, exclude: str = "") -> bool:

@@ -60,6 +60,16 @@ class ContextStore:
         self._tiers: Dict[Tier, Dict[str, _Entry]] = {
             Tier.LOCAL_DISK: {}, Tier.HOST_RAM: {}, Tier.DEVICE: {}}
         self.evictions = 0
+        self.pinned: Set[str] = set()
+
+    # ------------------------------------------------------------- pinning --
+    def pin(self, key: str):
+        """Exempt ``key`` from LRU eviction and mode cleanup. Pinning can
+        overcommit a tier: admission never evicts a pinned entry."""
+        self.pinned.add(key)
+
+    def unpin(self, key: str):
+        self.pinned.discard(key)
 
     def has(self, key: str, tier: Tier) -> bool:
         if tier == Tier.SHARED_FS:
@@ -87,7 +97,8 @@ class ContextStore:
         entries = self._tiers[tier]
         evicted = []
         while self.used(tier) + nbytes > self.capacity[tier] and entries:
-            victim = min((e for k, e in entries.items() if k != key),
+            victim = min((e for k, e in entries.items()
+                          if k != key and k not in self.pinned),
                          key=lambda e: e.last_used, default=None)
             if victim is None:
                 break
@@ -118,15 +129,23 @@ class ContextStore:
             if key in entries:
                 entries[key].last_used = now
 
-    def drop(self, key: str, down_to: Tier = Tier.SHARED_FS):
-        """Remove residency above ``down_to`` (mode cleanup after a task)."""
+    def drop(self, key: str, down_to: Tier = Tier.SHARED_FS,
+             force: bool = False):
+        """Remove residency above ``down_to`` (mode cleanup after a task).
+        Pinned keys survive unless ``force`` (worker actually gone)."""
+        if key in self.pinned and not force:
+            return
         for tier, entries in self._tiers.items():
             if tier > down_to:
                 entries.pop(key, None)
 
-    def clear(self):
+    def clear(self, force: bool = False):
         for entries in self._tiers.values():
-            entries.clear()
+            if force or not self.pinned:
+                entries.clear()
+            else:
+                for k in [k for k in entries if k not in self.pinned]:
+                    del entries[k]
 
     def keys(self, tier: Tier) -> Set[str]:
         if tier == Tier.SHARED_FS:

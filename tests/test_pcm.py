@@ -5,9 +5,10 @@ import time
 import pytest
 
 from repro.core import (Action, ContextAwareScheduler, ContextMode,
-                        ContextRecipe, ContextStore, Library, PCMManager,
-                        Task, Tier, TransferPlanner, context_app,
-                        load_context, make_recipe)
+                        ContextRecipe, ContextStore, ExecutionBackend,
+                        Library, PCMClient, PCMManager, SimTaskResult,
+                        SimulatorBackend, Task, Tier, TransferPlanner,
+                        WorkerPhase, context_app, load_context, make_recipe)
 from repro.core.context import GB
 
 R = ContextRecipe(name="m", artifact_bytes=4 * GB, env_bytes=10 * GB,
@@ -195,6 +196,115 @@ class TestScheduler:
         s.on_task_done("w0", "t0", 2.0)     # spurious double event
         assert len(s.completions) == 1
 
+    def test_preemption_during_fetch(self):
+        """A worker dying mid-prefetch must not wedge the scheduler or
+        requeue a phantom task."""
+        s = ContextAwareScheduler(mode=ContextMode.FULL)
+        s.on_worker_join("w0", 0.0)
+        s.on_worker_join("w1", 0.0)
+        s.submit(mk_task(0), 0.0)           # w0 starts; w1 prefetches
+        fetcher = next(w for w in s.workers.values()
+                       if w.phase == WorkerPhase.FETCHING)
+        n_queue, n_running = len(s.queue), len(s.running)
+        acts = s.on_worker_leave(fetcher.worker_id, 1.0)
+        assert fetcher.worker_id not in s.workers
+        assert len(s.queue) == n_queue and len(s.running) == n_running
+        # a late fetch-done from the departed worker is a harmless no-op
+        assert s.on_fetch_done(fetcher.worker_id, R.key(), 2.0) == []
+        s.on_task_done("w0", "t0", 3.0)
+        assert s.all_done()
+
+    def test_prefetch_skips_already_warm_worker(self):
+        """A demanded recipe must be offered to a worker that LACKS it,
+        not consumed by one already warm."""
+        s = ContextAwareScheduler(mode=ContextMode.FULL)
+        s.on_worker_join("w0", 0.0)
+        s.submit(mk_task(0), 0.0)            # w0 busy with R
+        s.on_worker_join("w1", 1.0)          # w1 prefetches R
+        s.on_fetch_done("w1", R.key(), 2.0)  # w1 idle AND warm
+        acts = s.on_worker_join("w2", 3.0)   # cold joiner
+        fetches = [a for a in acts if a.kind == "fetch"]
+        assert [f.worker_id for f in fetches] == ["w2"]
+
+    def test_contextless_task_always_warm(self):
+        s = ContextAwareScheduler(mode=ContextMode.FULL)
+        s.on_worker_join("w0", 0.0)
+        s.on_worker_join("w1", 0.0)
+        acts = s.submit(Task(task_id="t0"), 0.0)
+        starts = [a for a in acts if a.kind == "start"]
+        assert starts and starts[0].warm and starts[0].recipes == ()
+        # contextless work never triggers prefetch
+        assert not [a for a in acts if a.kind == "fetch"]
+
+    def test_priority_jumps_queue(self):
+        s = ContextAwareScheduler(mode=ContextMode.FULL)
+        s.on_worker_join("w0", 0.0)
+        s.submit(mk_task(0), 0.0)                       # occupies w0
+        s.submit(mk_task(1), 1.0)
+        s.submit(mk_task(2), 2.0)
+        urgent = Task(task_id="t9", recipe=R, priority=5)
+        s.submit(urgent, 3.0)
+        assert [tk.task_id for tk in s.queue] == ["t9", "t1", "t2"]
+        acts = s.on_task_done("w0", "t0", 4.0)
+        assert any(a.kind == "start" and a.task_id == "t9" for a in acts)
+
+    def test_multi_context_warm_affinity(self):
+        r2 = ContextRecipe(name="m2", artifact_bytes=GB, env_bytes=GB,
+                           host_bytes=GB, device_bytes=GB)
+        s = ContextAwareScheduler(mode=ContextMode.FULL)
+        s.on_worker_join("w0", 0.0)
+        s.on_worker_join("w1", 0.0)
+        s.workers["w0"].store.admit_recipe(R, Tier.DEVICE)     # partial
+        s.workers["w1"].store.admit_recipe(R, Tier.DEVICE)     # full
+        s.workers["w1"].store.admit_recipe(r2, Tier.DEVICE)
+        acts = s.submit(Task(task_id="t0", recipes=(R, r2)), 1.0)
+        starts = [a for a in acts if a.kind == "start"]
+        assert starts[0].worker_id == "w1" and starts[0].warm
+        assert starts[0].recipes == (R, r2)
+
+
+class TestStragglerCancelPaths:
+    def _sched_with_straggler(self):
+        s = ContextAwareScheduler(mode=ContextMode.FULL,
+                                  straggler_factor=2.0)
+        s.on_worker_join("w0", 0.0)
+        s.on_worker_join("w1", 0.0)
+        for i in range(5):
+            s.submit(mk_task(i), float(i))
+            s.on_task_done("w0", f"t{i}", float(i) + 1.0)
+        s.submit(mk_task(9), 10.0)
+        for w in list(s.workers.values()):
+            if w.fetching_key:
+                s.on_fetch_done(w.worker_id, w.fetching_key, 11.0)
+        (wid, t0) = s.running["t9"]
+        dups = [a for a in s.dispatch(t0 + 50.0)
+                if a.kind == "start" and "~dup" in a.task_id]
+        assert dups
+        return s, dups[0]
+
+    def test_original_first_cancels_duplicate(self):
+        s, dup = self._sched_with_straggler()
+        orig_worker = s.running["t9"][0]
+        acts = s.on_task_done(orig_worker, "t9", 60.0)
+        cancels = [a for a in acts if a.kind == "cancel"]
+        assert cancels and cancels[0].task_id == dup.task_id
+        assert dup.task_id not in s.running
+        # the duplicate's worker is freed for new work
+        assert s.workers[dup.worker_id].phase == WorkerPhase.IDLE
+        assert len([c for c in s.completions if c.task_id == "t9"]) == 1
+
+    def test_duplicate_worker_preempted_no_requeue(self):
+        """Losing the worker running a duplicate must NOT requeue the copy
+        while the original is still live."""
+        s, dup = self._sched_with_straggler()
+        acts = s.on_worker_leave(dup.worker_id, 55.0)
+        assert all(tk.duplicates_of is None for tk in s.queue)
+        assert "t9" in s.running                     # original unaffected
+        orig_worker = s.running["t9"][0]
+        s.on_task_done(orig_worker, "t9", 60.0)
+        assert "t9" in s.done_ids
+        assert len([c for c in s.completions if c.task_id == "t9"]) == 1
+
 
 # ------------------------------------------------------------ manager ------
 class TestManagerLive:
@@ -239,3 +349,263 @@ class TestManagerLive:
 
         with pytest.raises(ValueError):
             bad().result()
+
+    def test_lost_task_error_names_attempts_and_worker(self):
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=1)
+        mgr.scheduler.max_attempts = 2
+        fut = mgr.submit(lambda: 1)
+        wid0 = next(iter(mgr.workers))
+        mgr.preempt_worker(wid0)           # attempt 1
+        wid1 = mgr.add_worker()
+        mgr.preempt_worker(wid1)           # attempt 2 -> failed
+        with pytest.raises(RuntimeError, match="2 attempt"):
+            fut.result()
+
+    def test_result_timeout_when_pool_empty(self):
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=1)
+        fut = mgr.submit(lambda: 1)
+        mgr.preempt_worker(next(iter(mgr.workers)))   # queue, nobody home
+        with pytest.raises(TimeoutError):
+            fut.result(timeout=0.05)
+
+    def test_result_without_timeout_raises_on_stall(self):
+        """No timeout must not mean an infinite 1ms spin: a stalled
+        single-threaded backend can never make progress."""
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=1)
+        fut = mgr.submit(lambda: 1)
+        mgr.preempt_worker(next(iter(mgr.workers)))
+        with pytest.raises(RuntimeError, match="stalled"):
+            fut.result()
+
+
+# ------------------------------------------------------------- client ------
+class TestPCMClient:
+    def test_map_gather_and_as_completed(self):
+        client = PCMClient(mode=ContextMode.FULL, n_workers=2)
+        ctx = client.context(lambda: {"m": 10}, name="ctx")
+
+        def f(x):
+            return load_context("m") + x
+
+        batch = client.map(f, list(range(8)), context=ctx)
+        assert len(batch) == 8
+        assert batch.gather() == [10 + i for i in range(8)]
+        assert batch.done and batch.done_count == 8
+        # as_completed on a fresh batch yields every future exactly once
+        batch2 = client.map(f, [1, 2, 3], context=ctx)
+        seen = [fut.result() for fut in batch2.as_completed(timeout=30)]
+        assert sorted(seen) == [11, 12, 13]
+
+    def test_map_batched_chunks(self):
+        client = PCMClient(n_workers=1)
+        batch = client.map(lambda xs: sum(xs), list(range(10)),
+                           batch_size=4)
+        assert batch.gather() == [0 + 1 + 2 + 3, 4 + 5 + 6 + 7, 8 + 9]
+
+    def test_map_per_future_callbacks(self):
+        client = PCMClient(n_workers=1)
+        done = []
+        batch = client.map(lambda x: x * 2, [1, 2, 3],
+                           on_done=lambda f: done.append(f.task_id))
+        batch.gather()
+        assert len(done) == 3
+
+    def test_multi_context_task_qualified_load(self):
+        client = PCMClient(mode=ContextMode.FULL, n_workers=1)
+        verify = client.context(lambda: {"engine": "V"}, name="verify")
+        rank = client.context(lambda: {"engine": "R"}, name="rank")
+
+        @client.task(contexts={"verify": verify, "rank": rank})
+        def pipeline(x):
+            return load_context("verify.engine"), \
+                load_context("rank.engine"), x
+
+        assert pipeline(3).result() == ("V", "R", 3)
+        # unqualified + ambiguous -> error surfaced via the future
+        @client.task(contexts={"verify": verify, "rank": rank})
+        def ambiguous():
+            return load_context("engine")
+
+        with pytest.raises(KeyError, match="ambiguous"):
+            ambiguous().result()
+
+    def test_contextless_submit(self):
+        client = PCMClient(n_workers=1)
+        assert client.submit(lambda a, b: a + b, 2, 3).result() == 5
+        task = client.backend.scheduler.tasks["t00000"]
+        assert task.recipes == () and task.recipe is None
+
+    def test_same_builder_different_args_distinct_contexts(self):
+        client = PCMClient(n_workers=1)
+
+        def build(tag):
+            return {"tag": tag}
+
+        a = client.context(build, "model-a", name="ctx")
+        b = client.context(build, "model-b", name="ctx")
+        assert a is not b and a.key != b.key
+        assert client.submit(lambda: load_context("tag"),
+                             context=b).result() == "model-b"
+
+    def test_array_builder_args_distinct_contexts(self):
+        """Array args hash by content — truncated reprs must not alias."""
+        import numpy as np
+        client = PCMClient(n_workers=1)
+
+        def build(x):
+            return {"v": float(x[5000])}
+
+        a = np.zeros(10000)
+        b = np.zeros(10000)
+        b[5000] = 99.0
+        ha = client.context(build, a, name="arr")
+        hb = client.context(build, b, name="arr")
+        assert ha.key != hb.key
+        assert client.submit(lambda: load_context("v"),
+                             context=hb).result() == 99.0
+
+    def test_pin_survives_agnostic_eviction(self):
+        client = PCMClient(mode=ContextMode.AGNOSTIC, n_workers=1)
+        builds = []
+        ctx = client.context(lambda: builds.append(1) or {"m": 1},
+                             name="pinned")
+
+        def f():
+            return load_context("m")
+
+        with ctx:   # pinned
+            for _ in range(3):
+                assert client.submit(f, context=ctx).result() == 1
+        assert len(builds) == 1            # survived agnostic cleanup
+        ctx.release()
+        client.submit(f, context=ctx).result()
+        client.submit(f, context=ctx).result()
+        assert len(builds) >= 2            # eviction resumed after release
+
+    def test_pin_refcount_nested(self):
+        client = PCMClient(mode=ContextMode.AGNOSTIC, n_workers=1)
+        builds = []
+        ctx = client.context(lambda: builds.append(1) or {"m": 1},
+                             name="rc")
+        ctx.pin()                      # standing pin
+        with ctx:                      # nested with-block
+            pass
+        assert ctx.pinned              # must not drop the standing pin
+        client.submit(lambda: load_context("m"), context=ctx).result()
+        client.submit(lambda: load_context("m"), context=ctx).result()
+        assert len(builds) == 1
+        ctx.release()
+        assert not ctx.pinned
+
+    def test_gather_timeout_propagates_despite_return_exceptions(self):
+        client = PCMClient(n_workers=1)
+        client.backend.preempt_worker(client.workers[0])   # stall the pool
+        batch = client.map(lambda x: x, [1, 2])
+        with pytest.raises(TimeoutError):
+            batch.gather(timeout=0.05, return_exceptions=True)
+
+    def test_warm_up_and_residency(self):
+        client = PCMClient(mode=ContextMode.FULL, n_workers=2)
+        ctx = client.context(lambda: {"m": 1}, name="warm")
+        assert all(t == Tier.SHARED_FS for t in ctx.residency().values())
+        warmed = ctx.warm_up()
+        assert len(warmed) == 2
+        assert ctx.resident_workers(Tier.DEVICE) == client.workers
+        st = client.stats()
+        # warm-up built off-path; subsequent tasks are all warm
+        fut = client.submit(lambda: load_context("m"), context=ctx)
+        assert fut.result() == 1
+        assert client.stats()["cold_invocations"] == 0
+
+
+# ---------------------------------------------------- simulator backend ----
+class TestSimulatorBackend:
+    def test_protocol_conformance(self):
+        assert isinstance(PCMManager(n_workers=1), ExecutionBackend)
+        assert isinstance(SimulatorBackend(n_workers=1), ExecutionBackend)
+
+    def test_same_script_on_both_backends(self):
+        def workload(client):
+            ctx = client.context(lambda: {"m": 1}, name="ctx")
+            batch = client.map(lambda xs: xs, list(range(40)),
+                               batch_size=10, context=ctx)
+            return batch.gather()
+
+        live = workload(PCMClient(n_workers=2))
+        sim = workload(PCMClient(backend=SimulatorBackend(n_workers=2)))
+        assert live == [list(range(i, i + 10)) for i in range(0, 40, 10)]
+        assert all(isinstance(r, SimTaskResult) for r in sim)
+        assert sum(r.n_items for r in sim) == 40
+        assert all(r.duration > 0 and r.finished_at > 0 for r in sim)
+
+    def test_dry_run_never_calls_fn(self):
+        calls = []
+        sim = PCMClient(backend=SimulatorBackend(n_workers=1))
+        fut = sim.submit(lambda: calls.append(1))
+        fut.result()
+        assert calls == []
+
+    def test_context_amortization_modeled(self):
+        recipe = ContextRecipe(name="m")
+        sim = PCMClient(backend=SimulatorBackend(n_workers=1))
+        ctx = sim.context(recipe)
+        res = sim.map(lambda x: x, [0, 1, 2, 3], context=ctx).gather()
+        # first start is cold (pays transfer+load), the rest are warm
+        assert not res[0].warm and all(r.warm for r in res[1:])
+        assert res[0].duration > 10 * res[1].duration
+
+    def test_partial_disk_residency_not_recharged(self):
+        """A recipe already on local disk must not be charged a transfer
+        when a co-scheduled context is still cold."""
+        r1 = ContextRecipe(name="hot")
+        r2 = ContextRecipe(name="cold2")
+        backend = SimulatorBackend(n_workers=1, mode=ContextMode.FULL)
+        info = next(iter(backend.scheduler.workers.values()))
+        info.store.admit_recipe(r1, Tier.LOCAL_DISK)
+        sim = PCMClient(backend=backend)
+        fut = sim.submit(lambda: None,
+                         contexts={"a": sim.context(r1),
+                                   "b": sim.context(r2)})
+        fut.result()
+        st = backend.stats()
+        # exactly one transfer (for r2); r1 paid only the disk->HBM load
+        assert st["p2p_transfers"] + st["fs_transfers"] == 1
+
+    def test_device_resident_context_not_recharged(self):
+        """A context already in HBM pays no transfer/load when a sibling
+        context of the same task is still cold."""
+        r1, r2 = ContextRecipe(name="d1"), ContextRecipe(name="d2")
+        backend = SimulatorBackend(n_workers=1)
+        sim = PCMClient(backend=backend)
+        sim.context(r1).warm_up()
+        fut = sim.submit(lambda: None, contexts={"a": sim.context(r1),
+                                                 "b": sim.context(r2)})
+        fut.result()
+        st = backend.stats()
+        assert st["p2p_transfers"] + st["fs_transfers"] == 1   # r2 only
+
+    def test_multi_context_exec_time_charges_all_engines(self):
+        r1, r2 = ContextRecipe(name="e1"), ContextRecipe(name="e2")
+        def run(contexts):
+            sim = PCMClient(backend=SimulatorBackend(n_workers=1))
+            for c in contexts.values():
+                sim.context(c).warm_up()
+            return sim.submit(lambda: None, contexts=contexts,
+                              n_items=50).result().duration
+        single = run({"a": r1})
+        double = run({"a": r1, "b": r2})
+        assert double > 1.5 * single
+
+    def test_sim_preemption_requeues(self):
+        backend = SimulatorBackend(n_workers=2, mode=ContextMode.FULL)
+        sim = PCMClient(backend=backend)
+        ctx = sim.context(ContextRecipe(name="m"))
+        batch = sim.map(lambda x: x, list(range(6)), batch_size=1,
+                        context=ctx)
+        for _ in range(3):
+            backend.step()
+        victim = next(iter(backend.scheduler.workers))
+        backend.preempt_worker(victim)
+        res = batch.gather()
+        assert sum(r.n_items for r in res) == 6
+        assert backend.stats()["preemptions"] == 1
