@@ -7,6 +7,7 @@ so they quantify what context reuse buys on actual executables.
 
 from __future__ import annotations
 
+import sys
 import time
 
 import jax
@@ -22,6 +23,91 @@ from repro.models import build_model
 from repro.serving import InferenceEngine
 
 from benchmarks.common import emit, time_fn
+
+
+def bench_megastep(quick: bool = False, arch: str = "smollm2-1.7b",
+                   strict: bool = False):
+    """Fused-decode megastep sweep: warm decode tokens/s, µs per dispatch
+    and real (AOT-measured) compile seconds at K in {1, 8, 32}.
+
+    Greedy outputs must be bit-identical across K — asserted here, so the
+    perf numbers and the correctness guarantee travel together. Returns the
+    machine-readable dict that ``benchmarks.run`` writes to
+    ``BENCH_serving.json``."""
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    n_prompts, max_new = (8, 32) if quick else (8, 64)
+    prompts = [list(rng.randint(8, cfg.vocab_size,
+                                size=rng.randint(6, 15)))
+               for _ in range(n_prompts)]
+
+    sweep = {}
+    outputs = {}
+    for K in (1, 8, 32):
+        eng = InferenceEngine(model, params, slots=4, cache_len=256,
+                              prefill_buckets=(32,), megastep=K)
+        eng.warm_executables()              # AOT: the one-time context cost
+        compile_s = eng.compile_seconds
+        outputs[K] = eng.generate(prompts, max_new_tokens=max_new)
+        # measured runs: fully warm, zero compiles by construction;
+        # best-of-3 damps scheduler noise on shared CI hosts
+        st = eng.stats
+        warm_compiles = st.compiles
+        best = None
+        for _ in range(3):
+            toks0, secs0, steps0 = (st.decode_tokens, st.decode_seconds,
+                                    st.megasteps)
+            t0 = time.perf_counter()
+            eng.generate(prompts, max_new_tokens=max_new)
+            wall = time.perf_counter() - t0
+            rep = (st.decode_tokens - toks0, st.decode_seconds - secs0,
+                   st.megasteps - steps0, wall)
+            if best is None or (rep[1] / max(rep[0], 1) <
+                                best[1] / max(best[0], 1)):
+                best = rep
+        toks, dsecs, steps, wall = best
+        assert st.compiles == warm_compiles, "warm run must not compile"
+        row = {
+            "tokens_per_s": toks / max(dsecs, 1e-9),
+            "wall_tokens_per_s": toks / max(wall, 1e-9),
+            "us_per_megastep": 1e6 * dsecs / max(steps, 1),
+            "us_per_token": 1e6 * dsecs / max(toks, 1),
+            "compile_seconds": compile_s,
+            "decode_tokens": toks,
+            "megasteps": steps,
+        }
+        sweep[str(K)] = row
+        emit(f"serving.megastep.k{K}", row["us_per_megastep"],
+             f"{row['tokens_per_s']:.0f} decode tok/s; "
+             f"compile {compile_s:.2f}s")
+
+    parity = outputs[1] == outputs[8] == outputs[32]
+    assert parity, "greedy outputs must be identical across megastep K"
+    speedup = (sweep["32"]["tokens_per_s"] /
+               max(sweep["1"]["tokens_per_s"], 1e-9))
+    emit("serving.megastep.speedup_k32_vs_k1", speedup,
+         "warm decode tokens/s ratio (target >= 3)")
+    # strict (the CI-facing --only serving run) gates on a DETERMINISTIC
+    # invariant — K=32 must actually amortize dispatches (many tokens per
+    # megastep) — rather than on the wall-clock ratio, which is noisy on
+    # shared CI runners and only warns.
+    if strict:
+        k32 = sweep["32"]
+        per_dispatch = k32["decode_tokens"] / max(k32["megasteps"], 1)
+        assert per_dispatch >= 8, \
+            f"K=32 averaged {per_dispatch:.1f} tokens/dispatch — the " \
+            f"megastep is no longer fusing the decode loop"
+    if speedup < 3.0:
+        print(f"# WARNING: speedup x{speedup:.2f} below the 3x target",
+              file=sys.stderr)
+    return {
+        "arch": arch, "quick": quick, "slots": 4, "cache_len": 256,
+        "n_prompts": n_prompts, "max_new_tokens": max_new,
+        "k_sweep": sweep, "speedup_k32_vs_k1": speedup,
+        "speedup_target": 3.0, "greedy_parity": parity,
+    }
 
 
 def bench_engine_steps():
@@ -54,9 +140,9 @@ def bench_pcm_live_modes():
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
         engine = InferenceEngine(model, params, slots=4, cache_len=64,
-                                 prefill_buckets=(32,))
+                                 prefill_buckets=(32,), megastep=8)
         tok = HashTokenizer(cfg.vocab_size)
-        engine.generate([[2, 11, 12]], max_new_tokens=2)  # warm compile
+        # no manual warm: PCM materialization AOT-compiles the executables
         return {"engine": engine, "tok": tok}
 
     def run(mode, n_batches=6, bs=8):
@@ -140,6 +226,8 @@ def bench_train_step():
 
 
 def run_all():
+    # bench_megastep runs as its own ``serving`` section in benchmarks.run
+    # (it also writes BENCH_serving.json there)
     bench_engine_steps()
     bench_pcm_live_modes()
     bench_kernels()

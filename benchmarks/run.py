@@ -1,12 +1,18 @@
 """Benchmark driver. One section per paper table/figure + substrate micro-
 benchmarks + roofline aggregation. Prints ``name,us_per_call,derived`` CSV.
 
+The ``serving`` section sweeps the fused-decode megastep (K in {1, 8, 32})
+and writes machine-readable ``BENCH_serving.json`` (warm decode tokens/s,
+µs per dispatch, AOT compile seconds, greedy cross-K parity) so the perf
+trajectory is tracked across PRs; CI runs it as a ``--quick`` smoke job.
+
   PYTHONPATH=src python -m benchmarks.run [--quick/--full] [--only SECTION]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -15,12 +21,25 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="full-length RQ2 bs=1 sweeps (slow)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke-sized runs (CI)")
     ap.add_argument("--only", default=None,
-                    choices=("paper", "micro", "roofline"))
+                    choices=("paper", "micro", "roofline", "serving"))
+    ap.add_argument("--json-out", default="BENCH_serving.json",
+                    help="where the serving section writes its JSON record")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     t0 = time.time()
+    if args.only in (None, "serving"):
+        from benchmarks import microbench
+        record = microbench.bench_megastep(quick=args.quick,
+                                           strict=args.only == "serving")
+        with open(args.json_out, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json_out} "
+              f"(x{record['speedup_k32_vs_k1']:.2f} K=32 vs K=1)",
+              file=sys.stderr)
     if args.only in (None, "paper"):
         from benchmarks import paper_figures
         paper_figures.run_all(quick=not args.full)

@@ -92,18 +92,25 @@ class Library:
         self.pinned: Set[str] = set()
         self.records: List[InvocationRecord] = []
         self.build_seconds_total = 0.0
+        self.aot_seconds_total = 0.0   # executable warm-up inside builds
 
     # ---------------------------------------------------------- contexts --
     def has(self, key: str) -> bool:
         return key in self._contexts
 
     def ensure(self, recipe: ContextRecipe) -> Context:
-        """Materialize if absent (the one-time startup); return resident."""
+        """Materialize if absent (the one-time startup); return resident.
+
+        Materialization AOT-compiles any engines in the built value (see
+        ``repro.core.context.materialize``), so the resident context holds
+        weights + KV pools + compiled executables: tasks executed against
+        it never pay a compile."""
         key = recipe.key()
         if key not in self._contexts:
             ctx = materialize(recipe, self.worker_id)
             self._contexts[key] = ctx
             self.build_seconds_total += ctx.build_seconds
+            self.aot_seconds_total += ctx.aot_seconds
         return self._contexts[key]
 
     def install(self, ctx: Context):

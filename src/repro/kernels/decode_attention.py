@@ -63,14 +63,24 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
 
 def flash_decode(q, cache_k, cache_v, lengths, *, scale: float = 1.0,
                  block_k: int = 512, ring: bool = False,
-                 interpret: bool = False):
+                 active=None, interpret: bool = False):
     """q (B, H, D); cache_k/v (B, Skv, Hkv, D); lengths (B,) valid counts.
 
     Returns (B, H, D). ``ring=True`` treats the whole buffer as valid once
     ``lengths >= Skv`` (SWA ring buffers) — callers pass
     ``min(lengths, Skv)`` for that case, so the mask logic is shared.
+
+    ``active`` (B,) bool, optional: convenience for callers that carry a
+    per-slot mask instead of pre-zeroed lengths. Inactive slots get their
+    valid length forced to 0, so every KV block's ``k_lo < length`` guard
+    fails and the kernel does NO attention work for them (their output
+    rows are meaningless zeros the caller discards). The serving megastep
+    achieves the same effect by zeroing freed slots' lengths, so per-slot
+    work is always proportional to the live context either way.
     """
     B, H, D = q.shape
+    if active is not None:
+        lengths = jnp.where(active, lengths, 0)
     Skv, Hkv = cache_k.shape[1], cache_k.shape[2]
     G = H // Hkv
     bk = min(block_k, Skv)

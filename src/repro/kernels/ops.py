@@ -39,9 +39,10 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
 
 def flash_decode(q, cache_k, cache_v, lengths, *, scale: float = 1.0,
-                 block_k: int = 512):
+                 block_k: int = 512, active=None):
     return _flash_decode(q, cache_k, cache_v, lengths, scale=scale,
-                         block_k=block_k, interpret=_interpret())
+                         block_k=block_k, active=active,
+                         interpret=_interpret())
 
 
 def ssm_scan(C_mat, B_mat, v, log_a, *, chunk: int = 128):

@@ -261,7 +261,18 @@ def attend_decode(p, x, cfg, *, cache_k, cache_v, lengths,
     else:
         valid = pos[None, :] <= lengths[:, None]
     scale = 1.0 / math.sqrt(hd)
-    if getattr(cfg, "gqa_decode", "grouped") == "repeat":
+    if (cfg.use_kernels
+            and getattr(cfg, "gqa_decode", "grouped") != "repeat"
+            and (s_cache <= 512 or s_cache % 512 == 0)):
+        # length-masked Pallas flash-decode: per-slot work is proportional
+        # to that slot's valid KV length, so the engine megastep's free
+        # slots (length 0/1) skip essentially every KV block. The softmax
+        # is permutation-invariant over the valid KV set, so the same call
+        # covers SWA ring buffers (n_valid caps at the window).
+        from repro.kernels import ops as kops
+        out = kops.flash_decode(q[:, 0], cache_k, cache_v, n_valid,
+                                scale=scale)[:, None]
+    elif getattr(cfg, "gqa_decode", "grouped") == "repeat":
         # baseline path: repeat cache to full heads (GSPMD all-gathers the
         # sharded cache across the model axis — kept for §Perf A/B)
         kf = _repeat_kv(cache_k, cfg.n_heads)

@@ -1,22 +1,62 @@
-"""Continuous-batching inference engine.
+"""Continuous-batching inference engine built around fused decode megasteps.
 
 A fixed number of decode SLOTS share one cache pytree (allocated once — the
-cache, the weights and the AOT-compiled prefill/decode executables together
-form the PCM *context*; see repro.core.library). Requests are admitted in
-prefill waves (padded to a bucketed length), scatter-merged into free slots,
-then all active slots decode in lock-step; finished requests free their
-slots immediately.
+cache, the weights, the per-slot decode state and the AOT-compiled
+prefill/megastep executables together form the PCM *context*; see
+repro.core.library). The execution model:
 
-Everything device-side is jitted once per (prefill bucket, slot count):
-re-used across thousands of requests — exactly the amortization the paper's
-full-context mode provides.
+**What is resident in a context.**  Everything the steady-state loop needs
+lives on device for the lifetime of the engine: the weights, the slot
+cache, the per-slot decode state (``lengths``, ``last_tokens``, ``temps``,
+``active``, generated-token counts, per-slot stop-token tables, the RNG
+key) and the compiled executables themselves.  Materializing the engine
+inside a PCM context (``repro.core.context.materialize``) AOT-compiles the
+megastep and every prefill-bucket executable up front, so a warm context
+performs **zero** compiles — ``compile_seconds`` measures the real one-time
+cost and ``stats.compiles`` counts cache misses (expected 0 after warm-up).
+
+**The megastep.**  Instead of one jitted dispatch per token, ``step()``
+launches a single fused ``lax.while_loop`` that generates up to
+``megastep=K`` tokens per dispatch.  The loop carries (cache, lengths,
+last_tokens, active, counts, rng) entirely on device; a per-slot *active
+mask* keeps free/finished slots inert: their cache rows are provably
+unchanged (see ``kvcache.select_slots``), they sample nothing, and —
+because freed slots' device lengths are zeroed at megastep end —
+length-masked attention reduces to a single masked position for them.
+Stop-token / max-new-tokens / cache-overflow detection runs on device, so
+a slot that finishes mid-megastep stops sampling and advancing immediately
+(its residual attention work lasts only until that megastep returns); the
+loop also exits early when every slot is done,
+or when a slot frees up while requests are queued (so admission latency is
+bounded by the work actually done, not by K).
+
+**When the host syncs.**  Once per megastep: the device returns a
+``(slots, K)`` token block plus per-slot produced counts and the active
+mask, and the host unpacks K tokens per slot in one transfer — versus one
+blocking ``np.asarray`` per token in the per-token loop.  Prefill waves
+sync once per wave (first token + immediately-done flags); all other
+state stays on device.
+
+**How K trades latency for throughput.**  K=1 is bit-exact with the
+classic per-token loop (greedy outputs are identical for every K — decode
+math is unchanged, only dispatch granularity moves).  Larger K amortizes
+Python/dispatch/host-sync overhead over K tokens, multiplying steady-state
+decode throughput, at the cost of admitting queued requests at megastep
+(≤ K token) granularity instead of every token.
+
+Prefill waves are padded to the full slot count, and prefill + scatter
+into the *donated* global cache run fused in a single dispatch (the
+transient wave buffer lives only inside that executable — no separate
+host-driven merge step), so there is exactly one prefill executable per
+bucket length — all AOT-warmable.
 """
 
 from __future__ import annotations
 
 import collections
+import functools
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,12 +67,16 @@ from repro.serving import kvcache
 from repro.serving.request import EngineStats, Request, RequestState
 from repro.serving.sampler import sample
 
+NO_TOKEN = -1  # stop-table padding: never matches a real (>= 0) token id
+
 
 def _bucket(n: int, buckets: Sequence[int]) -> int:
     for b in buckets:
         if n <= b:
             return b
-    return buckets[-1]
+    raise ValueError(f"prompt length {n} exceeds the largest prefill bucket "
+                     f"({buckets[-1]}) — prompts must never be silently "
+                     f"truncated")
 
 
 class InferenceEngine:
@@ -41,62 +85,303 @@ class InferenceEngine:
                  prefill_buckets: Sequence[int] = (32, 128, 512),
                  cache_dtype=jnp.float32, rng_seed: int = 0,
                  extra: Optional[Dict] = None,
-                 donate_cache: bool = True):
+                 donate_cache: bool = True,
+                 megastep: int = 1,
+                 decode_buckets: Optional[Sequence[int]] = None,
+                 max_stop_tokens: int = 4):
         self.model = model
         self.cfg = model.cfg
         self.params = params
         self.slots = slots
         self.cache_len = cache_len
-        self.prefill_buckets = tuple(
-            b for b in sorted(set(min(b, cache_len)
-                                  for b in prefill_buckets)))
+        # auto-extend buckets to cache_len: every admissible prompt
+        # (submit() enforces len <= cache_len) gets a bucket that holds it
+        # whole — over-long prompts raise instead of silently truncating.
+        self.prefill_buckets = tuple(sorted(
+            set(min(b, cache_len) for b in prefill_buckets) | {cache_len}))
         self.extra = extra
-        self._rng = jax.random.PRNGKey(rng_seed)
+        self.megastep = int(megastep)
+        if self.megastep < 1:
+            raise ValueError(f"megastep must be >= 1, got {megastep}")
+        self.max_stop_tokens = max_stop_tokens
 
         self.cache = model.init_cache(slots, cache_len, cache_dtype)
+        self._cache_dtype = jax.tree_util.tree_leaves(self.cache)[0].dtype
         self._axes = kvcache.batch_axes(model.init_cache, cache_len,
                                         cache_dtype)
+        # length-bounded decode: megasteps run on a bucketed cache PREFIX
+        # sized from host-tracked lengths, so per-token work scales with
+        # the live context, not allocated capacity. Only decoder-only
+        # full-attention families qualify (ring buffers address the cache
+        # modulo its physical size, so a sliced view changes semantics).
+        # use_kernels is excluded: the Pallas decode routing in
+        # attend_decode depends on the cache size it sees, so mixing
+        # prefix-view sizes across K could mix kernel/XLA numerics and
+        # break the cross-K greedy bit-parity guarantee.
+        prefixable = (getattr(self.cfg, "family", "") in ("dense", "moe")
+                      and not getattr(self.cfg, "sliding_window", 0)
+                      and not getattr(self.cfg, "use_kernels", False)
+                      and cache_len > 16)
+        if not prefixable:
+            self.decode_buckets = (cache_len,)
+        elif decode_buckets is not None:
+            self.decode_buckets = tuple(sorted(
+                set(min(b, cache_len) for b in decode_buckets)
+                | {cache_len}))
+        else:
+            bks, b = {cache_len}, min(64, cache_len)
+            while b < cache_len:
+                bks.add(b)
+                b *= 2
+            self.decode_buckets = tuple(sorted(bks))
+        self._seq_axes = (kvcache.seq_axes(model.init_cache, slots,
+                                           cache_len, cache_dtype)
+                          if len(self.decode_buckets) > 1 else None)
+        self._host_lengths = np.zeros((slots,), np.int64)
+        # per-slot decode state: device-resident, synced to host only at
+        # megastep/wave boundaries
         self.lengths = jnp.zeros((slots,), jnp.int32)
         self.last_tokens = jnp.zeros((slots,), jnp.int32)
         self.temps = jnp.zeros((slots,), jnp.float32)
+        self.active_mask = jnp.zeros((slots,), bool)
+        self.gen_counts = jnp.zeros((slots,), jnp.int32)
+        self.max_news = jnp.zeros((slots,), jnp.int32)
+        self.stop_table = jnp.full((slots, max_stop_tokens), NO_TOKEN,
+                                   jnp.int32)
+        self._rng = jax.random.PRNGKey(rng_seed)
 
         self.queue: collections.deque = collections.deque()
         self.active: Dict[int, Request] = {}          # slot -> request
-        self.free_slots: List[int] = list(range(slots))
+        self.free_slots: collections.deque = collections.deque(range(slots))
         self.stats = EngineStats()
         self.compile_seconds = 0.0
 
-        donate = (2,) if donate_cache else ()
-        self._decode = jax.jit(self._decode_impl, donate_argnums=donate)
-        self._prefills: Dict[int, Callable] = {}      # bucket len -> jitted
-        self._merge = jax.jit(
-            lambda g, n, s: kvcache.merge_slots(g, n, s, self._axes),
-            donate_argnums=(0,))
+        self._mega_donate = (1, 2, 3, 5, 6, 9) if donate_cache else ()
+        self._megastep_jits: Dict[int, Callable] = {}  # prefix -> jitted
+        pre_donate = (8, 9, 10, 11, 12, 13, 14, 15, 16) if donate_cache \
+            else ()
+        self._prefill_jit = jax.jit(self._prefill_impl,
+                                    donate_argnums=pre_donate)
+        self._exe: Dict[Tuple, Callable] = {}         # AOT executables
 
     # ------------------------------------------------------------- jitted --
-    def _decode_impl(self, params, tokens, cache, lengths, temps, rng):
-        logits, cache = self.model.decode_step(params, tokens[:, None],
-                                               lengths, cache,
-                                               extra=self.extra)
-        toks = sample(logits, rng, temps, vocab_size=self.cfg.vocab_size)
-        return toks, cache, lengths + 1
+    def _prefill_impl(self, params, tokens, lens, slot_ids, valid,
+                      wave_temps, wave_max_new, wave_stops,
+                      cache, lengths, last_tokens, temps, active,
+                      gen_counts, max_news, stop_table, rng):
+        """Prefill a (slots, bucket) wave straight into the donated slot
+        cache and per-slot state. ``slot_ids`` is a permutation of the slot
+        indices; ``valid`` masks the rows that carry real requests (padding
+        rows write their slots back unchanged)."""
+        rng, k = jax.random.split(rng)
+        wave_cache = self.model.init_cache(self.slots, self.cache_len,
+                                           self._cache_dtype)
+        logits, wave_cache = self.model.prefill(params, tokens, lens,
+                                                wave_cache, extra=self.extra)
+        toks = sample(logits, k, wave_temps, vocab_size=self.cfg.vocab_size,
+                      active=valid)
+        cache = kvcache.merge_slots(cache, wave_cache, slot_ids, self._axes,
+                                    valid=valid)
+        # on-device done detection for the first token (mirrors the
+        # megastep): stop token, max_new_tokens==1, or a prompt that
+        # already fills the cache
+        stopped = jnp.any(toks[:, None] == wave_stops, axis=1)
+        full = wave_max_new <= 1
+        over = lens >= self.cache_len - 1
+        row_active = valid & ~(stopped | full | over)
 
-    def _prefill_impl(self, params, tokens, lengths, cache, temps, rng):
-        logits, cache = self.model.prefill(params, tokens, lengths, cache,
-                                           extra=self.extra)
-        toks = sample(logits, rng, temps, vocab_size=self.cfg.vocab_size)
-        return toks, cache
+        def scat(dst, src):
+            keep = valid.reshape((-1,) + (1,) * (src.ndim - 1))
+            return dst.at[slot_ids].set(
+                jnp.where(keep, src.astype(dst.dtype), dst[slot_ids]))
 
-    def _get_prefill(self, bucket: int) -> Callable:
-        if bucket not in self._prefills:
-            self._prefills[bucket] = jax.jit(self._prefill_impl)
-        return self._prefills[bucket]
+        lengths = scat(lengths, lens)
+        last_tokens = scat(last_tokens, toks)
+        temps = scat(temps, wave_temps)
+        active = scat(active, row_active)
+        gen_counts = scat(gen_counts, jnp.where(valid, 1, 0))
+        max_news = scat(max_news, wave_max_new)
+        stop_table = scat(stop_table, wave_stops)
+        return (toks, row_active, cache, lengths, last_tokens, temps,
+                active, gen_counts, max_news, stop_table, rng)
+
+    def _megastep_impl(self, params, cache, lengths, last_tokens, temps,
+                       active, gen_counts, max_news, stop_table, rng,
+                       has_queue, *, prefix: int, restore: bool):
+        """Generate up to ``megastep`` tokens in one dispatch.
+
+        Decode runs on a ``prefix``-bounded cache view (the host guarantees
+        no active slot can write past it during this megastep), so
+        per-token work scales with the live context length. The while_loop
+        exits early when no slot is active, or when a slot freed up while
+        the host has queued requests (so waiting work is admitted
+        promptly). Inactive slots are masked in the carried vectors each
+        iteration and their cache rows restored in ONE select after the
+        loop — zero per-token masking cost. Returns the new carried state
+        plus a (slots, K) token block and per-slot produced counts — the
+        host's single sync point."""
+        K = self.megastep
+        B = self.slots
+        entry_active = active
+        full_cache = cache
+        view = (kvcache.slice_prefix(cache, prefix, self._seq_axes)
+                if prefix < self.cache_len else cache)
+        # the free-slot restore needs the entry rows kept alive across the
+        # loop (an extra cache copy at full prefix) — only specialized in
+        # when the host reports free slots
+        entry_view = view if restore else None
+
+        def cond(c):
+            step, _, _, _, act, _, _, _, _ = c
+            freed = jnp.any(entry_active & ~act)
+            return (step < K) & jnp.any(act) & ~(has_queue & freed)
+
+        def body(c):
+            step, view, lengths, last, act, gen, rng, block, produced = c
+            rng, k = jax.random.split(rng)
+            logits, view = self.model.decode_step(
+                params, last[:, None], lengths, view, extra=self.extra)
+            toks = sample(logits, k, temps, vocab_size=self.cfg.vocab_size,
+                          active=act, fallback=last)
+            lengths = jnp.where(act, lengths + 1, lengths)
+            gen = jnp.where(act, gen + 1, gen)
+            block = jax.lax.dynamic_update_slice_in_dim(
+                block, jnp.where(act, toks, 0)[:, None], step, axis=1)
+            produced = produced + act.astype(jnp.int32)
+            stopped = jnp.any(toks[:, None] == stop_table, axis=1)
+            full = gen >= max_news
+            over = lengths >= self.cache_len - 1
+            act = act & ~(stopped | full | over)
+            return (step + 1, view, lengths, toks, act, gen, rng, block,
+                    produced)
+
+        init = (jnp.int32(0), view, lengths, last_tokens, active,
+                gen_counts, rng, jnp.zeros((B, K), jnp.int32),
+                jnp.zeros((B,), jnp.int32))
+        (_, view, lengths, last, active, gen, rng, block,
+         produced) = jax.lax.while_loop(cond, body, init)
+        # zero finished/free slots' lengths so subsequent megasteps attend
+        # over a single masked position for them instead of their stale
+        # full context (admission rewrites lengths; the host tracks real
+        # lengths in its own shadow)
+        lengths = jnp.where(active, lengths, 0)
+        # one post-loop select: slots inactive at entry (free slots) keep
+        # their entry cache rows bit-for-bit; slots that finished mid-loop
+        # only ever wrote to dead positions at/past their final length.
+        if restore:
+            view = kvcache.select_slots(entry_view, view, entry_active,
+                                        self._axes)
+        cache = (kvcache.write_prefix(full_cache, view, self._seq_axes)
+                 if prefix < self.cache_len else view)
+        return cache, lengths, last, active, gen, rng, block, produced
+
+    # ---------------------------------------------------- executables/AOT --
+    def _get_exe(self, key: Tuple, jitfn, *args):
+        """AOT compile cache: real compile_seconds measurement + a compile
+        counter (a warm PCM context performs zero compiles)."""
+        exe = self._exe.get(key)
+        if exe is None:
+            t0 = time.monotonic()
+            exe = jitfn.lower(*args).compile()
+            self.compile_seconds += time.monotonic() - t0
+            self.stats.compiles += 1
+            self._exe[key] = exe
+        return exe
+
+    def _sds(self, x):
+        return jax.ShapeDtypeStruct(jnp.shape(x), x.dtype)
+
+    def _state_sds(self):
+        return tuple(jax.tree_util.tree_map(self._sds, s) for s in (
+            self.cache, self.lengths, self.last_tokens, self.temps,
+            self.active_mask, self.gen_counts, self.max_news,
+            self.stop_table, self._rng))
+
+    def _megastep_jit(self, prefix: int, restore: bool):
+        jkey = (prefix, restore)
+        jit = self._megastep_jits.get(jkey)
+        if jit is None:
+            jit = jax.jit(functools.partial(self._megastep_impl,
+                                            prefix=prefix, restore=restore),
+                          donate_argnums=self._mega_donate)
+            self._megastep_jits[jkey] = jit
+        return jit
+
+    def _megastep_exe(self, prefix: int, restore: bool):
+        key = ("megastep", self.megastep, prefix, restore)
+        exe = self._exe.get(key)
+        if exe is not None:           # hot path: no SDS tree building
+            return exe
+        st = self._state_sds()
+        params = jax.tree_util.tree_map(self._sds, self.params)
+        return self._get_exe(
+            key, self._megastep_jit(prefix, restore), params,
+            st[0], st[1], st[2], st[3], st[4], st[5], st[6], st[7], st[8],
+            jax.ShapeDtypeStruct((), jnp.bool_))
+
+    def _decode_prefix(self) -> int:
+        """Smallest decode bucket that bounds every ACTIVE slot's writes
+        this megastep: length + however many tokens it can still produce
+        (host-tracked, so choosing it costs no device sync).
+
+        The prefix view costs a slice + write-back per dispatch, amortized
+        over the megastep's K tokens — below K=4 it cannot pay for itself,
+        so short megasteps decode on the full cache."""
+        if self.megastep < 4 or len(self.decode_buckets) == 1:
+            return self.cache_len
+        bound = 1 + max(
+            self._host_lengths[s] + min(self.megastep,
+                                        r.max_new_tokens - len(r.generated))
+            for s, r in self.active.items())
+        for b in self.decode_buckets:
+            if bound <= b:
+                return b
+        return self.cache_len
+
+    def _prefill_exe(self, bucket: int):
+        key = ("prefill", bucket)
+        exe = self._exe.get(key)
+        if exe is not None:
+            return exe
+        st = self._state_sds()
+        params = jax.tree_util.tree_map(self._sds, self.params)
+        i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        return self._get_exe(
+            key, self._prefill_jit, params,
+            i32(self.slots, bucket), i32(self.slots), i32(self.slots),
+            jax.ShapeDtypeStruct((self.slots,), jnp.bool_),
+            jax.ShapeDtypeStruct((self.slots,), jnp.float32),
+            i32(self.slots), i32(self.slots, self.max_stop_tokens),
+            st[0], st[1], st[2], st[3], st[4], st[5], st[6], st[7], st[8])
+
+    def warm_executables(self) -> float:
+        """AOT-compile the megastep (every decode bucket) + every
+        prefill-bucket executable.
+
+        Called by PCM context materialization so the compile cost is paid
+        once per context lifetime; returns the seconds spent compiling
+        (idempotent — already-warm executables cost nothing)."""
+        before = self.compile_seconds
+        reachable = (self.decode_buckets if self.megastep >= 4
+                     else (self.cache_len,))
+        for b in reachable:
+            for restore in (False, True):
+                self._megastep_exe(b, restore)
+        for b in self.prefill_buckets:
+            self._prefill_exe(b)
+        return self.compile_seconds - before
 
     # -------------------------------------------------------------- public --
     def submit(self, req: Request) -> Request:
         if len(req.prompt) > self.cache_len:
             raise ValueError(f"prompt ({len(req.prompt)}) exceeds cache "
                              f"({self.cache_len})")
+        if len(req.stop_tokens) > self.max_stop_tokens:
+            raise ValueError(f"request has {len(req.stop_tokens)} stop "
+                             f"tokens; engine supports at most "
+                             f"{self.max_stop_tokens}")
+        if any(t < 0 for t in req.stop_tokens):
+            raise ValueError("stop tokens must be non-negative ids")
         self.queue.append(req)
         return req
 
@@ -104,15 +389,14 @@ class InferenceEngine:
         return bool(self.queue or self.active)
 
     def step(self) -> List[Request]:
-        """One scheduling step: admit a prefill wave if possible, else one
-        decode step for all active slots. Returns finished requests."""
+        """One scheduling step: admit a prefill wave if possible, then one
+        decode megastep (up to K tokens) for all active slots. Returns
+        finished requests."""
         finished: List[Request] = []
         if self.queue and self.free_slots:
-            self._admit_wave()
-            finished.extend(self._collect_done())
+            finished.extend(self._admit_wave())
         if self.active:
-            self._decode_wave()
-            finished.extend(self._collect_done())
+            finished.extend(self._megastep_wave())
         self.stats.steps += 1
         return finished
 
@@ -133,81 +417,102 @@ class InferenceEngine:
         return [r.generated for r in reqs]
 
     # ------------------------------------------------------------ internal --
-    def _admit_wave(self):
+    def _admit_wave(self) -> List[Request]:
         n = min(len(self.queue), len(self.free_slots))
         wave = [self.queue.popleft() for _ in range(n)]
-        slots = np.array([self.free_slots.pop(0) for _ in range(n)],
-                         np.int32)
-        max_len = max(len(r.prompt) for r in wave)
-        bucket = _bucket(max_len, self.prefill_buckets)
+        wave_slots = [self.free_slots.popleft() for _ in range(n)]
+        # pad the wave to the full slot count with the remaining slot ids
+        # (a permutation): ONE executable per bucket, always AOT-warmable.
+        taken = set(wave_slots)
+        slot_ids = np.array(
+            wave_slots + [s for s in range(self.slots) if s not in taken],
+            np.int32)
+        valid = np.zeros((self.slots,), bool)
+        valid[:n] = True
 
-        toks = np.zeros((n, bucket), np.int32)
-        lens = np.zeros((n,), np.int32)
-        temps = np.zeros((n,), np.float32)
+        bucket = _bucket(max(len(r.prompt) for r in wave),
+                         self.prefill_buckets)
+        toks = np.zeros((self.slots, bucket), np.int32)
+        lens = np.zeros((self.slots,), np.int32)
+        temps = np.zeros((self.slots,), np.float32)
+        max_new = np.zeros((self.slots,), np.int32)
+        stops = np.full((self.slots, self.max_stop_tokens), NO_TOKEN,
+                        np.int32)
         for i, r in enumerate(wave):
-            p = r.prompt[-bucket:]
-            toks[i, :len(p)] = p
-            lens[i] = len(p)
+            toks[i, :len(r.prompt)] = r.prompt
+            lens[i] = len(r.prompt)
             temps[i] = r.temperature
+            max_new[i] = r.max_new_tokens
+            stops[i, :len(r.stop_tokens)] = r.stop_tokens
             r.state = RequestState.PREFILLING
-            r.slot = int(slots[i])
+            r.slot = int(slot_ids[i])
 
-        self._rng, k = jax.random.split(self._rng)
-        t0 = time.monotonic()
-        wave_cache = self.model.init_cache(n, self.cache_len,
-                                           jax.tree_util.tree_leaves(
-                                               self.cache)[0].dtype)
-        first_toks, wave_cache = self._get_prefill(bucket)(
-            self.params, jnp.asarray(toks), jnp.asarray(lens), wave_cache,
-            jnp.asarray(temps), k)
-        self.cache = self._merge(self.cache, wave_cache, jnp.asarray(slots))
-        self.compile_seconds += 0.0  # AOT handled by Library; timing kept simple
-        dt = time.monotonic() - t0
+        exe = self._prefill_exe(bucket)
+        (first, row_active, self.cache, self.lengths, self.last_tokens,
+         self.temps, self.active_mask, self.gen_counts, self.max_news,
+         self.stop_table, self._rng) = exe(
+            self.params, jnp.asarray(toks), jnp.asarray(lens),
+            jnp.asarray(slot_ids), jnp.asarray(valid), jnp.asarray(temps),
+            jnp.asarray(max_new), jnp.asarray(stops), self.cache,
+            self.lengths, self.last_tokens, self.temps, self.active_mask,
+            self.gen_counts, self.max_news, self.stop_table, self._rng)
 
-        first_np = np.asarray(first_toks)
-        new_lengths = np.array(self.lengths)
-        new_last = np.array(self.last_tokens)
-        new_temps = np.array(self.temps)
+        # one host sync per wave: the first token + immediately-done flags
+        first_np, row_active_np = jax.device_get((first, row_active))
+        now = time.monotonic()
+        done: List[Request] = []
         for i, r in enumerate(wave):
-            s = r.slot
+            r.generated.append(int(first_np[i]))
+            r.first_token_time = now
             r.state = RequestState.DECODING
-            tok = int(first_np[i])
-            r.generated.append(tok)
-            new_lengths[s] = lens[i]
-            new_last[s] = tok
-            new_temps[s] = r.temperature
-            self.active[s] = r
-        self.lengths = jnp.asarray(new_lengths)
-        self.last_tokens = jnp.asarray(new_last)
-        self.temps = jnp.asarray(new_temps)
+            self._host_lengths[r.slot] = len(r.prompt)
+            if row_active_np[i]:
+                self.active[r.slot] = r
+            else:
+                done.append(self._finish(r))
         self.stats.prefill_tokens += int(lens.sum())
         self.stats.prefill_batches += 1
-
-    def _decode_wave(self):
-        self._rng, k = jax.random.split(self._rng)
-        toks, self.cache, self.lengths = self._decode(
-            self.params, self.last_tokens, self.cache, self.lengths,
-            self.temps, k)
-        self.last_tokens = toks
-        toks_np = np.asarray(toks)
-        for s, r in list(self.active.items()):
-            tok = int(toks_np[s])
-            r.generated.append(tok)
-            self.stats.decode_tokens += 1
-
-    def _collect_done(self) -> List[Request]:
-        done = []
-        for s, r in list(self.active.items()):
-            stop = (r.generated and r.generated[-1] in r.stop_tokens)
-            full = len(r.generated) >= r.max_new_tokens
-            over = int(np.asarray(self.lengths)[s]) >= self.cache_len - 1
-            if stop or full or over:
-                r.state = RequestState.DONE
-                del self.active[s]
-                self.free_slots.append(s)
-                done.append(r)
-                self.stats.completed += 1
         return done
+
+    def _megastep_wave(self) -> List[Request]:
+        t0 = time.monotonic()
+        # the restore pass is only needed when free slots exist whose cache
+        # rows must survive the megastep untouched
+        exe = self._megastep_exe(self._decode_prefix(),
+                                 len(self.active) < self.slots)
+        (self.cache, self.lengths, self.last_tokens, self.active_mask,
+         self.gen_counts, self._rng, block, produced) = exe(
+            self.params, self.cache, self.lengths, self.last_tokens,
+            self.temps, self.active_mask, self.gen_counts, self.max_news,
+            self.stop_table, self._rng, jnp.asarray(bool(self.queue)))
+
+        # the single host sync for up to K tokens across all slots
+        block_np, produced_np, active_np = jax.device_get(
+            (block, produced, self.active_mask))
+        now = time.monotonic()
+        done: List[Request] = []
+        for s, r in list(self.active.items()):
+            k = int(produced_np[s])
+            if k:
+                r.generated.extend(int(t) for t in block_np[s, :k])
+            if not active_np[s]:
+                del self.active[s]
+                done.append(self._finish(r, now))
+        # token accounting derived from the device-side produced counts —
+        # no per-token Python loop; host length shadow keeps prefix-bucket
+        # selection sync-free
+        self._host_lengths += produced_np
+        self.stats.decode_tokens += int(produced_np.sum())
+        self.stats.megasteps += 1
+        self.stats.decode_seconds += time.monotonic() - t0
+        return done
+
+    def _finish(self, r: Request, now: Optional[float] = None) -> Request:
+        r.state = RequestState.DONE
+        r.finished_time = now if now is not None else time.monotonic()
+        self.free_slots.append(r.slot)
+        self.stats.completed += 1
+        return r
 
     def snapshot(self) -> Dict:
         """Engine-state summary (used by PCM checkpointing & tests)."""
@@ -215,5 +520,6 @@ class InferenceEngine:
             "active": len(self.active), "queued": len(self.queue),
             "free_slots": len(self.free_slots),
             "cache_bytes": kvcache.cache_bytes(self.cache),
+            "compile_seconds": self.compile_seconds,
             "stats": self.stats.as_dict(),
         }

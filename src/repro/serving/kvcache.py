@@ -31,17 +31,89 @@ def batch_axes(init_cache: Callable, cache_len: int, dtype) -> Any:
     return jax.tree_util.tree_map(find, a, b)
 
 
-def merge_slots(global_cache, new_cache, slots: jax.Array, axes) -> Any:
+def merge_slots(global_cache, new_cache, slots: jax.Array, axes,
+                valid: jax.Array = None) -> Any:
     """Scatter new_cache (batch n) into global_cache (batch B) at ``slots``.
 
-    ``slots`` (n,) int32. Jit-friendly (axes is a static pytree of ints)."""
+    ``slots`` (n,) int32. Jit-friendly (axes is a static pytree of ints).
+    ``valid`` (n,) bool, optional: rows where False write their target slot
+    back unchanged — this is the padded-wave prefill path, where ``slots``
+    is a permutation of the slot indices and only the valid rows carry
+    freshly prefilled requests. With the global cache donated, XLA updates
+    the slot buffers in place: no separate wave-cache merge dispatch."""
 
     def upd(g, n, ax):
         gm = jnp.moveaxis(g, ax, 0)
         nm = jnp.moveaxis(n, ax, 0).astype(gm.dtype)
+        if valid is not None:
+            keep = valid.reshape((-1,) + (1,) * (nm.ndim - 1))
+            nm = jnp.where(keep, nm, gm[slots])
         return jnp.moveaxis(gm.at[slots].set(nm), 0, ax)
 
     return jax.tree_util.tree_map(upd, global_cache, new_cache, axes)
+
+
+def select_slots(old_cache, new_cache, active: jax.Array, axes) -> Any:
+    """Per-slot select between two same-shape caches: rows where ``active``
+    take new_cache, the rest keep old_cache bit-for-bit. The megastep runs
+    this after every fused decode iteration so free/finished slots' cache
+    rows are provably untouched, whatever the cache family."""
+
+    def sel(o, n, ax):
+        shape = [1] * o.ndim
+        shape[ax] = o.shape[ax]
+        m = active.reshape(shape)
+        return jnp.where(m, n.astype(o.dtype), o)
+
+    return jax.tree_util.tree_map(sel, old_cache, new_cache, axes)
+
+
+def seq_axes(init_cache: Callable, batch: int, cache_len: int, dtype) -> Any:
+    """Pytree of ints: the cache-length axis of every leaf, or -1 for
+    leaves that do NOT scale with ``cache_len`` (ring buffers capped below
+    it, SSM/xLSTM state matrices, cross-attention memories).
+
+    Discovered the same way as ``batch_axes``: build abstract caches at two
+    cache lengths and diff shapes. The megastep uses this to run decode on
+    a bucketed cache *prefix* — per-token work proportional to the live
+    context, not the allocated capacity."""
+    assert cache_len > 8, cache_len
+    a = jax.eval_shape(lambda: init_cache(batch, cache_len, dtype))
+    b = jax.eval_shape(lambda: init_cache(batch, cache_len - 8, dtype))
+
+    def find(sa, sb):
+        diff = [i for i, (x, y) in enumerate(zip(sa.shape, sb.shape))
+                if x != y]
+        if len(diff) == 1 and sa.shape[diff[0]] == cache_len:
+            return diff[0]
+        return -1
+
+    return jax.tree_util.tree_map(find, a, b)
+
+
+def slice_prefix(cache, prefix: int, axes) -> Any:
+    """The first ``prefix`` cache positions of every scaling leaf (static
+    slice); non-scaling leaves (-1) pass through whole."""
+
+    def cut(leaf, ax):
+        if ax < 0:
+            return leaf
+        return jax.lax.slice_in_dim(leaf, 0, prefix, axis=ax)
+
+    return jax.tree_util.tree_map(cut, cache, axes)
+
+
+def write_prefix(full_cache, view, axes) -> Any:
+    """Write a prefix view (from ``slice_prefix``) back into the full
+    cache; with the full cache donated this is an in-place prefix update."""
+
+    def put(fl, vl, ax):
+        if ax < 0:
+            return vl
+        return jax.lax.dynamic_update_slice_in_dim(fl, vl.astype(fl.dtype),
+                                                   0, axis=ax)
+
+    return jax.tree_util.tree_map(put, full_cache, view, axes)
 
 
 def gather_slots(global_cache, slots: jax.Array, axes) -> Any:

@@ -31,22 +31,50 @@ class Request:
     state: RequestState = RequestState.QUEUED
     generated: List[int] = field(default_factory=list)
     slot: Optional[int] = None
+    # megastep accounting: tokens arrive in blocks of up to K per host
+    # sync, so timing is tracked at block granularity
+    first_token_time: Optional[float] = None
+    finished_time: Optional[float] = None
 
     @property
     def done(self) -> bool:
         return self.state in (RequestState.DONE, RequestState.CANCELLED)
 
+    @property
+    def decode_seconds(self) -> Optional[float]:
+        """Wall time from first token to completion (None while running)."""
+        if self.first_token_time is None or self.finished_time is None:
+            return None
+        return self.finished_time - self.first_token_time
+
+    @property
+    def tokens_per_second(self) -> Optional[float]:
+        """Per-request decode throughput over the generated block(s)."""
+        dt = self.decode_seconds
+        if dt is None or len(self.generated) <= 1:
+            return None
+        return (len(self.generated) - 1) / max(dt, 1e-9)
+
 
 @dataclass
 class EngineStats:
     prefill_tokens: int = 0
-    decode_tokens: int = 0
+    decode_tokens: int = 0         # derived from device-side produced counts
     completed: int = 0
     steps: int = 0
     prefill_batches: int = 0
+    megasteps: int = 0             # fused-decode dispatches (<= decode_tokens)
+    compiles: int = 0              # executable-cache misses (0 when warm)
+    decode_seconds: float = 0.0    # wall time inside megastep dispatch+sync
+
+    @property
+    def decode_tokens_per_second(self) -> float:
+        return self.decode_tokens / max(self.decode_seconds, 1e-9)
 
     def as_dict(self) -> Dict:
         return dict(prefill_tokens=self.prefill_tokens,
                     decode_tokens=self.decode_tokens,
                     completed=self.completed, steps=self.steps,
-                    prefill_batches=self.prefill_batches)
+                    prefill_batches=self.prefill_batches,
+                    megasteps=self.megasteps, compiles=self.compiles,
+                    decode_seconds=self.decode_seconds)

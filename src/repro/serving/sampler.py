@@ -7,10 +7,15 @@ import jax.numpy as jnp
 
 
 def sample(logits: jax.Array, rng: jax.Array, temperature: jax.Array,
-           top_k: int = 0, vocab_size: int = 0) -> jax.Array:
+           top_k: int = 0, vocab_size: int = 0,
+           active: jax.Array = None,
+           fallback: jax.Array = None) -> jax.Array:
     """logits (B,V) -> tokens (B,). temperature (B,): 0 => greedy.
 
-    ``vocab_size`` masks out padded vocab rows (padded_vocab > vocab)."""
+    ``vocab_size`` masks out padded vocab rows (padded_vocab > vocab).
+    ``active`` (B,) bool masks slots: inactive rows ignore their (garbage)
+    logits and return ``fallback`` (default 0) — the megastep's free and
+    mid-megastep-finished slots sample nothing."""
     lf = logits.astype(jnp.float32)
     if vocab_size and vocab_size < lf.shape[-1]:
         mask = jnp.arange(lf.shape[-1]) < vocab_size
@@ -21,4 +26,9 @@ def sample(logits: jax.Array, rng: jax.Array, temperature: jax.Array,
         lf = jnp.where(lf >= kth, lf, -1e30)
     t = jnp.maximum(temperature, 1e-6)[:, None]
     sampled = jax.random.categorical(rng, lf / t, axis=-1).astype(jnp.int32)
-    return jnp.where(temperature > 0.0, sampled, greedy)
+    toks = jnp.where(temperature > 0.0, sampled, greedy)
+    if active is not None:
+        fb = jnp.zeros_like(toks) if fallback is None \
+            else fallback.astype(toks.dtype)
+        toks = jnp.where(active, toks, fb)
+    return toks

@@ -57,6 +57,47 @@ def test_flash_decode_sweep(B, H, Hkv, D, Skv, dtype):
     assert err < TOL[dtype], err
 
 
+def test_attend_decode_kernel_routing():
+    """cfg.use_kernels routes single-token decode through the length-masked
+    Pallas flash-decode; logits must match the XLA grouped-attention path."""
+    from repro.configs import get_reduced_config
+    from repro.models import build_model
+    cfg_x = get_reduced_config("smollm2-1.7b")
+    cfg_k = get_reduced_config("smollm2-1.7b", use_kernels=True)
+    model_x, model_k = build_model(cfg_x), build_model(cfg_k)
+    params = model_x.init(jax.random.PRNGKey(0))
+    cache = jax.tree_util.tree_map(
+        lambda a: jax.random.normal(jax.random.PRNGKey(1), a.shape,
+                                    a.dtype) * 0.1,
+        model_x.init_cache(2, 32, jnp.float32))
+    toks = jnp.array([[5], [9]], jnp.int32)
+    lengths = jnp.array([3, 17], jnp.int32)
+    lx, _ = model_x.decode_step(params, toks, lengths, cache)
+    lk, _ = model_k.decode_step(params, toks, lengths, cache)
+    err = float(jnp.max(jnp.abs(lx - lk)))
+    assert err < 2e-4, err
+
+
+def test_flash_decode_active_mask():
+    """The megastep's per-slot mask: inactive slots' lengths are forced to
+    0 so every KV block is skipped; active slots match the oracle."""
+    B, H, Hkv, D, Skv = 4, 8, 2, 64, 256
+    q = _mk(0, (B, H, D), jnp.float32)
+    ck = _mk(1, (B, Skv, Hkv, D), jnp.float32)
+    cv = _mk(2, (B, Skv, Hkv, D), jnp.float32)
+    lengths = jnp.array([100, 7, 200, 256], jnp.int32)
+    active = jnp.array([True, False, True, False])
+    out = ops.flash_decode(q, ck, cv, lengths, scale=D ** -0.5,
+                           block_k=128, active=active)
+    exp = ref.flash_decode_ref(q, ck, cv, lengths, scale=D ** -0.5)
+    for b in range(B):
+        if bool(active[b]):
+            err = float(jnp.max(jnp.abs(out[b] - exp[b])))
+            assert err < TOL[jnp.float32], (b, err)
+        else:
+            assert float(jnp.max(jnp.abs(out[b]))) == 0.0, b
+
+
 @pytest.mark.parametrize("B,S,H,N,P,chunk", [(1, 128, 2, 16, 32, 32),
                                              (2, 256, 1, 64, 64, 128),
                                              (1, 64, 4, 8, 16, 64)])

@@ -85,6 +85,116 @@ def test_cache_slot_merge_gather(smol):
         assert float(jnp.max(jnp.abs(leaf))) == 0.0
 
 
+def _generate_with_stops(model, params, ps, stop_tokens, K,
+                         max_new_tokens=12):
+    eng = InferenceEngine(model, params, slots=4, cache_len=64,
+                          prefill_buckets=(16, 32), megastep=K)
+    reqs = [eng.submit(Request(prompt=list(p), max_new_tokens=max_new_tokens,
+                               stop_tokens=stop_tokens)) for p in ps]
+    eng.run_to_completion()
+    return [r.generated for r in reqs], eng
+
+
+def test_megastep_parity_greedy(smol):
+    """Greedy outputs must be bit-identical for K in {1, 8, 32}, including
+    mid-megastep stop-token exits on mixed-length prompts."""
+    cfg, model, params = smol
+    ps = prompts(cfg, 9, seed=7)
+    base, _ = _generate_with_stops(model, params, ps, (1,), 1)
+    # force real mid-stream stops: stop on a token the model actually emits
+    stop = next(t for out in base for t in out[1:])
+    outs = {}
+    for K in (1, 8, 32):
+        outs[K], eng = _generate_with_stops(model, params, ps, (1, stop), K)
+        assert eng.stats.decode_tokens == sum(
+            len(o) - 1 for o in outs[K])    # derived block accounting
+    assert outs[1] == outs[8] == outs[32]
+    assert any(o[-1] == stop and len(o) < 12 for o in outs[1]), \
+        "stop token never fired — test is vacuous"
+
+
+def test_masked_slots_cache_unchanged(smol):
+    """Free slots' cache rows must be bit-for-bit unchanged by megasteps."""
+    cfg, model, params = smol
+    eng = InferenceEngine(model, params, slots=4, cache_len=64,
+                          prefill_buckets=(16,), megastep=8)
+    # poison the free slots' rows so "unchanged" is distinguishable from
+    # "zeroed"
+    marker = jax.tree_util.tree_map(lambda a: jnp.ones_like(a) * 3.25,
+                                    model.init_cache(2, 64, jnp.float32))
+    eng.cache = merge_slots(eng.cache, marker, jnp.array([2, 3]), eng._axes)
+    ps = prompts(cfg, 2, seed=11)
+    eng.generate(ps, max_new_tokens=6)          # occupies slots 0 and 1
+    kept = gather_slots(eng.cache, jnp.array([2, 3]), eng._axes)
+    for leaf in jax.tree_util.tree_leaves(kept):
+        assert float(jnp.min(leaf)) == 3.25 and float(jnp.max(leaf)) == 3.25
+
+
+def test_long_prompt_not_truncated(smol):
+    """Prompts longer than the largest configured bucket must prefill whole
+    (buckets auto-extend to cache_len) — never silently truncate."""
+    cfg, model, params = smol
+    rng = np.random.RandomState(2)
+    long_p = list(rng.randint(8, cfg.vocab_size, size=40))
+    small = InferenceEngine(model, params, slots=1, cache_len=64,
+                            prefill_buckets=(16,))
+    assert small.prefill_buckets == (16, 64)
+    big = InferenceEngine(model, params, slots=1, cache_len=64,
+                          prefill_buckets=(64,))
+    assert (small.generate([long_p], max_new_tokens=4) ==
+            big.generate([long_p], max_new_tokens=4))
+    from repro.serving.engine import _bucket
+    with pytest.raises(ValueError):
+        _bucket(99, (16, 64))
+
+
+def test_engine_under_pcm_zero_compiles(smol):
+    """Materializing an engine inside a PCM context AOT-compiles its
+    executables; tasks on the warm context perform zero compiles."""
+    from repro.core import Library, load_context, make_recipe
+    cfg, model, params = smol
+
+    def build():
+        eng = InferenceEngine(model, params, slots=2, cache_len=32,
+                              prefill_buckets=(16,), megastep=8)
+        return {"engine": eng}
+
+    def task(ps):
+        return load_context("engine").generate(ps, max_new_tokens=4)
+
+    recipe = make_recipe("warm.engine", build)
+    lib = Library("w0")
+    ps = prompts(cfg, 3, seed=13)
+    ctx = lib.ensure(recipe)                # materialize: AOT warm happens
+    eng = ctx.value["engine"]
+    assert ctx.aot_seconds > 0 and lib.aot_seconds_total > 0
+    warm_compiles = eng.stats.compiles
+    assert warm_compiles > 0
+    lib.invoke(task, (ps,), recipe=recipe, task_id="t1")
+    assert eng.stats.compiles == warm_compiles, \
+        "first task on a warm context must not compile"
+    lib.invoke(task, (ps,), recipe=recipe, task_id="t2")
+    assert eng.stats.compiles == warm_compiles, \
+        "second task on a warm context must not compile"
+
+
+def test_megastep_prefix_buckets_parity(smol):
+    """Length-bounded decode (bucketed cache prefix) must not change
+    outputs vs full-cache decode."""
+    cfg, model, params = smol
+    ps = prompts(cfg, 6, seed=17)
+    bucketed = InferenceEngine(model, params, slots=3, cache_len=256,
+                               prefill_buckets=(16,), megastep=8)
+    assert len(bucketed.decode_buckets) > 1
+    full = InferenceEngine(model, params, slots=3, cache_len=256,
+                           prefill_buckets=(16,), megastep=8,
+                           decode_buckets=(256,))
+    assert (bucketed.generate(ps, max_new_tokens=8) ==
+            full.generate(ps, max_new_tokens=8))
+    assert ("megastep", 8, 64, True) in bucketed._exe or \
+           ("megastep", 8, 64, False) in bucketed._exe
+
+
 def test_temperature_sampling_differs(smol):
     cfg, model, params = smol
     ps = prompts(cfg, 2, seed=5)
