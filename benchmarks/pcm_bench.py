@@ -1,0 +1,178 @@
+"""PCM context-lifecycle + worker-churn benchmark (``--only pcm``).
+
+Measures the paper's central quantity on the live concurrent runtime:
+what a context START costs depending on where the context currently lives.
+
+  cold   : builder + AOT compile (SHARED_FS -> ... -> DEVICE, full startup)
+  warm   : context already device-resident (Library hit)
+  host   : restore from a HOST_RAM snapshot (jax.device_put, no compiles)
+  disk   : restore from a LOCAL_DISK spill (npz load + device_put)
+
+plus end-to-end tasks/s under worker churn: ``client.map`` over a live
+pool where a worker is preempted (device reclaimed, contexts demoted to
+the node snapshot pool) and a replacement joins every N completed tasks.
+
+Writes ``BENCH_pcm.json``. With ``strict=True`` (the ``--only pcm`` CI
+smoke job) it asserts the acceptance bars: restore >= 5x faster than a
+cold rebuild, zero builder calls / zero XLA compiles on restore, greedy
+parity across the round trip, and every churned future completing.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+
+def _build_engine_recipe(name: str, quick: bool, builds: List):
+    import jax
+
+    from repro.configs import get_reduced_config
+    from repro.core import make_recipe
+    from repro.models import build_model
+    from repro.serving import InferenceEngine
+
+    cfg = get_reduced_config("smollm2-1.7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    slots, cache_len = (2, 64) if quick else (4, 128)
+
+    def build():
+        builds.append(1)
+        eng = InferenceEngine(model, params, slots=slots,
+                              cache_len=cache_len, prefill_buckets=(16, 32),
+                              megastep=8)
+        return {"engine": eng, "cfg": cfg}
+
+    return make_recipe(name, build, host_bytes=0)
+
+
+def _prompts(cfg, n: int, seed: int = 0):
+    import numpy as np
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(8, cfg.vocab_size,
+                             size=rng.randint(3, 12))) for _ in range(n)]
+
+
+def bench_context_lifecycle(quick: bool, strict: bool) -> Dict:
+    """Cold-build vs warm vs restored (host and disk) start latency on one
+    real engine context, with the round-trip parity/zero-compile checks."""
+    from repro.core import Library, SnapshotPool, Tier
+
+    builds: List = []
+    pool = SnapshotPool()
+    lib = Library("bench", snapshots=pool)
+    rec = _build_engine_recipe("bench.ctx", quick, builds)
+
+    t0 = time.monotonic()
+    ctx = lib.ensure(rec)                       # builder + AOT compile
+    cold_s = time.monotonic() - t0
+    eng = ctx.value["engine"]
+    cfg = ctx.value["cfg"]
+    ps = _prompts(cfg, 4)
+    baseline = eng.generate(ps, max_new_tokens=6)
+    compiles_before = eng.stats.compiles
+
+    t0 = time.monotonic()
+    lib.ensure(rec)                             # already resident
+    warm_s = time.monotonic() - t0
+
+    lib.demote(rec.key())                       # DEVICE -> HOST_RAM
+    t0 = time.monotonic()
+    lib.ensure(rec)                             # HOST_RAM -> DEVICE
+    host_restore_s = time.monotonic() - t0
+
+    lib.demote(rec.key())
+    pool.spill(rec.key())                       # HOST_RAM -> LOCAL_DISK
+    assert pool.tier(rec.key()) == Tier.LOCAL_DISK
+    t0 = time.monotonic()
+    ctx = lib.ensure(rec)                       # LOCAL_DISK -> DEVICE
+    disk_restore_s = time.monotonic() - t0
+
+    roundtrip = ctx.value["engine"].generate(ps, max_new_tokens=6)
+    parity = roundtrip == baseline
+    zero_compiles = ctx.value["engine"].stats.compiles == compiles_before
+    zero_rebuilds = len(builds) == 1
+    speedup_host = cold_s / max(host_restore_s, 1e-9)
+    speedup_disk = cold_s / max(disk_restore_s, 1e-9)
+
+    if strict:
+        assert parity, "greedy outputs diverged across the tier round trip"
+        assert zero_compiles, "restore triggered an XLA compile"
+        assert zero_rebuilds, "restore re-ran the context builder"
+        assert speedup_host >= 5.0, (
+            f"host restore only {speedup_host:.1f}x faster than cold "
+            "rebuild (need >= 5x)")
+    return {
+        "cold_build_seconds": cold_s,
+        "warm_start_seconds": warm_s,
+        "host_restore_seconds": host_restore_s,
+        "disk_restore_seconds": disk_restore_s,
+        "speedup_restore_vs_cold": speedup_host,
+        "speedup_disk_restore_vs_cold": speedup_disk,
+        "greedy_parity_across_roundtrip": parity,
+        "zero_compiles_on_restore": zero_compiles,
+        "zero_builder_calls_on_restore": zero_rebuilds,
+        "aot_compile_seconds": ctx.aot_seconds,
+    }
+
+
+def bench_churn(quick: bool, strict: bool) -> Dict:
+    """tasks/s on the concurrent runtime while the pool churns: every
+    ``preempt_every`` completions one worker is preempted (its contexts
+    demote to the snapshot pool) and a fresh worker joins (restoring on
+    demand)."""
+    from repro.core import ContextMode, PCMClient, PCMManager, load_context
+
+    n_workers = 2 if quick else 4
+    n_tasks = 16 if quick else 64
+    preempt_every = 5 if quick else 8
+    builds: List = []
+
+    mgr = PCMManager(mode=ContextMode.FULL, n_workers=n_workers)
+    client = PCMClient(backend=mgr)
+    try:
+        rec = _build_engine_recipe("churn.ctx", quick, builds)
+        ctx = client.context(rec)
+        ctx.warm_up()                            # startup off the clock
+
+        def infer(seed):
+            eng = load_context("engine")
+            cfg = load_context("cfg")
+            return eng.generate(_prompts(cfg, 2, seed=seed),
+                                max_new_tokens=4)
+
+        t0 = time.monotonic()
+        batch = client.map(infer, list(range(n_tasks)), context=ctx,
+                           timeout=600)
+        churns = 0
+        for i, fut in enumerate(batch.as_completed(timeout=600)):
+            fut.result(timeout=60)
+            if (i + 1) % preempt_every == 0 and i + 1 < n_tasks:
+                mgr.preempt_worker(next(iter(mgr.workers)))
+                mgr.add_worker()
+                churns += 1
+        wall = time.monotonic() - t0
+        if strict:
+            assert batch.done_count == n_tasks, "churn lost futures"
+        st = mgr.stats()
+        return {
+            "n_workers": n_workers,
+            "n_tasks": n_tasks,
+            "preempt_every": preempt_every,
+            "churn_events": churns,
+            "wall_seconds": wall,
+            "tasks_per_second": n_tasks / max(wall, 1e-9),
+            "context_restores": st["context_restores"],
+            "context_demotions": st["context_demotions"],
+            "builder_calls": st["builder_calls"],
+            "completed": st["completed"],
+        }
+    finally:
+        mgr.shutdown()
+
+
+def bench_pcm(quick: bool = False, strict: bool = False) -> Dict:
+    lifecycle = bench_context_lifecycle(quick, strict)
+    churn = bench_churn(quick, strict)
+    return {"quick": quick, "lifecycle": lifecycle, "churn": churn}

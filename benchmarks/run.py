@@ -6,6 +6,13 @@ and writes machine-readable ``BENCH_serving.json`` (warm decode tokens/s,
 µs per dispatch, AOT compile seconds, greedy cross-K parity) so the perf
 trajectory is tracked across PRs; CI runs it as a ``--quick`` smoke job.
 
+The ``pcm`` section measures the context lifecycle on the live concurrent
+runtime — cold-build vs warm vs restored (HOST_RAM / LOCAL_DISK snapshot)
+start latency, plus tasks/s under worker churn (preempt + rejoin every N
+tasks) — and writes ``BENCH_pcm.json``; CI runs it as a ``--quick`` smoke
+job with a wall-clock timeout that doubles as a deadlock canary for the
+concurrent runtime.
+
   PYTHONPATH=src python -m benchmarks.run [--quick/--full] [--only SECTION]
 """
 
@@ -24,13 +31,26 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smoke-sized runs (CI)")
     ap.add_argument("--only", default=None,
-                    choices=("paper", "micro", "roofline", "serving"))
+                    choices=("paper", "micro", "roofline", "serving", "pcm"))
     ap.add_argument("--json-out", default="BENCH_serving.json",
                     help="where the serving section writes its JSON record")
+    ap.add_argument("--pcm-json-out", default="BENCH_pcm.json",
+                    help="where the pcm section writes its JSON record")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     t0 = time.time()
+    if args.only in (None, "pcm"):
+        from benchmarks import pcm_bench
+        record = pcm_bench.bench_pcm(quick=args.quick,
+                                     strict=args.only == "pcm")
+        with open(args.pcm_json_out, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        life, churn = record["lifecycle"], record["churn"]
+        print(f"# wrote {args.pcm_json_out} "
+              f"(restore x{life['speedup_restore_vs_cold']:.1f} vs cold, "
+              f"{churn['tasks_per_second']:.2f} tasks/s under churn)",
+              file=sys.stderr)
     if args.only in (None, "serving"):
         from benchmarks import microbench
         record = microbench.bench_megastep(quick=args.quick,

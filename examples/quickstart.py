@@ -12,11 +12,26 @@ generates up to K tokens across all slots before the host syncs (see the
 
 The SAME workload function runs against two backends:
 
-  1. the LIVE backend (PCMManager): real JAX inference on this host;
+  1. the LIVE backend (PCMManager): real JAX inference on this host,
+     executed by a CONCURRENT actor runtime — every worker is a thread
+     with a mailbox owning its Library/ContextStore, the scheduler runs
+     behind one lock fed by runtime events, and Futures resolve on
+     condition variables (``result(timeout=...)`` just waits, nothing
+     busy-polls);
   2. the SIMULATOR backend: a dry run against the paper's calibrated
      device cost models — no model is built, Futures resolve to modeled
      placement/timing records. This is how cluster-scale figures are
      explored before burning GPU hours.
+
+Context tier movement is PHYSICAL on the live backend. Preempting a
+worker (or calling ``ctx.demote()``) snapshots the context off the
+device — params + engine state via ``jax.device_get`` into the node
+snapshot pool, spilling LRU snapshots to local disk through
+``checkpoint/io`` — and the next task that needs it RESTORES instead of
+rebuilding: zero builder calls, zero XLA compiles, bit-identical greedy
+outputs, at transfer cost instead of minutes of startup. That delta is
+the paper's headline number; ``python -m benchmarks.run --only pcm``
+measures it for real (BENCH_pcm.json).
 
 Migrating from the PR-0 decorator API:
 
@@ -123,6 +138,21 @@ def main():
     for fut in more.as_completed(timeout=600):
         assert fut.result() is not None
     print("requeued tasks completed on the surviving warm worker.")
+
+    # physical demotion/restore: the context leaves the device (host-RAM
+    # snapshot in the node pool) and comes back at restore cost — no
+    # builder rerun, no recompiles
+    demoted = ctx.demote()                       # DEVICE -> HOST_RAM
+    print(f"demoted context off {len(demoted)} worker(s); snapshot tier: "
+          f"{ctx.snapshot_tier().name}")
+    t0 = time.monotonic()
+    fut = client.submit(infer_model, claims[:2], context=ctx)
+    assert fut.result(timeout=600) is not None
+    st = client.stats()
+    print(f"restored + ran in {time.monotonic() - t0:.2f}s "
+          f"({st['context_restores']} restore(s), builder ran "
+          f"{st['builder_calls']}x total — cold build took "
+          f"{st['context_build_seconds']:.1f}s)")
 
     print("== simulator backend: same workload, modeled cluster time ==")
     sim = PCMClient(backend=SimulatorBackend(n_workers=8, profile="a10",

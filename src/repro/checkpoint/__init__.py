@@ -1,2 +1,2 @@
 from repro.checkpoint.io import load_pytree, save_pytree, is_valid
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointManager, SpillStore

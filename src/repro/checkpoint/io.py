@@ -35,6 +35,16 @@ def _path_str(p) -> str:
     return str(p)
 
 
+def _sha256_file(path: str, chunk: int = 1 << 20) -> str:
+    """Streaming digest: checkpoint/snapshot payloads can be many GB, so
+    hashing must not load the whole file into RAM."""
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(chunk), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
 def save_pytree(tree, directory: str, extra_meta: Optional[Dict] = None
                 ) -> str:
     os.makedirs(os.path.dirname(directory) or ".", exist_ok=True)
@@ -43,13 +53,13 @@ def save_pytree(tree, directory: str, extra_meta: Optional[Dict] = None
     try:
         flat = _flatten(tree)
         np.savez(os.path.join(tmp, "arrays.npz"), **flat)
-        with open(os.path.join(tmp, "arrays.npz"), "rb") as f:
-            digest = hashlib.sha256(f.read()).hexdigest()
+        digest = _sha256_file(os.path.join(tmp, "arrays.npz"))
         manifest = {
             "keys": sorted(flat.keys()),
             "dtypes": {k: str(v.dtype) for k, v in flat.items()},
             "shapes": {k: list(v.shape) for k, v in flat.items()},
             "sha256": digest,
+            "nbytes": int(sum(v.nbytes for v in flat.values())),
             "meta": extra_meta or {},
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -71,8 +81,7 @@ def is_valid(directory: str) -> bool:
     try:
         with open(man) as f:
             manifest = json.load(f)
-        with open(arr, "rb") as f:
-            return hashlib.sha256(f.read()).hexdigest() == manifest["sha256"]
+        return _sha256_file(arr) == manifest["sha256"]
     except (json.JSONDecodeError, KeyError, OSError):
         return False
 

@@ -15,7 +15,7 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
-from repro.cluster.devices import (CostModel, DeviceProfile, PROFILES,
+from repro.cluster.devices import (CostModel, DeviceProfile, GB, PROFILES,
                                    fs_fetch_bytes, inference_seconds,
                                    load_seconds)
 from repro.cluster.events import Event, EventLoop
@@ -56,13 +56,23 @@ def modeled_start_seconds(a: Action, task: Task, profile: DeviceProfile,
         else:
             stats["cold"] += 1
         disk_resident = a.disk_resident or (False,) * len(a.recipes)
+        host_resident = a.host_resident or (False,) * len(a.recipes)
         device_resident = a.device_resident or (False,) * len(a.recipes)
         loaded_any = False
-        for recipe, on_disk, on_device in zip(a.recipes, disk_resident,
-                                              device_resident):
+        for recipe, on_disk, on_host, on_device in zip(
+                a.recipes, disk_resident, host_resident, device_resident):
             if on_device:
                 continue     # already in HBM: nothing to fetch or load
             key = recipe.key()
+            if on_host:
+                # demoted snapshot in host RAM: promotion is a single
+                # host->HBM transfer — no network fetch, no disk read, no
+                # framework warm-up (the process never died)
+                startup += planner.restore_seconds(
+                    recipe.host_bytes,
+                    h2d_bytes_per_s=profile.pcie_gbps * GB)
+                loaded_any = True
+                continue
             if not on_disk:
                 donors = {
                     wid for wid, info in scheduler.workers.items()

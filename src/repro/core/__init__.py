@@ -12,18 +12,33 @@ priority hints). The client drives a pluggable **ExecutionBackend**
 discrete-event cluster model — swap one constructor argument to go from
 serving to paper-figure simulation.
 
+The live backend is a **concurrent actor runtime**: every worker is a
+thread with a mailbox owning its Library/ContextStore; the scheduler runs
+behind one lock fed by runtime events; Futures resolve on condition
+variables. Context tier movement is physical — demotion snapshots params
+and engine state to host RAM (``jax.device_get``), spills to local disk
+through ``checkpoint/io``, and promotion restores with zero builder calls
+and zero XLA compiles (see the residency state diagram in store.py).
+
 Module map:
-  context.py   ContextRecipe / Context (first-class LLM contexts)
-  store.py     tiered per-worker residency + pinning (agnostic/partial/full)
-  library.py   persistent executor holding materialized (named) contexts
-  transfer.py  shared-FS vs peer-to-peer bootstrap planning
-  scheduler.py context-aware placement (multi-context, contextless,
-               priority hints), requeue-on-preemption, stragglers
+  context.py   ContextRecipe / Context / ContextSnapshot (first-class LLM
+               contexts through their whole residency lifecycle)
+  store.py     tiered per-worker residency + pinning (agnostic/partial/
+               full, TierFullError on pin-blocked admission) + the node
+               SnapshotPool (physical HOST_RAM/LOCAL_DISK tiers)
+  library.py   per-worker executor holding materialized (named) contexts;
+               restore-over-rebuild, demote to the pool
+  transfer.py  shared-FS vs peer-to-peer bootstrap planning + promotion
+               (restore) bandwidth modeling
+  scheduler.py context-aware placement (DEVICE > HOST_RAM > LOCAL_DISK >
+               cold ladder, multi-context, contextless, priority hints),
+               requeue-on-preemption, stragglers
   factory.py   reactive opportunistic pool reconciliation
-  manager.py   live in-process runtime (real JAX execution) + Future
+  manager.py   live concurrent runtime (worker actor threads + mailboxes,
+               real JAX execution, physical preemption demotion) + Future
   backend.py   ExecutionBackend protocol + SimulatorBackend dry-run
-  api.py       PCMClient / ContextHandle / FutureBatch (+ legacy
-               @context_app shim, paper Fig. 5)
+  api.py       PCMClient / ContextHandle (pin, warm_up, demote, residency)
+               / FutureBatch (+ legacy @context_app shim, paper Fig. 5)
 """
 
 from repro.core.api import (ContextHandle, FutureBatch, PCMClient,
@@ -32,13 +47,16 @@ from repro.core.api import (ContextHandle, FutureBatch, PCMClient,
                             set_default_manager)
 from repro.core.backend import (ExecutionBackend, LiveBackend, SimTaskResult,
                                 SimulatorBackend)
-from repro.core.context import Context, ContextRecipe, materialize
+from repro.core.context import (Context, ContextRecipe, ContextSnapshot,
+                                materialize, restore_context,
+                                snapshot_context)
 from repro.core.library import (Library, current_context,
                                 load_variable_from_context)
 from repro.core.manager import Future, PCMManager
 from repro.core.scheduler import (Action, Completion, ContextAwareScheduler,
                                   Task, WorkerPhase)
-from repro.core.store import ContextMode, ContextStore, Tier
+from repro.core.store import (ContextMode, ContextStore, SnapshotPool, Tier,
+                              TierFullError)
 from repro.core.transfer import TransferPlan, TransferPlanner
 
 __all__ = [
@@ -46,9 +64,10 @@ __all__ = [
     "get_default_client", "get_default_manager", "load_context",
     "make_recipe", "set_default_manager", "ExecutionBackend", "LiveBackend",
     "SimTaskResult", "SimulatorBackend", "Context", "ContextRecipe",
-    "materialize", "Library", "current_context",
+    "ContextSnapshot", "materialize", "restore_context", "snapshot_context",
+    "Library", "current_context",
     "load_variable_from_context", "Future", "PCMManager", "Action",
     "Completion", "ContextAwareScheduler", "Task", "WorkerPhase",
-    "ContextMode", "ContextStore", "Tier", "TransferPlan",
-    "TransferPlanner",
+    "ContextMode", "ContextStore", "SnapshotPool", "Tier", "TierFullError",
+    "TransferPlan", "TransferPlanner",
 ]

@@ -45,6 +45,7 @@ construct a PCMClient and use ``client.context`` + ``@client.task``.
 from __future__ import annotations
 
 import functools
+import threading
 import time
 from typing import (Any, Callable, Dict, Iterable, Iterator, List, Mapping,
                     Optional, Sequence, Tuple, Union)
@@ -102,6 +103,22 @@ class ContextHandle:
         return self._client.backend.warm_up(self.recipe,
                                             worker_ids=worker_ids)
 
+    def demote(self, tier: Tier = Tier.HOST_RAM,
+               worker_ids: Optional[List[str]] = None) -> List[str]:
+        """Physically move the context off the device: DEVICE -> HOST_RAM
+        snapshot (params + engine state via ``jax.device_get``), spilled on
+        to LOCAL_DISK with ``tier=Tier.LOCAL_DISK``. The next task that
+        needs it RESTORES at transfer cost — zero builder calls, zero
+        compiles, bit-identical state. Returns the workers that held it."""
+        return self._client.backend.demote_context(self.recipe, tier=tier,
+                                                   worker_ids=worker_ids)
+
+    def snapshot_tier(self) -> Optional[Tier]:
+        """Tier of the demoted snapshot in the node pool (live backend),
+        or None when no demoted copy exists."""
+        getter = getattr(self._client.backend, "snapshot_tier", None)
+        return None if getter is None else getter(self.recipe)
+
     def pin(self) -> "ContextHandle":
         """Refcounted: nested pins (e.g. a with-block inside a standing
         pin) only release the backend pin when the count reaches zero."""
@@ -157,8 +174,14 @@ class FutureBatch:
         self._backend = backend
         self._timeout = timeout
         self._completed: List[Future] = []     # completion order
+        self._cond = threading.Condition()
         for f in self._futures:
-            f.add_done_callback(self._completed.append)
+            f.add_done_callback(self._on_done)
+
+    def _on_done(self, fut: Future):
+        with self._cond:
+            self._completed.append(fut)
+            self._cond.notify_all()
 
     def __len__(self) -> int:
         return len(self._futures)
@@ -204,9 +227,13 @@ class FutureBatch:
 
     def as_completed(self, timeout: Optional[float] = None
                      ) -> Iterator[Future]:
-        """Yield futures as they complete, driving the backend stepwise."""
+        """Yield futures as they complete. On a concurrent backend this
+        waits on a condition variable (worker threads progress on their
+        own); on the single-threaded simulator it drives the event loop
+        stepwise."""
         timeout = self._timeout if timeout is None else timeout
         deadline = None if timeout is None else time.monotonic() + timeout
+        concurrent = getattr(self._backend, "concurrent", False)
         yielded = 0
         while yielded < len(self._futures):
             if yielded < len(self._completed):
@@ -218,6 +245,24 @@ class FutureBatch:
                     f"{len(self._futures) - yielded} of "
                     f"{len(self._futures)} futures incomplete after "
                     f"{timeout:.3f}s")
+            if concurrent:
+                # completions notify immediately; the 0.1s slice is only a
+                # heartbeat for the stall checks below
+                with self._cond:
+                    if len(self._completed) <= yielded:
+                        self._cond.wait(0.1)
+                if len(self._completed) <= yielded and \
+                        self._backend.outstanding == 0:
+                    raise RuntimeError(
+                        f"{len(self._futures) - yielded} futures lost: "
+                        "backend idle with tasks unresolved")
+                if deadline is None and \
+                        not getattr(self._backend, "workers", True):
+                    # no live workers and no deadline: nothing can resolve
+                    raise RuntimeError(
+                        "backend stalled (no live workers) with "
+                        f"{self._backend.outstanding} tasks outstanding")
+                continue
             if not self._backend.step():
                 if self._backend.outstanding == 0:
                     raise RuntimeError(
@@ -346,6 +391,13 @@ class PCMClient:
     def drain(self) -> int:
         """Run the backend until no actions/events are pending."""
         return self.backend.run_until_idle()
+
+    def shutdown(self):
+        """Stop the backend's worker threads (live backend; no-op on the
+        simulator)."""
+        stop = getattr(self.backend, "shutdown", None)
+        if stop is not None:
+            stop()
 
     def stats(self) -> Dict:
         return self.backend.stats()

@@ -15,7 +15,11 @@ and resolve their Futures. Two implementations ship:
 
 Both backends share the scheduler, the tiered ContextStore residency
 bookkeeping, pinning, and the transfer planner — the only thing that
-changes is whether wall-clock work happens.
+changes is whether wall-clock work happens. They differ in HOW progress is
+made (``concurrent``): the live manager runs worker actor threads and
+``wait`` blocks on condition variables; the simulator is single-threaded
+and ``wait``/``step`` drive the discrete-event loop. Each exposes its own
+single clock source (``now``) that stamps every scheduler event.
 """
 
 from __future__ import annotations
@@ -35,7 +39,17 @@ from repro.core.transfer import TransferPlanner
 @runtime_checkable
 class ExecutionBackend(Protocol):
     """What the PCMClient needs from a runtime. ``PCMManager`` and
-    ``SimulatorBackend`` both satisfy it."""
+    ``SimulatorBackend`` both satisfy it.
+
+    ``concurrent`` tells consumers how progress is made: True — worker
+    threads run independently and ``wait`` blocks on condition variables;
+    False — single-threaded, and ``wait``/``step`` drive the event loop.
+    ``now`` is the backend's single clock source: every scheduler event
+    timestamp comes from it (wall seconds since start for the live
+    runtime, modeled event-loop seconds for the simulator) — never from
+    ``time.monotonic()`` directly."""
+
+    concurrent: bool
 
     def submit(self, fn: Callable, args: tuple = (), kwargs: dict = None,
                recipe: Optional[ContextRecipe] = None,
@@ -46,8 +60,15 @@ class ExecutionBackend(Protocol):
 
     def run_until_idle(self) -> int: ...
 
+    def wait(self, fut: Future, timeout: Optional[float] = None) -> None: ...
+
     def warm_up(self, recipe: ContextRecipe,
                 worker_ids: Optional[List[str]] = None) -> List[str]: ...
+
+    def demote_context(self, recipe: ContextRecipe,
+                       tier: Tier = Tier.HOST_RAM,
+                       worker_ids: Optional[List[str]] = None
+                       ) -> List[str]: ...
 
     def pin_context(self, recipe: ContextRecipe) -> None: ...
 
@@ -59,6 +80,9 @@ class ExecutionBackend(Protocol):
 
     @property
     def outstanding(self) -> int: ...
+
+    @property
+    def now(self) -> float: ...
 
     def stats(self) -> Dict: ...
 
@@ -87,6 +111,8 @@ class SimulatorBackend:
     pool opportunistic; without one, a static pool of ``n_workers`` x
     ``profile`` joins at t=0.
     """
+
+    concurrent = False       # progress happens by driving step()/wait()
 
     def __init__(self, n_workers: int = 4, profile: str = "a10",
                  mode: ContextMode = ContextMode.FULL,
@@ -220,10 +246,59 @@ class SimulatorBackend:
         return {wid: info.store.highest_tier(key)
                 for wid, info in self.scheduler.workers.items()}
 
+    def demote_context(self, recipe: ContextRecipe,
+                       tier: Tier = Tier.HOST_RAM,
+                       worker_ids: Optional[List[str]] = None) -> List[str]:
+        """Modeled demotion: device residency drops to ``tier`` on each
+        holding worker; a later start there pays the modeled promotion
+        (host->HBM, or disk load) instead of a cold transfer+build.
+        Pinned contexts refuse demotion, matching the live backend."""
+        if tier not in (Tier.HOST_RAM, Tier.LOCAL_DISK):
+            raise ValueError(f"demotion target must be HOST_RAM or "
+                             f"LOCAL_DISK, got {tier!r}")
+        key = recipe.key()
+        moved = []
+        for wid in list(worker_ids or self.scheduler.workers):
+            info = self.scheduler.workers.get(wid)
+            if info is None or not info.store.has(key, Tier.DEVICE) \
+                    or key in info.store.pinned:
+                continue
+            info.store.drop(key, down_to=tier)
+            moved.append(wid)
+        return moved
+
     # --------------------------------------------------------- execution ---
     def step(self) -> bool:
         """Advance modeled time by one event; False when none pending."""
         return self.loop.run_one()
+
+    def wait(self, fut: Future, timeout: Optional[float] = None):
+        """Drive the event loop until ``fut`` resolves. Stepwise, not
+        run_until_idle: the deadline is checked between events, so a
+        timeout can't be overshot by the whole backlog."""
+        import time as _time
+        deadline = None if timeout is None else _time.monotonic() + timeout
+        while not fut.done:
+            progressed = self.step()
+            if fut.done:
+                break
+            if not progressed:
+                if self.outstanding == 0:
+                    raise RuntimeError(fut._lost_message())
+                if deadline is None:
+                    # single-threaded runtime: no event can arrive while we
+                    # block here, so a stall with work outstanding is final
+                    raise RuntimeError(
+                        f"backend stalled with {self.outstanding} "
+                        f"task(s) outstanding and no runnable workers "
+                        f"while waiting on {fut.task_id} — add workers or "
+                        "pass result(timeout=...)")
+                _time.sleep(0.001)   # bounded wait until the deadline
+            if deadline is not None and _time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"task {fut.task_id} did not complete within "
+                    f"{timeout:.3f}s ({self.outstanding} tasks "
+                    "still outstanding)")
 
     def _on_resolved(self, fut: Future):
         self._unresolved -= 1
@@ -255,8 +330,13 @@ class SimulatorBackend:
             self._fetch_events.pop(wid, None)
             info = self.scheduler.workers.get(wid)
             if info is not None:
-                info.store.admit_recipe(a.recipe, Tier.DEVICE,
-                                        now=self.loop.now)
+                try:
+                    info.store.admit_recipe(a.recipe, Tier.DEVICE,
+                                            now=self.loop.now)
+                except ValueError:
+                    pass     # pin-blocked (TierFullError): on_fetch_done
+                    # marks the worker fetch_blocked for this key
+
             self._apply(self.scheduler.on_fetch_done(wid, key,
                                                      self.loop.now))
 

@@ -1,11 +1,18 @@
-"""Context recipes and materialized contexts — the paper's first-class
-entity.
+"""Context recipes, materialized contexts and context snapshots — the
+paper's first-class entity through its whole residency lifecycle.
 
 A *recipe* is everything needed to (re)build an LLM context anywhere in the
 cluster: the constructor function, its inputs, the software environment, and
 the byte footprint of each stage (shared-FS artifact -> local disk -> host
 RAM -> device HBM). A *context* is one materialization of a recipe on one
 worker; the Library holds it across task executions (full-context mode).
+
+A *snapshot* (:class:`ContextSnapshot`) is a demoted context: the device-
+resident state (weights, KV cache, per-slot decode state, RNG) pulled to
+host RAM via ``jax.device_get``, with the AOT-compiled executables retained
+as host metadata. Snapshots can spill further to local disk through
+``repro.checkpoint.io`` and are promoted back with ``restore_context`` —
+no builder call, no XLA compile, bit-identical state.
 
 Recipes hash stably (``key()``), so the scheduler, stores, and transfer
 planner all agree on identity without shipping the payload around.
@@ -107,6 +114,8 @@ class Context:
     aot_seconds: float = 0.0       # AOT executable warm-up inside the build
     uses: int = 0
     last_used: float = field(default_factory=time.monotonic)
+    restored: bool = False         # promoted from a snapshot, not built
+    restore_seconds: float = 0.0   # real promotion cost when restored
 
     @property
     def key(self) -> str:
@@ -117,19 +126,35 @@ class Context:
         self.last_used = time.monotonic()
 
 
-def _warmable(value: Any):
-    """Yield AOT-warmable engines reachable from a context value.
-
-    Duck-typed (``warm_executables``) so core never imports the serving
-    layer; looks at the value itself plus one level of dict/list/tuple
-    containers — the shapes context builders actually return."""
+def _reachable(value: Any):
+    """The context value plus one level of dict/list/tuple containers —
+    the shapes context builders actually return."""
     items = [value]
     if isinstance(value, dict):
         items += list(value.values())
     elif isinstance(value, (list, tuple)):
         items += list(value)
-    for v in items:
+    return items
+
+
+def _warmable(value: Any):
+    """Yield AOT-warmable engines reachable from a context value.
+
+    Duck-typed (``warm_executables``) so core never imports the serving
+    layer."""
+    for v in _reachable(value):
         if callable(getattr(v, "warm_executables", None)):
+            yield v
+
+
+def _offloadable(value: Any):
+    """Yield objects reachable from a context value that support physical
+    device<->host state movement (duck-typed ``offload_device_state`` /
+    ``restore_device_state`` — e.g. :class:`repro.serving.InferenceEngine`).
+    Deterministic order: demote and restore walk the same sequence."""
+    for v in _reachable(value):
+        if callable(getattr(v, "offload_device_state", None)) and \
+                callable(getattr(v, "restore_device_state", None)):
             yield v
 
 
@@ -152,3 +177,158 @@ def materialize(recipe: ContextRecipe, worker_id: str = "local") -> Context:
         aot += engine.warm_executables()
     return Context(recipe=recipe, value=value, worker_id=worker_id,
                    build_seconds=time.monotonic() - t0, aot_seconds=aot)
+
+
+# ----------------------------------------------------------- snapshots -----
+def _tree_nbytes(tree: Any) -> int:
+    import numpy as np
+    total = 0
+    for leaf in _tree_leaves(tree):
+        if hasattr(leaf, "nbytes"):
+            total += int(leaf.nbytes)
+        elif hasattr(leaf, "size") and hasattr(leaf, "dtype"):
+            total += int(leaf.size) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def _tree_leaves(tree: Any):
+    import jax
+    return jax.tree_util.tree_leaves(tree)
+
+
+@dataclass
+class ContextSnapshot:
+    """A demoted context: the materialized value with its device state
+    pulled off the accelerator.
+
+    ``value`` is the builder's return object (engine instances, tokenizers,
+    plain dicts) with every offloadable component's device arrays REMOVED —
+    the AOT-compiled executables stay attached to those components as host
+    metadata, which is what makes promotion compile-free. ``host_state``
+    maps component index -> host (numpy) pytree of that component's device
+    state; for values with no offloadable components the value itself IS
+    the (host) state and ``host_state`` is empty.
+
+    Lifecycle::
+
+        snapshot_context(ctx)   DEVICE    -> HOST_RAM   (jax.device_get)
+        snap.spill(store)       HOST_RAM  -> LOCAL_DISK (checkpoint/io npz)
+        snap.unspill(store)     LOCAL_DISK-> HOST_RAM   (npz load)
+        restore_context(snap)   HOST_RAM  -> DEVICE     (jax.device_put)
+
+    A snapshot is single-owner: restoring it moves the value object to the
+    restoring worker (see ``repro.core.store.SnapshotPool.take``).
+    """
+
+    recipe: ContextRecipe
+    value: Any
+    host_state: Dict[str, Any]
+    nbytes: int
+    build_seconds: float = 0.0
+    aot_seconds: float = 0.0
+    spilled: bool = False            # arrays currently on LOCAL_DISK
+    spill_key: str = ""
+    created_at: float = field(default_factory=time.monotonic)
+    last_used: float = field(default_factory=time.monotonic)
+    demote_seconds: float = 0.0
+
+    @property
+    def key(self) -> str:
+        return self.recipe.key()
+
+    @property
+    def tier(self) -> int:
+        """1 == Tier.LOCAL_DISK, 2 == Tier.HOST_RAM (int values match the
+        ``repro.core.store.Tier`` IntEnum; typed as int to avoid a circular
+        import)."""
+        return 1 if self.spilled else 2
+
+    # ----------------------------------------------------------- spilling --
+    def spill(self, spill_store) -> str:
+        """Write the host arrays to local disk (atomic npz + manifest via
+        ``repro.checkpoint.io``) and release the host RAM copy. A shape/
+        dtype skeleton stays in RAM so ``unspill`` can rebuild the exact
+        pytree structure."""
+        if self.spilled:
+            return self.spill_key
+        import uuid
+
+        import jax
+        # generation-unique path: two snapshots of the SAME context can be
+        # in flight concurrently (e.g. demote on two workers) — sharing a
+        # directory would let the loser's discard delete the winner's data
+        self.spill_key = f"ctx_{self.key}_{uuid.uuid4().hex[:8]}"
+        spill_store.save(self.spill_key, self.host_state,
+                         meta={"context_key": self.key,
+                               "recipe": self.recipe.name})
+        self._skeleton = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)
+            if hasattr(a, "shape") else a, self.host_state)
+        self.host_state = {}
+        self.spilled = True
+        return self.spill_key
+
+    def unspill(self, spill_store):
+        """Read the arrays back LOCAL_DISK -> HOST_RAM and delete the disk
+        copy: snapshots are single-owner, so promotion CONSUMES the spill
+        (leaving it would leak one GB-scale npz directory per
+        demote-to-disk/restore cycle)."""
+        if not self.spilled:
+            return
+        self.host_state, _ = spill_store.load(self.spill_key,
+                                              like=self._skeleton)
+        spill_store.delete(self.spill_key)
+        self.spill_key = ""
+        self._skeleton = None
+        self.spilled = False
+
+    def discard(self, spill_store):
+        """Drop the on-disk copy (pool eviction of a spilled snapshot)."""
+        if self.spilled and self.spill_key:
+            spill_store.delete(self.spill_key)
+
+
+def snapshot_context(ctx: Context) -> ContextSnapshot:
+    """Demote DEVICE -> HOST_RAM: pull every offloadable component's device
+    state to host numpy (one ``jax.device_get`` per component) and detach
+    it from the accelerator. The value object (with its AOT executables)
+    rides along as host metadata; values with no offloadable components
+    (plain host objects) snapshot as-is."""
+    t0 = time.monotonic()
+    host_state: Dict[str, Any] = {}
+    for i, comp in enumerate(_offloadable(ctx.value)):
+        host_state[f"c{i}"] = comp.offload_device_state()
+    nbytes = _tree_nbytes(host_state) if host_state \
+        else ctx.recipe.host_bytes
+    return ContextSnapshot(recipe=ctx.recipe, value=ctx.value,
+                           host_state=host_state, nbytes=nbytes,
+                           build_seconds=ctx.build_seconds,
+                           aot_seconds=ctx.aot_seconds,
+                           demote_seconds=time.monotonic() - t0)
+
+
+def restore_context(snap: ContextSnapshot, worker_id: str = "local",
+                    spill_store=None) -> Context:
+    """Promote a snapshot back to a live device-resident Context.
+
+    LOCAL_DISK snapshots are unspilled to host first (requires
+    ``spill_store``), then each offloadable component's state is pushed
+    back with ``jax.device_put``. No builder call, no XLA compile: the
+    executables never left the component objects. ``restore_seconds`` on
+    the returned Context records the real promotion cost."""
+    t0 = time.monotonic()
+    if snap.spilled:
+        if spill_store is None:
+            raise ValueError(
+                f"snapshot {snap.key} is spilled to disk; a spill store is "
+                "required to restore it")
+        snap.unspill(spill_store)
+    for i, comp in enumerate(_offloadable(snap.value)):
+        comp.restore_device_state(snap.host_state[f"c{i}"])
+    snap.host_state = {}
+    ctx = Context(recipe=snap.recipe, value=snap.value, worker_id=worker_id,
+                  build_seconds=snap.build_seconds,
+                  aot_seconds=snap.aot_seconds)
+    ctx.restore_seconds = time.monotonic() - t0
+    ctx.restored = True
+    return ctx

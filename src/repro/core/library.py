@@ -7,6 +7,15 @@ resident context. On TPU the materialization includes AOT compilation, so
 the Library doubles as a compile cache: the (weights, executables, KV pool)
 triple survives across tasks.
 
+In the concurrent runtime each Library is owned by ONE worker actor thread
+(see ``repro.core.manager``): all builds, invocations and demotions happen
+on that thread, serialized by the worker's mailbox. The Library is also
+the seam for physical tier movement — ``ensure`` prefers promoting a
+demoted snapshot from the node :class:`~repro.core.store.SnapshotPool`
+(restore cost: one host/disk -> device transfer, zero builder calls, zero
+compiles) over re-running the builder, and ``demote``/``demote_all`` push
+resident contexts the other way when a worker idles or loses its device.
+
 A task may hold SEVERAL named contexts at once (e.g. a verifier engine and
 a reranker engine); ``invoke`` installs the whole mapping and
 ``load_variable_from_context`` resolves both unqualified variable names
@@ -24,7 +33,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional, Set
 
-from repro.core.context import Context, ContextRecipe, materialize
+from repro.core.context import (Context, ContextRecipe, materialize,
+                                restore_context, snapshot_context)
 
 _current: contextvars.ContextVar = contextvars.ContextVar(
     "repro_pcm_context", default=None)
@@ -86,20 +96,29 @@ class InvocationRecord:
 class Library:
     """One per worker. Materializes recipes once; executes invocations."""
 
-    def __init__(self, worker_id: str = "local"):
+    def __init__(self, worker_id: str = "local", snapshots=None):
         self.worker_id = worker_id
+        self.snapshots = snapshots     # node SnapshotPool (may be None)
         self._contexts: Dict[str, Context] = {}
         self.pinned: Set[str] = set()
         self.records: List[InvocationRecord] = []
         self.build_seconds_total = 0.0
         self.aot_seconds_total = 0.0   # executable warm-up inside builds
+        self.builder_calls = 0         # full materializations (cold builds)
+        self.restores = 0              # snapshot promotions (no builder)
+        self.restore_seconds_total = 0.0
+        self.demotions = 0
 
     # ---------------------------------------------------------- contexts --
     def has(self, key: str) -> bool:
         return key in self._contexts
 
     def ensure(self, recipe: ContextRecipe) -> Context:
-        """Materialize if absent (the one-time startup); return resident.
+        """Return the resident context, RESTORING it from the node snapshot
+        pool when a demoted copy exists (promotion: ``jax.device_put`` of
+        the host/disk snapshot — zero builder calls, zero compiles), and
+        materializing it from scratch only when it does not (the one-time
+        startup).
 
         Materialization AOT-compiles any engines in the built value (see
         ``repro.core.context.materialize``), so the resident context holds
@@ -107,11 +126,48 @@ class Library:
         it never pay a compile."""
         key = recipe.key()
         if key not in self._contexts:
-            ctx = materialize(recipe, self.worker_id)
+            ctx = None
+            if self.snapshots is not None:
+                snap = self.snapshots.take(key)
+                if snap is not None:
+                    ctx = restore_context(
+                        snap, self.worker_id,
+                        spill_store=self.snapshots.spill_store())
+                    self.restores += 1
+                    self.restore_seconds_total += ctx.restore_seconds
+                    self.snapshots.restore_seconds += ctx.restore_seconds
+            if ctx is None:
+                ctx = materialize(recipe, self.worker_id)
+                self.builder_calls += 1
+                self.build_seconds_total += ctx.build_seconds
+                self.aot_seconds_total += ctx.aot_seconds
             self._contexts[key] = ctx
-            self.build_seconds_total += ctx.build_seconds
-            self.aot_seconds_total += ctx.aot_seconds
         return self._contexts[key]
+
+    def demote(self, key: str, force: bool = False):
+        """Physically demote one resident context DEVICE -> HOST_RAM: pull
+        its device state into a ContextSnapshot and hand it to the node
+        snapshot pool (which may later spill it to LOCAL_DISK). Returns the
+        snapshot, or None when the key is absent/pinned (pins are a
+        device-residency promise; pass ``force`` when the device itself is
+        being lost). A Library without a snapshot pool cannot demote —
+        refusing up front, NOT evicting, so the context is never destroyed
+        by a demotion that has nowhere to put it."""
+        if self.snapshots is None:
+            return None
+        ctx = self.evict(key, force=force)
+        if ctx is None:
+            return None
+        snap = snapshot_context(ctx)
+        self.snapshots.put(snap)
+        self.demotions += 1
+        return snap
+
+    def demote_all(self, force: bool = False):
+        """Demote every resident context (worker retirement: the device is
+        being reclaimed, so even pinned contexts move to host)."""
+        for key in list(self._contexts):
+            self.demote(key, force=force)
 
     def install(self, ctx: Context):
         """Adopt a context transferred from a peer (P2P bootstrap)."""

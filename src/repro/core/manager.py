@@ -1,15 +1,32 @@
-"""PCMManager — the live (in-process) PCM runtime.
+"""PCMManager — the live concurrent (in-process) PCM runtime.
 
-Runs the same ContextAwareScheduler as the cluster simulator, but executes
-tasks for real: each logical worker owns a Library whose contexts are
-actual JAX objects (weights + jitted executables + KV pools). On this
-single-host container the workers time-share the CPU device; on a real
-cluster each worker binds a TPU slice and the same code applies.
+Actor-style execution core. Each logical worker is a **thread with a
+mailbox** (:class:`LiveWorker`) that owns its :class:`Library` and
+:class:`ContextStore`: builds, invocations, demotions and restores for a
+worker all happen on its own thread, serialized by the mailbox. The
+manager side — the ContextAwareScheduler, the Future table and the task
+clock — lives behind one lock; every runtime event (submit, fetch-done,
+task-done, join, leave) enters through that lock, asks the scheduler for
+Actions, and routes them to worker mailboxes. Nothing busy-polls:
+Futures carry condition variables and resolve the moment a worker reports
+completion.
 
-Live preemption (``preempt_worker``) drops the worker and its device-tier
-contexts mid-flight; the scheduler requeues and the task re-runs on a warm
-worker — the end-to-end mechanism of the paper, measurable with real
-inference (examples/opportunistic_serving.py).
+Context tier movement is PHYSICAL here. Preempting a worker
+(``preempt_worker``) reclaims its device: the scheduler instantly requeues
+its in-flight task (no-warning semantics), and the worker's retirement
+demotes every device-resident context into the node
+:class:`~repro.core.store.SnapshotPool` — params and engine state pulled
+to host RAM via ``jax.device_get``, AOT-executable handles retained, LRU
+snapshots spilling to local disk through ``checkpoint/io``. A later
+``add_worker`` (or any worker that needs the context) PROMOTES the
+snapshot instead of re-running the builder: zero builder calls, zero XLA
+compiles, bit-identical decode state — the paper's restore-cost-not-
+startup-cost claim, executed for real.
+
+All scheduler event timestamps come from one clock source: ``self.now``
+(monotonic seconds since the manager started). The simulator backend uses
+its event-loop clock the same way, so durations and completions are
+comparable across backends.
 
 PCMManager implements the ``ExecutionBackend`` protocol
 (:mod:`repro.core.backend`): the PCMClient session API drives it
@@ -18,22 +35,32 @@ interchangeably with the simulator-backed dry-run backend.
 
 from __future__ import annotations
 
+import atexit
 import itertools
+import queue
+import sys
+import threading
 import time
-from dataclasses import dataclass, field
+import traceback
+import weakref
 from typing import Any, Callable, Dict, List, Mapping, Optional
 
 from repro.core.context import ContextRecipe
 from repro.core.library import Library
 from repro.core.scheduler import (Action, ContextAwareScheduler, ContextMode,
                                   Task)
-from repro.core.store import ContextStore, Tier
+from repro.core.store import ContextStore, SnapshotPool, Tier
 from repro.core.transfer import TransferPlanner
 
 
 class Future:
-    """Handle to one submitted task. Resolved by the backend's event loop;
-    ``result(timeout=...)`` drives the backend until the value is ready."""
+    """Handle to one submitted task.
+
+    Resolution is event-driven: worker threads (live backend) or the
+    discrete-event loop (simulator backend) call ``set_result`` /
+    ``set_exception``; ``result(timeout=...)`` blocks on a condition
+    variable (live) or drives the event loop (sim) via ``backend.wait``.
+    """
 
     def __init__(self, task_id: str, backend):
         self.task_id = task_id
@@ -42,61 +69,50 @@ class Future:
         self._ready = False
         self.error: Optional[BaseException] = None
         self._callbacks: List[Callable[["Future"], None]] = []
+        self._cond = threading.Condition(threading.RLock())
 
     # ------------------------------------------------------- resolution ----
     def set_result(self, value: Any):
-        if self._ready:
-            return
-        self._value = value
-        self._ready = True
-        self._fire_callbacks()
+        with self._cond:
+            if self._ready:
+                return
+            self._value = value
+            self._ready = True
+            self._cond.notify_all()
+            self._fire_callbacks()
 
     def set_exception(self, error: BaseException):
-        if self._ready:
-            return
-        self.error = error
-        self._ready = True
-        self._fire_callbacks()
+        with self._cond:
+            if self._ready:
+                return
+            self.error = error
+            self._ready = True
+            self._cond.notify_all()
+            self._fire_callbacks()
 
     def _fire_callbacks(self):
+        # fired from the resolving thread (a worker actor, holding runtime
+        # locks): a raising user callback must never wedge the runtime
         callbacks, self._callbacks = self._callbacks, []
         for cb in callbacks:
-            cb(self)
+            try:
+                cb(self)
+            except BaseException:
+                traceback.print_exc(file=sys.stderr)
 
     def add_done_callback(self, cb: Callable[["Future"], None]):
         """Run ``cb(self)`` once the future resolves (immediately if it
         already has)."""
-        if self._ready:
-            cb(self)
-        else:
-            self._callbacks.append(cb)
+        with self._cond:
+            if not self._ready:
+                self._callbacks.append(cb)
+                return
+        cb(self)
 
     # --------------------------------------------------------- consumers ---
     def result(self, timeout: Optional[float] = None) -> Any:
-        # stepwise, not run_until_idle: the deadline is checked between
-        # actions, so a timeout can't be overshot by the whole backlog
-        deadline = None if timeout is None else time.monotonic() + timeout
-        while not self._ready:
-            progressed = self._backend.step()
-            if self._ready:
-                break
-            if not progressed:
-                if self._backend.outstanding == 0:
-                    raise RuntimeError(self._lost_message())
-                if deadline is None:
-                    # single-threaded runtime: no event can arrive while we
-                    # block here, so a stall with work outstanding is final
-                    raise RuntimeError(
-                        f"backend stalled with {self._backend.outstanding} "
-                        f"task(s) outstanding and no runnable workers "
-                        f"while waiting on {self.task_id} — add workers or "
-                        "pass result(timeout=...)")
-                time.sleep(0.001)   # bounded wait until the deadline
-            if deadline is not None and time.monotonic() >= deadline:
-                raise TimeoutError(
-                    f"task {self.task_id} did not complete within "
-                    f"{timeout:.3f}s ({self._backend.outstanding} tasks "
-                    "still outstanding)")
+        if not self._ready:
+            self._backend.wait(self, timeout)
         if self.error is not None:
             raise self.error
         return self._value
@@ -115,48 +131,308 @@ class Future:
         return self._ready
 
 
-@dataclass
+_STOP = "stop"
+_RETIRE = "retire"
+
+
+def _shutdown_at_exit(mgr_ref):
+    """Join every worker thread before the interpreter (and the XLA
+    runtime underneath it) tears down — a thread still inside a JAX call
+    at exit aborts the process with 'terminate called without an active
+    exception'."""
+    mgr = mgr_ref()
+    if mgr is not None:
+        mgr.shutdown()
+
+
 class LiveWorker:
-    worker_id: str
-    library: Library
-    store: ContextStore
+    """One worker actor: a daemon thread + mailbox owning this worker's
+    Library (materialized contexts) and ContextStore (residency
+    bookkeeping).
+
+    Mailbox messages are ``(kind, ...)`` tuples routed by the manager:
+
+      ("start", task_id)              run one task invocation
+      ("fetch", recipe)               materialize/restore off-path
+      ("warm", recipe, event)         synchronous warm-up (event set when
+                                      resident)
+      ("demote", key, tier, event)    physically demote one context
+      ("retire",)                     device reclaimed: demote everything
+                                      to the node snapshot pool and exit
+      ("stop",)                       plain shutdown (no demotion)
+
+    The thread executes messages strictly in order, so a preemption that
+    lands mid-invocation simply marks the worker dead (``alive=False``):
+    the in-flight result is discarded at the revalidation barrier and the
+    retirement demotion runs right after the current message finishes —
+    no state is ever snapshotted mid-mutation.
+    """
+
+    def __init__(self, worker_id: str, manager: "PCMManager"):
+        self.worker_id = worker_id
+        self.library = Library(worker_id, snapshots=manager.snapshots)
+        self.store = ContextStore()
+        self.mailbox: "queue.SimpleQueue" = queue.SimpleQueue()
+        self.alive = True
+        self._mgr = manager
+        self._thread = threading.Thread(
+            target=self._run, name=f"pcm-worker-{worker_id}", daemon=True)
+
+    def start(self):
+        self._thread.start()
+
+    def post(self, msg: tuple):
+        self.mailbox.put(msg)
+
+    def join(self, timeout: Optional[float] = None):
+        self._thread.join(timeout)
+
+    # ------------------------------------------------------------ thread ---
+    def _run(self):
+        while True:
+            msg = self.mailbox.get()
+            kind = msg[0]
+            if kind == _STOP:
+                self._mgr._absorb_library(self.library)
+                break
+            if kind == _RETIRE:
+                try:
+                    self.library.demote_all(force=True)
+                except BaseException:
+                    traceback.print_exc(file=sys.stderr)
+                self._mgr._absorb_library(self.library)
+                break
+            try:
+                if kind == "start":
+                    self._handle_start(msg[1])
+                elif kind == "fetch":
+                    self._handle_fetch(msg[1])
+                elif kind == "warm":
+                    self._handle_warm(msg[1], msg[2], msg[3])
+                elif kind == "demote":
+                    self._handle_demote(msg[1], msg[2], msg[3], msg[4])
+            except BaseException:
+                traceback.print_exc(file=sys.stderr)
+        self._drain_events()
+
+    def _drain_events(self):
+        # a retiring worker must not strand synchronous callers: release
+        # every event still waiting in the mailbox
+        while True:
+            try:
+                msg = self.mailbox.get_nowait()
+            except queue.Empty:
+                return
+            for part in msg:
+                if isinstance(part, threading.Event):
+                    part.set()
+
+    # ---------------------------------------------------------- handlers ---
+    def _handle_start(self, task_id: str):
+        mgr = self._mgr
+        with mgr._lock:
+            entry = mgr.scheduler.running.get(task_id)
+            if not self.alive or entry is None or entry[0] != self.worker_id:
+                return                    # cancelled / reassigned / dead
+            task = mgr.scheduler.tasks[task_id]
+            fn, args, kwargs = task.payload
+            named = dict(zip(task.context_names, task.recipes))
+        # the invocation (context build/restore + user fn) runs OUTSIDE the
+        # manager lock: other workers keep dispatching and completing
+        value: Any = None
+        error: Optional[BaseException] = None
+        try:
+            value = self.library.invoke(fn, args, kwargs,
+                                        recipes=named or None,
+                                        task_id=task_id)
+        except BaseException as e:       # report, don't wedge the pool
+            error = e
+        with mgr._cond:
+            entry = mgr.scheduler.running.get(task_id)
+            if not self.alive or entry is None or entry[0] != self.worker_id:
+                # preempted or cancelled while running: the scheduler has
+                # already requeued/completed elsewhere — discard this copy
+                return
+            if mgr.mode == ContextMode.AGNOSTIC:
+                self.library.evict_all()
+            elif mgr.mode == ContextMode.PARTIAL:
+                for key in task.keys():
+                    self.library.evict(key)
+            fut = mgr._futures.get(task.duplicates_of or task_id)
+            if fut is not None:
+                if error is None:
+                    fut.set_result(value)
+                else:
+                    fut.set_exception(error)
+            acts = mgr.scheduler.on_task_done(self.worker_id, task_id,
+                                              mgr.now)
+            mgr._fail_unresolved()
+            mgr._dispatch(acts)
+            mgr._cond.notify_all()
+
+    def _handle_fetch(self, recipe: ContextRecipe):
+        mgr = self._mgr
+        if not self.alive:
+            return           # preempted with the fetch still queued: the
+            # scheduler already forgot this worker — don't burn a build
+        key = recipe.key()
+        failed = False
+        try:
+            self.library.ensure(recipe)
+        except BaseException:
+            traceback.print_exc(file=sys.stderr)
+            failed = True
+        with mgr._cond:
+            if not self.alive:
+                return
+            # a failed build reports a non-matching key: the scheduler
+            # clears the fetching state without recording residency
+            acts = mgr.scheduler.on_fetch_done(
+                self.worker_id, "<build-failed>" if failed else key, mgr.now)
+            mgr._dispatch(acts)
+            mgr._cond.notify_all()
+
+    def _handle_warm(self, recipe: ContextRecipe, event: threading.Event,
+                     errors: List[BaseException]):
+        mgr = self._mgr
+        try:
+            self.library.ensure(recipe)
+            with mgr._lock:
+                if self.alive:
+                    self.store.admit_recipe(recipe, mgr.mode.persist_tier,
+                                            now=mgr.now)
+        except BaseException as e:       # surfaced by warm_up in the caller
+            errors.append(e)
+        finally:
+            event.set()
+
+    def _handle_demote(self, key: str, tier: Tier, event: threading.Event,
+                       demoted: List[str]):
+        mgr = self._mgr
+        try:
+            snap = self.library.demote(key)   # None when absent or pinned
+            if snap is not None and tier == Tier.LOCAL_DISK:
+                mgr.snapshots.spill(key)
+            with mgr._lock:
+                if snap is not None:
+                    demoted.append(self.worker_id)
+                    self.store.drop(key, down_to=tier)
+                    try:
+                        self.store.admit(key, tier, snap.nbytes,
+                                         now=mgr.now)
+                    except ValueError:
+                        # bookkeeping refused (pin-blocked tier); the
+                        # snapshot is in the pool regardless — the worker
+                        # just shows as cold to the placement ladder
+                        pass
+        finally:
+            event.set()
 
 
 class PCMManager:
+    concurrent = True        # work progresses on threads, not via step()
+
     def __init__(self, mode: ContextMode = ContextMode.FULL,
                  n_workers: int = 2,
-                 planner: Optional[TransferPlanner] = None):
+                 planner: Optional[TransferPlanner] = None,
+                 snapshots: Optional[SnapshotPool] = None,
+                 spill_dir: Optional[str] = None):
         self.mode = mode
-        self.scheduler = ContextAwareScheduler(mode=mode, planner=planner)
+        self.planner = planner or TransferPlanner()
+        self.scheduler = ContextAwareScheduler(mode=mode, planner=self.planner)
+        self.snapshots = snapshots or SnapshotPool(spill_dir=spill_dir)
+        # when a pooled snapshot is consumed (restored elsewhere) or lost
+        # (capacity), the HOST_RAM residency other workers recorded for it
+        # is a phantom — invalidate it so the placement ladder stays honest
+        self.snapshots.set_on_gone(self._on_snapshot_gone)
         self.workers: Dict[str, LiveWorker] = {}
         self._futures: Dict[str, Future] = {}
         self._ids = itertools.count()
         self._task_ids = itertools.count()
         self._pinned: set = set()
-        self._pending_actions: List[Action] = []
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._t0 = time.monotonic()
+        # counters of departed workers (preempted/stopped), folded into
+        # stats() so churn doesn't erase history
+        self._retired = {"cold": 0, "warm": 0, "build_seconds": 0.0,
+                         "restore_seconds": 0.0, "builder_calls": 0,
+                         "restores": 0, "demotions": 0}
+        # every worker ever spawned (incl. preempted ones): shutdown joins
+        # them all so no thread is mid-JAX-call at interpreter teardown
+        self._spawned: List[LiveWorker] = []
+        atexit.register(_shutdown_at_exit, weakref.ref(self))
         for _ in range(n_workers):
             self.add_worker()
 
+    # ------------------------------------------------------------- clock ----
+    @property
+    def now(self) -> float:
+        """THE clock for scheduler events on this backend: monotonic
+        seconds since the manager started (the simulator backend's ``now``
+        is its modeled event-loop time — same contract)."""
+        return time.monotonic() - self._t0
+
     # ------------------------------------------------------------- pool ----
     def add_worker(self) -> str:
-        wid = f"live{next(self._ids):03d}"
-        w = LiveWorker(wid, Library(wid), ContextStore())
-        w.store.pinned.update(self._pinned)
-        w.library.pinned.update(self._pinned)
-        self.workers[wid] = w
-        acts = self.scheduler.on_worker_join(wid, time.monotonic(),
-                                             store=w.store)
-        self._pending_actions.extend(acts)
-        return wid
+        with self._cond:
+            wid = f"live{next(self._ids):03d}"
+            w = LiveWorker(wid, self)
+            w.store.pinned.update(self._pinned)
+            w.library.pinned.update(self._pinned)
+            self.workers[wid] = w
+            self._spawned.append(w)
+            w.start()
+            acts = self.scheduler.on_worker_join(wid, self.now,
+                                                 store=w.store)
+            self._dispatch(acts)
+            self._cond.notify_all()
+            return wid
 
     def preempt_worker(self, worker_id: str):
-        """No-warning eviction: device contexts are gone instantly (pins
-        don't survive losing the device)."""
-        w = self.workers.pop(worker_id, None)
+        """No-warning device reclaim. The scheduler requeues the worker's
+        in-flight task immediately; the worker thread finishes whatever
+        invocation it cannot abandon, discards the result, then retires —
+        demoting every device-resident context (pins included: they cannot
+        survive losing the device) into the node snapshot pool, where a
+        rejoining worker restores it at transfer cost."""
+        with self._cond:
+            w = self.workers.pop(worker_id, None)
+            if w is not None:
+                w.alive = False
+            acts = self.scheduler.on_worker_leave(worker_id, self.now)
+            self._fail_unresolved()
+            self._dispatch(acts)
+            self._cond.notify_all()
         if w is not None:
-            w.library.evict_all(force=True)
-        acts = self.scheduler.on_worker_leave(worker_id, time.monotonic())
-        self._pending_actions.extend(acts)
+            w.post((_RETIRE,))
+
+    def shutdown(self, timeout: Optional[float] = None):
+        """Stop all worker threads and join every thread this manager ever
+        spawned — including retired (preempted) ones that may still be
+        finishing a demotion or an AOT compile. Joins indefinitely by
+        default: every runtime-internal message terminates (a compile just
+        takes seconds), and a thread left alive inside a JAX call at
+        interpreter exit aborts the process during XLA teardown. Pass a
+        ``timeout`` to bound the join when user task functions may block.
+        Idempotent; also runs via atexit."""
+        with self._cond:
+            live, self.workers = list(self.workers.values()), {}
+            spawned, self._spawned = list(self._spawned), []
+            for w in live:
+                w.alive = False
+            # nothing will run the remaining work: fail its futures now so
+            # waiters error immediately instead of sleeping out a deadline
+            for fut in self._futures.values():
+                if not fut.done:
+                    fut.set_exception(RuntimeError(
+                        f"backend shut down with task {fut.task_id} "
+                        "unresolved"))
+            self._cond.notify_all()
+        for w in live:
+            w.post((_STOP,))
+        for w in spawned:
+            w.join(timeout)
 
     # ------------------------------------------------------------ submit ---
     def submit(self, fn: Callable, args: tuple = (), kwargs: dict = None,
@@ -170,111 +446,185 @@ class PCMManager:
         named: Dict[str, ContextRecipe] = dict(recipes or {})
         if recipe is not None and not named:
             named = {recipe.name: recipe}
-        task_id = f"t{next(self._task_ids):05d}"
-        task = Task(task_id=task_id, recipes=tuple(named.values()),
-                    context_names=tuple(named.keys()), n_items=n_items,
-                    priority=priority, payload=(fn, args, kwargs or {}))
-        fut = Future(task_id, self)
-        self._futures[task_id] = fut
-        acts = self.scheduler.submit(task, time.monotonic())
-        self._pending_actions.extend(acts)
-        return fut
+        with self._cond:
+            task_id = f"t{next(self._task_ids):05d}"
+            task = Task(task_id=task_id, recipes=tuple(named.values()),
+                        context_names=tuple(named.keys()), n_items=n_items,
+                        priority=priority, payload=(fn, args, kwargs or {}))
+            fut = Future(task_id, self)
+            self._futures[task_id] = fut
+            acts = self.scheduler.submit(task, self.now)
+            self._dispatch(acts)
+            return fut
 
     # ----------------------------------------------------------- contexts --
     def warm_up(self, recipe: ContextRecipe,
                 worker_ids: Optional[List[str]] = None) -> List[str]:
         """Materialize ``recipe`` on the given (default: all) workers now,
-        off the task critical path."""
-        warmed = []
-        for wid in list(worker_ids or self.workers):
-            w = self.workers.get(wid)
-            if w is None:
-                continue
-            w.library.ensure(recipe)
-            w.store.admit_recipe(recipe, self.mode.persist_tier)
-            warmed.append(wid)
-        return warmed
+        off the task critical path. Synchronous: returns once every worker
+        has the context resident; a failing builder re-raises here."""
+        pending: List[tuple] = []
+        errors: List[BaseException] = []
+        with self._lock:
+            for wid in list(worker_ids or self.workers):
+                w = self.workers.get(wid)
+                if w is None or not w.alive:
+                    continue
+                ev = threading.Event()
+                w.post(("warm", recipe, ev, errors))
+                pending.append((wid, ev))
+        for _, ev in pending:
+            ev.wait()
+        if errors:
+            raise errors[0]
+        return [wid for wid, _ in pending]
+
+    def demote_context(self, recipe: ContextRecipe,
+                       tier: Tier = Tier.HOST_RAM,
+                       worker_ids: Optional[List[str]] = None) -> List[str]:
+        """Physically demote the context off the device on the given
+        (default: all) workers: DEVICE -> HOST_RAM snapshot in the node
+        pool, spilled on to LOCAL_DISK when ``tier=Tier.LOCAL_DISK``.
+        Synchronous; returns the workers that held (and demoted) it."""
+        if tier not in (Tier.HOST_RAM, Tier.LOCAL_DISK):
+            raise ValueError(f"demotion target must be HOST_RAM or "
+                             f"LOCAL_DISK, got {tier!r}")
+        key = recipe.key()
+        pending: List[threading.Event] = []
+        demoted: List[str] = []
+        with self._lock:
+            for wid in list(worker_ids or self.workers):
+                w = self.workers.get(wid)
+                if w is None or not w.alive or not w.library.has(key):
+                    continue
+                ev = threading.Event()
+                w.post(("demote", key, tier, ev, demoted))
+                pending.append(ev)
+        for ev in pending:
+            ev.wait()
+        return demoted   # pinned contexts refuse demotion and are omitted
 
     def pin_context(self, recipe: ContextRecipe):
         """Exempt the context from mode-driven eviction on every current
         and future worker."""
-        key = recipe.key()
-        self._pinned.add(key)
-        for w in self.workers.values():
-            w.store.pin(key)
-            w.library.pin(key)
+        with self._lock:
+            key = recipe.key()
+            self._pinned.add(key)
+            for w in self.workers.values():
+                w.store.pin(key)
+                w.library.pin(key)
 
     def release_context(self, recipe: ContextRecipe):
-        key = recipe.key()
-        self._pinned.discard(key)
-        for w in self.workers.values():
-            w.store.unpin(key)
-            w.library.unpin(key)
+        with self._lock:
+            key = recipe.key()
+            self._pinned.discard(key)
+            for w in self.workers.values():
+                w.store.unpin(key)
+                w.library.unpin(key)
 
     def residency(self, recipe: ContextRecipe) -> Dict[str, Tier]:
         """Highest tier at which each worker currently holds the context."""
-        key = recipe.key()
-        return {wid: w.store.highest_tier(key)
-                for wid, w in self.workers.items()}
+        with self._lock:
+            key = recipe.key()
+            return {wid: w.store.highest_tier(key)
+                    for wid, w in self.workers.items()}
+
+    def snapshot_tier(self, recipe: ContextRecipe) -> Optional[Tier]:
+        """Tier of the node-pool snapshot for this context (HOST_RAM or
+        LOCAL_DISK), or None when no demoted copy exists."""
+        t = self.snapshots.tier(recipe.key())
+        return None if t is None else Tier(t)
+
+    def _on_snapshot_gone(self, key: str):
+        """Pool callback (fired outside the pool lock): the snapshot for
+        ``key`` no longer exists, so HOST_RAM/LOCAL_DISK residency claims
+        by workers that do not actually hold the materialized context are
+        phantoms — clear them or the placement ladder keeps routing tasks
+        to a worker that would cold-rebuild."""
+        with self._lock:
+            for w in self.workers.values():
+                if not w.library.has(key):
+                    w.store.invalidate(key, Tier.HOST_RAM)
+                    w.store.invalidate(key, Tier.LOCAL_DISK)
 
     # --------------------------------------------------------- execution ---
-    def step(self) -> bool:
-        """Execute one pending scheduler action; False when idle."""
-        if not self._pending_actions:
-            return False
-        self._execute(self._pending_actions.pop(0))
-        return True
+    def _dispatch(self, actions: List[Action]):
+        """Route scheduler actions to worker mailboxes (callers hold the
+        lock). ``cancel`` needs no message: the revalidation barrier in
+        ``_handle_start`` discards any stale in-flight copy."""
+        for a in actions:
+            w = self.workers.get(a.worker_id)
+            if w is None or not w.alive:
+                if a.kind == "start":
+                    acts = self.scheduler.on_worker_leave(a.worker_id,
+                                                          self.now)
+                    self._fail_unresolved()
+                    self._dispatch(acts)
+                continue
+            if a.kind == "start":
+                w.post(("start", a.task_id))
+            elif a.kind == "fetch":
+                w.post(("fetch", a.recipe))
 
-    def run_until_idle(self) -> int:
-        """Drain actions; single-host execution is synchronous per action.
-        Returns the number of actions executed."""
-        n = 0
-        while self.step():
-            n += 1
-            if n > 100_000:
-                raise RuntimeError("scheduler action loop did not converge")
-        return n
-
-    def _execute(self, action: Action):
-        now = time.monotonic()
-        w = self.workers.get(action.worker_id)
-        if w is None:
-            if action.kind == "start":
-                acts = self.scheduler.on_worker_leave(action.worker_id, now)
-                self._pending_actions.extend(acts)
-            return
-        if action.kind == "fetch":
-            # live mode: materialize immediately (the build IS the fetch)
-            w.library.ensure(action.recipe)
-            w.store.admit_recipe(action.recipe, self.mode.persist_tier)
-            acts = self.scheduler.on_fetch_done(action.worker_id,
-                                                action.recipe.key(), now)
-            self._pending_actions.extend(acts)
-        elif action.kind == "start":
-            task = self.scheduler.tasks[action.task_id]
-            fn, args, kwargs = task.payload
+    def _fail_unresolved(self):
+        """Surface scheduler-declared failures (max_attempts exceeded) as
+        Future exceptions; callers hold the lock."""
+        for task in self.scheduler.failed:
             fut = self._futures.get(task.duplicates_of or task.task_id)
-            try:
-                named = dict(zip(task.context_names, task.recipes))
-                value = w.library.invoke(fn, args, kwargs,
-                                         recipes=named or None,
-                                         task_id=task.task_id)
-                if self.mode == ContextMode.AGNOSTIC:
-                    w.library.evict_all()
-                elif self.mode == ContextMode.PARTIAL:
-                    for key in task.keys():
-                        w.library.evict(key)
-                if fut:
-                    fut.set_result(value)
-            except BaseException as e:   # report, don't wedge the pool
-                if fut:
-                    fut.set_exception(e)
-            acts = self.scheduler.on_task_done(action.worker_id,
-                                               action.task_id,
-                                               time.monotonic())
-            self._pending_actions.extend(acts)
-        elif action.kind == "cancel":
-            pass  # synchronous execution never has an in-flight copy
+            if fut is not None and not fut.done:
+                fut.set_exception(RuntimeError(fut._lost_message()))
+
+    def wait(self, fut: Future, timeout: Optional[float] = None):
+        """Block until ``fut`` resolves. Purely event-driven: futures are
+        resolved (and workers joined/preempted) under ``self._cond`` with
+        a ``notify_all``, so this waits on that condition and re-checks
+        only when the runtime actually changed. Raises TimeoutError on
+        deadline; RuntimeError when the future can no longer resolve
+        (pool drained, or stalled with no live workers and no timeout)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while not fut.done:
+                if self.outstanding == 0:
+                    raise RuntimeError(fut._lost_message())
+                if not self.workers and deadline is None:
+                    raise RuntimeError(
+                        f"backend stalled with {self.outstanding} task(s) "
+                        f"outstanding and no live workers while waiting on "
+                        f"{fut.task_id} — add workers or pass "
+                        "result(timeout=...)")
+                if deadline is None:
+                    self._cond.wait()
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise TimeoutError(
+                            f"task {fut.task_id} did not complete within "
+                            f"{timeout:.3f}s ({self.outstanding} tasks "
+                            "still outstanding)")
+                    self._cond.wait(remaining)
+
+    def step(self) -> bool:
+        """Protocol compatibility for pollers: the concurrent runtime makes
+        progress on worker threads, so ``step`` just waits briefly for
+        activity. False once nothing is outstanding."""
+        with self._cond:
+            if self.outstanding == 0:
+                return False
+            self._cond.wait(0.01)
+            return True
+
+    def run_until_idle(self, timeout: Optional[float] = None) -> int:
+        """Block until no tasks are queued or running (or the pool has no
+        live workers to run them). Returns completions observed while
+        draining."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            start = len(self.scheduler.completions)
+            while self.outstanding and self.workers:
+                if deadline is not None and time.monotonic() >= deadline:
+                    break
+                self._cond.wait(0.05)
+            return len(self.scheduler.completions) - start
 
     # ------------------------------------------------------------- status ---
     @property
@@ -284,15 +634,42 @@ class PCMManager:
     def lookup_task(self, task_id: str) -> Optional[Task]:
         return self.scheduler.tasks.get(task_id)
 
+    def _absorb_library(self, library: Library):
+        """Fold a departing worker's Library counters into the manager
+        totals (called from the worker thread at retirement/stop)."""
+        with self._lock:
+            r = self._retired
+            for rec in library.records:
+                r["cold" if rec.cold else "warm"] += 1
+            r["build_seconds"] += library.build_seconds_total
+            r["restore_seconds"] += library.restore_seconds_total
+            r["builder_calls"] += library.builder_calls
+            r["restores"] += library.restores
+            r["demotions"] += library.demotions
+
     # ------------------------------------------------------------- stats ---
     def stats(self) -> Dict:
-        cold = warm = 0
-        build_s = 0.0
-        for w in self.workers.values():
-            for rec in w.library.records:
-                cold += rec.cold
-                warm += not rec.cold
-            build_s += w.library.build_seconds_total
-        return {"cold_invocations": cold, "warm_invocations": warm,
-                "context_build_seconds": build_s,
-                "completed": len(self.scheduler.completions)}
+        with self._lock:
+            cold, warm = self._retired["cold"], self._retired["warm"]
+            build_s = self._retired["build_seconds"]
+            restore_s = self._retired["restore_seconds"]
+            builder_calls = self._retired["builder_calls"]
+            restores = self._retired["restores"]
+            demotions = self._retired["demotions"]
+            for w in self.workers.values():
+                for rec in w.library.records:
+                    cold += rec.cold
+                    warm += not rec.cold
+                build_s += w.library.build_seconds_total
+                restore_s += w.library.restore_seconds_total
+                builder_calls += w.library.builder_calls
+                restores += w.library.restores
+                demotions += w.library.demotions
+            return {"cold_invocations": cold, "warm_invocations": warm,
+                    "context_build_seconds": build_s,
+                    "context_restore_seconds": restore_s,
+                    "builder_calls": builder_calls,
+                    "context_restores": restores,
+                    "context_demotions": demotions,
+                    "completed": len(self.scheduler.completions),
+                    "snapshot_pool": self.snapshots.stats()}

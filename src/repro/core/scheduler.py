@@ -80,6 +80,7 @@ class WorkerInfo:
     fetching_key: Optional[str] = None
     fetching_recipe: Optional[ContextRecipe] = None
     joined_at: float = 0.0
+    fetch_blocked: Set[str] = field(default_factory=set)  # admission refused
 
 
 @dataclass
@@ -93,6 +94,7 @@ class Action:
     warm: bool = False                  # device-resident before this start
     had_disk: bool = False              # ALL contexts disk-resident
     disk_resident: Tuple[bool, ...] = ()      # per-recipe disk residency
+    host_resident: Tuple[bool, ...] = ()      # per-recipe host-RAM residency
     device_resident: Tuple[bool, ...] = ()    # per-recipe HBM residency
 
 
@@ -177,9 +179,16 @@ class ContextAwareScheduler:
         info.phase = WorkerPhase.IDLE
         if (info.fetching_recipe is not None
                 and info.fetching_recipe.key() == ctx_key):
-            # the fetch materialized the context: record device residency so
-            # placement sees the worker as warm and prefetch never re-fires
-            info.store.admit_recipe(info.fetching_recipe, Tier.DEVICE, now=t)
+            try:
+                # the fetch materialized the context: record device
+                # residency so placement sees the worker as warm and
+                # prefetch never re-fires
+                info.store.admit_recipe(info.fetching_recipe, Tier.DEVICE,
+                                        now=t)
+            except ValueError:
+                # admission refused (pinned-full tier): remember the key so
+                # prefetch doesn't re-fire forever at this worker
+                info.fetch_blocked.add(ctx_key)
         info.fetching_key = None
         info.fetching_recipe = None
         info.current = None
@@ -193,6 +202,7 @@ class ContextAwareScheduler:
         if info is not None:
             info.phase = WorkerPhase.IDLE
             info.current = None
+            info.fetch_blocked.clear()   # capacity may have changed
             if self.mode == ContextMode.AGNOSTIC:
                 info.store.clear()
             elif self.mode == ContextMode.PARTIAL and task is not None:
@@ -228,9 +238,15 @@ class ContextAwareScheduler:
             if warm:
                 target, warm_start = warm[0], True
             else:
-                disk = [w for w in idle
-                        if all(w.store.has(k, Tier.LOCAL_DISK)
+                # restore ladder: HOST_RAM (snapshot promotion, one H2D
+                # transfer) beats LOCAL_DISK (unspill + load) beats a cold
+                # worker (full transfer + build + compile)
+                host = [w for w in idle
+                        if all(w.store.has(k, Tier.HOST_RAM)
                                for k in keys)]
+                disk = host or [w for w in idle
+                                if all(w.store.has(k, Tier.LOCAL_DISK)
+                                       for k in keys)]
                 target = disk[0] if disk else idle[0]
             self.queue.popleft()
             idle.remove(target)
@@ -248,8 +264,10 @@ class ContextAwareScheduler:
                 key = recipe.key()
                 # offer each demanded recipe to a worker that LACKS it —
                 # a worker already warm for it must not consume the demand
+                # (and one whose admission was refused stays excluded)
                 cands = [w for w in free
-                         if not w.store.has(key, Tier.DEVICE)]
+                         if not w.store.has(key, Tier.DEVICE)
+                         and key not in w.fetch_blocked]
                 if not cands:
                     continue
                 w = cands[0]
@@ -266,6 +284,8 @@ class ContextAwareScheduler:
         # populates every tier, which would pollute the reading)
         disk_resident = tuple(w.store.has(r.key(), Tier.LOCAL_DISK)
                               for r in task.recipes)
+        host_resident = tuple(w.store.has(r.key(), Tier.HOST_RAM)
+                              for r in task.recipes)
         device_resident = tuple(w.store.has(r.key(), Tier.DEVICE)
                                 for r in task.recipes)
         had_disk = bool(disk_resident) and all(disk_resident)
@@ -275,12 +295,20 @@ class ContextAwareScheduler:
         self.running[task.task_id] = (w.worker_id, t)
         # residency the task execution will create:
         for recipe in task.recipes:
-            w.store.admit_recipe(recipe, Tier.DEVICE, now=t)
+            try:
+                w.store.admit_recipe(recipe, Tier.DEVICE, now=t)
+            except ValueError:
+                # pinned entries block admission (TierFullError): the task
+                # still runs, but residency is NOT recorded — the store
+                # never lies about capacity, and this worker won't be
+                # treated as warm for the key it couldn't admit
+                pass
             w.store.touch(recipe.key(), now=t)
         return Action(kind="start", worker_id=w.worker_id,
                       task_id=task.task_id, recipe=task.recipe,
                       recipes=task.recipes, warm=warm, had_disk=had_disk,
                       disk_resident=disk_resident,
+                      host_resident=host_resident,
                       device_resident=device_resident)
 
     def _fetch(self, recipe: ContextRecipe, w: WorkerInfo, t: float

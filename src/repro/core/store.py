@@ -1,4 +1,4 @@
-"""Tiered per-worker context store.
+"""Tiered per-worker context store + the node-level snapshot pool.
 
 Tiers mirror the paper's startup pipeline: SHARED_FS -> LOCAL_DISK ->
 HOST_RAM -> DEVICE. The three application transformations map onto how deep
@@ -9,18 +9,46 @@ residency is allowed to persist across tasks:
                      HBM state still rebuilt per task)
   full-context     : DEVICE persists (the Library keeps the loaded model)
 
-Capacity-bounded with LRU eviction per tier; eviction from a tier demotes
-nothing (re-fetch from below), matching worker sandbox semantics.
+Residency state machine of one context on one worker::
+
+                 fetch/build                 task start
+    SHARED_FS ---------------> LOCAL_DISK ---------------> DEVICE
+        ^                        |    ^                      |
+        |        drop(force)     |    |   promote (restore   |
+        +------------------------+    |   from snapshot,     |
+                                      |   zero compiles)     |
+                                      |                      v
+                                      +----- HOST_RAM <------+
+                                         demote (jax.device_get
+                                         snapshot of params +
+                                         engine state); HOST_RAM
+                                         spills to LOCAL_DISK via
+                                         checkpoint/io when the
+                                         pool is over capacity
+
+DEVICE->HOST_RAM demotion and HOST_RAM->LOCAL_DISK spill are PHYSICAL in
+the live runtime: the bytes move (see :class:`SnapshotPool` and
+``repro.core.context.ContextSnapshot``), and promotion restores the
+materialized context without re-running the builder or recompiling.
+
+:class:`ContextStore` is the bookkeeping half (which keys are resident at
+which tier, capacity-bounded with LRU eviction per tier); eviction from a
+tier demotes nothing (re-fetch from below), matching worker sandbox
+semantics. Admission REFUSES (raises :class:`TierFullError`) when pinned
+entries block the eviction needed to make room — a tier never silently
+exceeds its capacity.
 """
 
 from __future__ import annotations
 
-import enum
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set
 
-from repro.core.context import GB, ContextRecipe
+import enum
+
+from repro.core.context import GB, ContextRecipe, ContextSnapshot
 
 
 class Tier(enum.IntEnum):
@@ -40,6 +68,11 @@ class ContextMode(enum.Enum):
         return {ContextMode.AGNOSTIC: Tier.SHARED_FS,
                 ContextMode.PARTIAL: Tier.LOCAL_DISK,
                 ContextMode.FULL: Tier.DEVICE}[self]
+
+
+class TierFullError(ValueError):
+    """Admission refused: the tier cannot make room because every eviction
+    candidate is pinned (or the payload exceeds raw capacity)."""
 
 
 @dataclass
@@ -64,8 +97,9 @@ class ContextStore:
 
     # ------------------------------------------------------------- pinning --
     def pin(self, key: str):
-        """Exempt ``key`` from LRU eviction and mode cleanup. Pinning can
-        overcommit a tier: admission never evicts a pinned entry."""
+        """Exempt ``key`` from LRU eviction and mode cleanup. Pinned entries
+        never become eviction victims; once they fill a tier, further
+        admissions are REFUSED with TierFullError rather than overcommitted."""
         self.pinned.add(key)
 
     def unpin(self, key: str):
@@ -85,23 +119,39 @@ class ContextStore:
     def used(self, tier: Tier) -> int:
         return sum(e.nbytes for e in self._tiers[tier].values())
 
+    def pinned_bytes(self, tier: Tier) -> int:
+        if tier == Tier.SHARED_FS:
+            return 0
+        return sum(e.nbytes for k, e in self._tiers[tier].items()
+                   if k in self.pinned)
+
     def admit(self, key: str, tier: Tier, nbytes: int, now: float = None
               ) -> List[str]:
-        """Place key at tier, LRU-evicting as needed. Returns evicted keys."""
+        """Place key at tier, LRU-evicting as needed. Returns evicted keys.
+
+        Raises :class:`TierFullError` when the payload exceeds the tier's
+        raw capacity, or when pinned entries block the evictions needed to
+        make room — admission never silently overcommits a tier."""
         if tier == Tier.SHARED_FS:
             return []
         if nbytes > self.capacity[tier]:
-            raise ValueError(
+            raise TierFullError(
                 f"context {key} ({nbytes / GB:.1f} GB) exceeds tier "
                 f"{tier.name} capacity ({self.capacity[tier] / GB:.1f} GB)")
         entries = self._tiers[tier]
+        # re-admission replaces the existing entry: only the delta counts
+        resident = entries[key].nbytes if key in entries else 0
         evicted = []
-        while self.used(tier) + nbytes > self.capacity[tier] and entries:
+        while self.used(tier) - resident + nbytes > self.capacity[tier]:
             victim = min((e for k, e in entries.items()
                           if k != key and k not in self.pinned),
                          key=lambda e: e.last_used, default=None)
             if victim is None:
-                break
+                raise TierFullError(
+                    f"tier {tier.name} full admitting {key} "
+                    f"({nbytes / GB:.1f} GB): {self.pinned_bytes(tier) / GB:.1f}"
+                    f" GB pinned of {self.capacity[tier] / GB:.1f} GB "
+                    "capacity and no evictable entries remain")
             del entries[victim.key]
             evicted.append(victim.key)
             self.evictions += 1
@@ -111,16 +161,30 @@ class ContextStore:
 
     def admit_recipe(self, recipe: ContextRecipe, upto: Tier,
                      now: float = None) -> List[str]:
-        """Admit a recipe's footprint at every tier up to ``upto``."""
+        """Admit a recipe's footprint at every tier up to ``upto``.
+
+        Atomic w.r.t. this key: if a higher tier refuses (TierFullError),
+        residency this call just added at lower tiers is rolled back, so a
+        failed admission never leaves phantom HOST_RAM/LOCAL_DISK entries
+        for the scheduler's restore ladder to chase. (Evictions performed
+        along the way are not undone — eviction is always lossy.)"""
         key = recipe.key()
+        plan = [(Tier.LOCAL_DISK, recipe.transfer_bytes),
+                (Tier.HOST_RAM, recipe.host_bytes),
+                (Tier.DEVICE, recipe.device_bytes)]
+        added = []
         evicted = []
-        if upto >= Tier.LOCAL_DISK:
-            evicted += self.admit(key, Tier.LOCAL_DISK,
-                                  recipe.transfer_bytes, now)
-        if upto >= Tier.HOST_RAM:
-            evicted += self.admit(key, Tier.HOST_RAM, recipe.host_bytes, now)
-        if upto >= Tier.DEVICE:
-            evicted += self.admit(key, Tier.DEVICE, recipe.device_bytes, now)
+        try:
+            for tier, nbytes in plan:
+                if upto >= tier:
+                    was_resident = key in self._tiers[tier]
+                    evicted += self.admit(key, tier, nbytes, now)
+                    if not was_resident:
+                        added.append(tier)
+        except TierFullError:
+            for tier in added:
+                self._tiers[tier].pop(key, None)
+            raise
         return evicted
 
     def touch(self, key: str, now: float = None):
@@ -128,6 +192,13 @@ class ContextStore:
         for entries in self._tiers.values():
             if key in entries:
                 entries[key].last_used = now
+
+    def invalidate(self, key: str, tier: Tier):
+        """Remove one key from ONE tier (no pin check): bookkeeping
+        correction when the physical copy backing that tier is gone (e.g.
+        the node pool's snapshot was consumed by another worker)."""
+        if tier != Tier.SHARED_FS:
+            self._tiers[tier].pop(key, None)
 
     def drop(self, key: str, down_to: Tier = Tier.SHARED_FS,
              force: bool = False):
@@ -151,3 +222,209 @@ class ContextStore:
         if tier == Tier.SHARED_FS:
             return set()
         return set(self._tiers[tier])
+
+    def stats(self) -> Dict:
+        """Per-tier occupancy incl. pinned bytes (admission headroom that
+        eviction can never reclaim)."""
+        return {
+            "evictions": self.evictions,
+            "tiers": {
+                tier.name: {
+                    "used_bytes": self.used(tier),
+                    "capacity_bytes": self.capacity[tier],
+                    "pinned_bytes": self.pinned_bytes(tier),
+                    "entries": len(self._tiers[tier]),
+                } for tier in (Tier.LOCAL_DISK, Tier.HOST_RAM, Tier.DEVICE)
+            },
+        }
+
+
+class SnapshotPool:
+    """Node-level pool of demoted :class:`ContextSnapshot` payloads.
+
+    The physical half of tier movement: DEVICE->HOST_RAM demotion `put`s a
+    snapshot here (params + engine device state pulled to host RAM via
+    ``jax.device_get``, AOT-executable handles retained as metadata);
+    when host occupancy exceeds ``host_bytes``, the LRU snapshot SPILLS its
+    arrays to LOCAL_DISK through ``checkpoint/io`` (atomic npz + manifest).
+    Promotion (`take`) returns the snapshot for restore and removes it from
+    the pool — the materialized value is a single mutable object (engine +
+    executables), so a restore MOVES it to the requesting worker rather
+    than aliasing it across workers.
+
+    The pool is owned by the node (PCMManager), not by one worker: it
+    models host RAM + local disk surviving a no-warning GPU reclaim, which
+    is exactly why a preempted-then-rejoining worker pays restore cost
+    instead of full startup cost (the paper's core claim).
+
+    Thread-safe: worker actor threads demote/restore concurrently.
+    """
+
+    def __init__(self, host_bytes: int = 48 * GB,
+                 disk_bytes: int = 200 * GB,
+                 spill_dir: Optional[str] = None,
+                 on_gone=None):
+        self.host_bytes = host_bytes
+        self.disk_bytes = disk_bytes
+        self._spill_dir = spill_dir
+        self._spill_store = None            # lazy: repro.checkpoint.SpillStore
+        # on_gone(key): fired (outside the pool lock) when a snapshot
+        # leaves the pool without being re-insertable — consumed by a
+        # restore or dropped for capacity — so owners of residency
+        # bookkeeping can invalidate phantom HOST_RAM claims
+        self._on_gone = on_gone
+        self._snaps: Dict[str, ContextSnapshot] = {}
+        self._lost_keys: List[str] = []     # dropped under lock, fired after
+        self._lock = threading.RLock()
+        self.demotions = 0
+        self.spills = 0
+        self.restores = 0
+        self.restore_seconds = 0.0
+        self.lost = 0                       # dropped for capacity, never used
+
+    # ------------------------------------------------------------ internal --
+    def spill_store(self):
+        """The lazily created LOCAL_DISK backend (checkpoint SpillStore)."""
+        if self._spill_store is None:
+            from repro.checkpoint.manager import SpillStore
+            self._spill_store = SpillStore(self._spill_dir)
+        return self._spill_store
+
+    def set_on_gone(self, cb):
+        """Install the gone-notification callback (see ``__init__``) when
+        the pool was constructed before its owner existed."""
+        self._on_gone = cb
+
+    def _host_used(self) -> int:
+        return sum(s.nbytes for s in self._snaps.values()
+                   if s.tier == Tier.HOST_RAM)
+
+    def _disk_used(self) -> int:
+        return sum(s.nbytes for s in self._snaps.values()
+                   if s.tier == Tier.LOCAL_DISK)
+
+    def _select_spill_victims(self) -> List[ContextSnapshot]:
+        """LRU-pick HOST_RAM snapshots until host occupancy fits; caller
+        holds the lock. Victims are REMOVED from the pool so the GB-scale
+        npz write can happen outside the lock (a concurrent ``take`` of a
+        mid-spill key simply misses and cold-builds); snapshots the disk
+        tier cannot hold are dropped outright (rebuild is always
+        possible)."""
+        victims: List[ContextSnapshot] = []
+        disk_planned = self._disk_used()
+        while self._host_used() > self.host_bytes:
+            cands = sorted((s for s in self._snaps.values()
+                            if s.tier == Tier.HOST_RAM),
+                           key=lambda s: s.last_used)
+            if not cands:
+                break
+            victim = cands[0]
+            del self._snaps[victim.key]
+            if disk_planned + victim.nbytes <= self.disk_bytes:
+                victims.append(victim)
+                disk_planned += victim.nbytes
+            else:
+                self.lost += 1
+                self._lost_keys.append(victim.key)
+        return victims
+
+    def _finish_spills(self, victims: List[ContextSnapshot]):
+        """Re-insert spilled snapshots (disk writes done outside the
+        lock); a snapshot superseded by a newer demotion of the same key
+        while we were writing gets its disk copy discarded instead."""
+        stale: List[ContextSnapshot] = []
+        with self._lock:
+            for v in victims:
+                if v.key in self._snaps:
+                    stale.append(v)
+                else:
+                    self._snaps[v.key] = v
+                    self.spills += 1
+        for v in stale:
+            v.discard(self.spill_store())
+
+    def _fire_gone(self):
+        """Notify the owner about snapshots that left the pool for good
+        (capacity drops); called WITHOUT the pool lock held."""
+        if self._on_gone is None:
+            with self._lock:
+                self._lost_keys.clear()
+            return
+        with self._lock:
+            keys, self._lost_keys = self._lost_keys, []
+        for key in keys:
+            self._on_gone(key)
+
+    # -------------------------------------------------------------- public --
+    def put(self, snap: ContextSnapshot):
+        """Admit a freshly demoted snapshot at HOST_RAM (spilling LRU
+        residents to disk as needed). Replaces any older snapshot of the
+        same context. Disk I/O runs outside the pool lock so concurrent
+        demotes/restores never serialize behind a multi-GB npz write."""
+        with self._lock:
+            old = self._snaps.pop(snap.key, None)
+            self._snaps[snap.key] = snap
+            self.demotions += 1
+            victims = self._select_spill_victims()
+        if old is not None and old.tier == Tier.LOCAL_DISK:
+            old.discard(self.spill_store())
+        for v in victims:
+            v.spill(self.spill_store())
+        if victims:
+            self._finish_spills(victims)
+        self._fire_gone()
+
+    def take(self, key: str) -> Optional[ContextSnapshot]:
+        """Remove and return the snapshot for ``key`` (promotion consumes
+        it — the value object moves to the restoring worker). Fires
+        ``on_gone`` so residency bookkeeping recorded for this snapshot
+        elsewhere (other workers' HOST_RAM claims) is invalidated."""
+        with self._lock:
+            snap = self._snaps.pop(key, None)
+            if snap is not None:
+                self.restores += 1
+        if snap is not None and self._on_gone is not None:
+            self._on_gone(key)
+        return snap
+
+    def spill(self, key: str) -> bool:
+        """Explicitly demote one snapshot HOST_RAM -> LOCAL_DISK (the
+        write happens outside the lock; the key is briefly absent from
+        the pool while in flight)."""
+        with self._lock:
+            snap = self._snaps.pop(key, None)
+            if snap is None or snap.tier != Tier.HOST_RAM:
+                if snap is not None:      # disk-resident already: keep it
+                    self._snaps[key] = snap
+                return False
+        snap.spill(self.spill_store())
+        self._finish_spills([snap])
+        return True
+
+    def tier(self, key: str) -> Optional[Tier]:
+        with self._lock:
+            snap = self._snaps.get(key)
+            return None if snap is None else snap.tier
+
+    def keys(self) -> Set[str]:
+        with self._lock:
+            return set(self._snaps)
+
+    def discard(self, key: str):
+        with self._lock:
+            snap = self._snaps.pop(key, None)
+        if snap is not None and snap.tier == Tier.LOCAL_DISK:
+            snap.discard(self.spill_store())
+
+    def stats(self) -> Dict:
+        with self._lock:
+            return {
+                "snapshots": len(self._snaps),
+                "host_used_bytes": self._host_used(),
+                "disk_used_bytes": self._disk_used(),
+                "demotions": self.demotions,
+                "spills": self.spills,
+                "restores": self.restores,
+                "restore_seconds": self.restore_seconds,
+                "lost": self.lost,
+            }

@@ -46,11 +46,15 @@ class TransferPlanner:
     def __init__(self, fs_bytes_per_s: float = 84 / 8 * GBPS,
                  p2p_bytes_per_s: float = 10 * GBPS,
                  nic_bytes_per_s: float = 1.25 * GBPS,
-                 donor_fanout: int = 2):
+                 donor_fanout: int = 2,
+                 h2d_bytes_per_s: float = 16 * GBPS,
+                 disk_bytes_per_s: float = 2 * GBPS):
         self.fs_bytes_per_s = fs_bytes_per_s      # aggregate Panasas
         self.p2p_bytes_per_s = p2p_bytes_per_s
         self.nic_bytes_per_s = nic_bytes_per_s    # per-node 10GbE cap
         self.donor_fanout = donor_fanout
+        self.h2d_bytes_per_s = h2d_bytes_per_s    # host RAM -> HBM (PCIe)
+        self.disk_bytes_per_s = disk_bytes_per_s  # local NVMe read
         self._fs_flows: List[_Flow] = []
         self._donor_flows: Dict[str, List[_Flow]] = {}
 
@@ -98,6 +102,20 @@ class TransferPlanner:
             self._fs_flows.append(flow)
         return TransferPlan(source=source, seconds=seconds, nbytes=nbytes,
                             p2p=p2p)
+
+    def restore_seconds(self, nbytes: int, from_disk: bool = False,
+                        h2d_bytes_per_s: Optional[float] = None) -> float:
+        """Modeled promotion latency for a demoted context snapshot:
+        host RAM -> HBM over PCIe, plus a local-disk read when the
+        snapshot was spilled. This is the paper's restore cost — compare
+        against ``plan(...)`` + build for the cold path. Pass the worker's
+        own PCIe bandwidth via ``h2d_bytes_per_s`` when a device profile
+        is known (the simulator does); the planner default is a generic
+        Gen4 x16 link."""
+        t = nbytes / (h2d_bytes_per_s or self.h2d_bytes_per_s)
+        if from_disk:
+            t += nbytes / self.disk_bytes_per_s
+        return t
 
     def stats(self) -> Dict:
         return {"fs_active": len(self._fs_flows),

@@ -49,6 +49,16 @@ into the *donated* global cache run fused in a single dispatch (the
 transient wave buffer lives only inside that executable — no separate
 host-driven merge step), so there is exactly one prefill executable per
 bucket length — all AOT-warmable.
+
+**Tier offload/restore (PCM snapshot hooks).**  The concurrent PCM runtime
+demotes idle/preempted contexts off the accelerator:
+``offload_device_state()`` pulls the whole device-resident tuple (weights,
+slot cache, decode state, RNG) to host numpy in one ``jax.device_get`` and
+drops the device references; ``restore_device_state()`` pushes it back in
+one ``jax.device_put``. The AOT executable cache stays attached to the
+engine object across the round trip, so a restored engine performs ZERO
+builder calls and ZERO XLA compiles and decodes bit-identically — restore
+cost is the transfer, which is the paper's entire point.
 """
 
 from __future__ import annotations
@@ -354,6 +364,58 @@ class InferenceEngine:
             i32(self.slots), i32(self.slots, self.max_stop_tokens),
             st[0], st[1], st[2], st[3], st[4], st[5], st[6], st[7], st[8])
 
+    # -------------------------------------------- PCM tier offload/restore --
+    _DEVICE_STATE_FIELDS = ("params", "cache", "lengths", "last_tokens",
+                            "temps", "active_mask", "gen_counts", "max_news",
+                            "stop_table", "_rng")
+
+    @property
+    def offloaded(self) -> bool:
+        """True while the engine's device state lives in a ContextSnapshot
+        (HOST_RAM or LOCAL_DISK tier) instead of on the accelerator."""
+        return self.params is None
+
+    def offload_device_state(self) -> Dict:
+        """Demote: pull every device-resident array (weights, slot cache,
+        per-slot decode state, RNG key) to host memory in one
+        ``jax.device_get`` and DROP the device references so the HBM can be
+        reclaimed. The AOT-compiled executables, host length shadow, queue
+        and stats stay on this object — they are the snapshot's "AOT-warm
+        metadata", and they are why a later ``restore_device_state`` needs
+        zero builder calls and zero XLA compiles. Idempotence is the
+        caller's job: offloading twice raises."""
+        if self.offloaded:
+            raise RuntimeError("engine device state is already offloaded")
+        state = {name: getattr(self, name)
+                 for name in self._DEVICE_STATE_FIELDS}
+        host = jax.device_get(state)
+        for name in self._DEVICE_STATE_FIELDS:
+            setattr(self, name, None)
+        return host
+
+    def restore_device_state(self, host_state: Dict):
+        """Promote: push a previously offloaded state dict back onto the
+        device in one ``jax.device_put``. Executables cached in ``_exe``
+        are reused as-is, so a restored engine decodes bit-identically to
+        one that never left the device — at transfer cost, not
+        build+compile cost."""
+        if not self.offloaded:
+            raise RuntimeError("engine device state is already resident")
+        missing = [n for n in self._DEVICE_STATE_FIELDS
+                   if n not in host_state]
+        if missing:
+            raise ValueError(f"snapshot is missing engine state: {missing}")
+        device = jax.device_put(
+            {n: host_state[n] for n in self._DEVICE_STATE_FIELDS})
+        for name in self._DEVICE_STATE_FIELDS:
+            setattr(self, name, device[name])
+
+    def _require_resident(self):
+        if self.offloaded:
+            raise RuntimeError(
+                "engine device state is offloaded (context demoted to "
+                "HOST_RAM/LOCAL_DISK) — restore the context before use")
+
     def warm_executables(self) -> float:
         """AOT-compile the megastep (every decode bucket) + every
         prefill-bucket executable.
@@ -361,6 +423,7 @@ class InferenceEngine:
         Called by PCM context materialization so the compile cost is paid
         once per context lifetime; returns the seconds spent compiling
         (idempotent — already-warm executables cost nothing)."""
+        self._require_resident()
         before = self.compile_seconds
         reachable = (self.decode_buckets if self.megastep >= 4
                      else (self.cache_len,))
@@ -392,6 +455,7 @@ class InferenceEngine:
         """One scheduling step: admit a prefill wave if possible, then one
         decode megastep (up to K tokens) for all active slots. Returns
         finished requests."""
+        self._require_resident()
         finished: List[Request] = []
         if self.queue and self.free_slots:
             finished.extend(self._admit_wave())
@@ -519,7 +583,9 @@ class InferenceEngine:
         return {
             "active": len(self.active), "queued": len(self.queue),
             "free_slots": len(self.free_slots),
-            "cache_bytes": kvcache.cache_bytes(self.cache),
+            "offloaded": self.offloaded,
+            "cache_bytes": (0 if self.offloaded
+                            else kvcache.cache_bytes(self.cache)),
             "compile_seconds": self.compile_seconds,
             "stats": self.stats.as_dict(),
         }

@@ -351,31 +351,51 @@ class TestManagerLive:
             bad().result()
 
     def test_lost_task_error_names_attempts_and_worker(self):
+        # the task blocks on a gate so the eager worker threads cannot
+        # complete it before the preemptions land (concurrent runtime)
+        import threading
+        gate = threading.Event()
         mgr = PCMManager(mode=ContextMode.FULL, n_workers=1)
-        mgr.scheduler.max_attempts = 2
-        fut = mgr.submit(lambda: 1)
-        wid0 = next(iter(mgr.workers))
-        mgr.preempt_worker(wid0)           # attempt 1
-        wid1 = mgr.add_worker()
-        mgr.preempt_worker(wid1)           # attempt 2 -> failed
-        with pytest.raises(RuntimeError, match="2 attempt"):
-            fut.result()
+        try:
+            mgr.scheduler.max_attempts = 2
+            fut = mgr.submit(lambda: gate.wait(10))
+            wid0 = next(iter(mgr.workers))
+            mgr.preempt_worker(wid0)           # attempt 1
+            wid1 = mgr.add_worker()
+            mgr.preempt_worker(wid1)           # attempt 2 -> failed
+            with pytest.raises(RuntimeError, match="2 attempt"):
+                fut.result()
+        finally:
+            gate.set()
+            mgr.shutdown()
 
     def test_result_timeout_when_pool_empty(self):
+        import threading
+        gate = threading.Event()
         mgr = PCMManager(mode=ContextMode.FULL, n_workers=1)
-        fut = mgr.submit(lambda: 1)
-        mgr.preempt_worker(next(iter(mgr.workers)))   # queue, nobody home
-        with pytest.raises(TimeoutError):
-            fut.result(timeout=0.05)
+        try:
+            fut = mgr.submit(lambda: gate.wait(10))
+            mgr.preempt_worker(next(iter(mgr.workers)))  # queue, nobody home
+            with pytest.raises(TimeoutError):
+                fut.result(timeout=0.05)
+        finally:
+            gate.set()
+            mgr.shutdown()
 
     def test_result_without_timeout_raises_on_stall(self):
-        """No timeout must not mean an infinite 1ms spin: a stalled
-        single-threaded backend can never make progress."""
+        """No timeout must not mean waiting forever: a pool with no live
+        workers and work outstanding can never make progress."""
+        import threading
+        gate = threading.Event()
         mgr = PCMManager(mode=ContextMode.FULL, n_workers=1)
-        fut = mgr.submit(lambda: 1)
-        mgr.preempt_worker(next(iter(mgr.workers)))
-        with pytest.raises(RuntimeError, match="stalled"):
-            fut.result()
+        try:
+            fut = mgr.submit(lambda: gate.wait(10))
+            mgr.preempt_worker(next(iter(mgr.workers)))
+            with pytest.raises(RuntimeError, match="stalled"):
+                fut.result()
+        finally:
+            gate.set()
+            mgr.shutdown()
 
 
 # ------------------------------------------------------------- client ------
