@@ -1,0 +1,195 @@
+"""Elastic-cluster benchmark (``--only cluster``): join-storm bootstrap +
+trace-driven churn throughput on the LIVE runtime.
+
+Two sections, written to ``BENCH_cluster.json``:
+
+``storm``
+    N in {2, 4, 8} simultaneous cold joiners against 2 warm donors, with
+    peer-to-peer bootstrap enabled vs FS-only (``p2p=False``: every joiner
+    pays the builder, the live stand-in for the shared-filesystem cold
+    start). Reports per-run aggregate bootstrap seconds (the summed
+    context-acquisition cost across joiners), wall seconds to drain the
+    task batch, builder calls and XLA compiles on joiners, and greedy
+    output parity vs a never-transferred engine.
+
+``rq3``
+    tasks/s under the paper's aggressive-preemption trace, time-compressed
+    onto a 4-slot heterogeneous pool driven by a live ElasticRunner
+    (floor=1 so the sweep can drain).
+
+With ``strict=True`` (the ``cluster-storm-smoke`` CI job) the acceptance
+bars are asserted: at 8 joiners P2P bootstrap performs ZERO builder calls
+and ZERO XLA compiles on joiners, outputs are bit-identical, and the
+aggregate bootstrap time is >= 3x lower than FS-only.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks.pcm_bench import _build_engine_recipe, _prompts
+
+DONORS = 2
+STORM_SIZES = (2, 4, 8)
+
+
+def _wait_all_device(mgr, rec, timeout: float) -> float:
+    """Block until every live worker holds the context device-resident;
+    returns the wall seconds it took."""
+    from repro.core import Tier
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout:
+        res = mgr.residency(rec)
+        if res and all(t == Tier.DEVICE for t in res.values()):
+            return time.monotonic() - t0
+        time.sleep(0.02)
+    raise TimeoutError("join storm never converged to all-warm")
+
+
+def _storm_run(n_joiners: int, p2p: bool, quick: bool, strict: bool) -> Dict:
+    from repro.core import ContextMode, PCMManager, load_context
+
+    builds: List = []
+    mgr = PCMManager(mode=ContextMode.FULL, n_workers=DONORS, p2p=p2p,
+                     donor_wait=True)
+    try:
+        rec = _build_engine_recipe(f"storm.{'p2p' if p2p else 'fs'}."
+                                   f"{n_joiners}", quick, builds)
+        mgr.warm_up(rec)                       # donors warm off the clock
+        donor_builds = len(builds)
+        donor_ids = set(mgr.workers)
+
+        def infer(seed):
+            eng = load_context("engine")
+            cfg = load_context("cfg")
+            return eng.generate(_prompts(cfg, 2, seed=seed),
+                                max_new_tokens=4)
+
+        reference = [None]
+
+        def ref_task(seed):
+            out = infer(seed)
+            reference[0] = out
+            return out
+
+        assert mgr.submit(ref_task, (0,), recipe=rec).result(timeout=300)
+
+        # queue enough demand that every joiner bootstraps, then storm
+        futs = [mgr.submit(infer, (s,), recipe=rec)
+                for s in [0] * (3 * (DONORS + n_joiners))]
+        t0 = mgr.now
+        for _ in range(n_joiners):
+            mgr.add_worker()
+        warm_wall = _wait_all_device(mgr, rec, timeout=600)
+        outs = [f.result(timeout=600) for f in futs]
+        drain_wall = mgr.now - t0
+
+        key = rec.key()
+        joiner_bootstrap_s = 0.0
+        joiner_compiles = 0
+        joiner_builds = len(builds) - donor_builds
+        parity = all(o == reference[0] for o in outs)
+        for wid, w in mgr.workers.items():
+            if wid in donor_ids:
+                continue
+            lib = w.library
+            joiner_bootstrap_s += (lib.build_seconds_total
+                                   + lib.restore_seconds_total
+                                   + lib.peer_install_seconds)
+            if lib.has(key):
+                joiner_compiles += lib.context(key).value[
+                    "engine"].stats.compiles
+        st = mgr.stats()
+        record = {
+            "n_joiners": n_joiners,
+            "p2p": p2p,
+            "aggregate_bootstrap_seconds": joiner_bootstrap_s,
+            "all_warm_wall_seconds": warm_wall,
+            "drain_wall_seconds": drain_wall,
+            "joiner_builder_calls": joiner_builds,
+            "joiner_compiles": joiner_compiles,
+            "peer_installs": st["peer_installs"],
+            "greedy_parity": parity,
+            "fetch_sources": [d.source.value for d in mgr.fetch_history()],
+        }
+        if strict:
+            assert parity, "joiner outputs diverged from the reference"
+            if p2p:
+                assert joiner_builds == 0, (
+                    f"P2P storm ran {joiner_builds} builders on joiners")
+                assert joiner_compiles == 0, (
+                    f"P2P storm compiled {joiner_compiles}x on joiners")
+        return record
+    finally:
+        mgr.shutdown()
+
+
+def bench_storm(quick: bool, strict: bool) -> Dict:
+    out: Dict = {}
+    for n in STORM_SIZES:
+        p2p = _storm_run(n, True, quick, strict)
+        fs = _storm_run(n, False, quick, strict)
+        speedup = fs["aggregate_bootstrap_seconds"] / max(
+            p2p["aggregate_bootstrap_seconds"], 1e-9)
+        out[f"n{n}"] = {"p2p": p2p, "fs_only": fs,
+                        "speedup_aggregate_bootstrap": speedup}
+        if strict and n == max(STORM_SIZES):
+            assert speedup >= 3.0, (
+                f"P2P aggregate bootstrap only {speedup:.1f}x faster than "
+                "FS-only at 8 joiners (need >= 3x)")
+    return out
+
+
+def bench_rq3(quick: bool, strict: bool) -> Dict:
+    """tasks/s with the pool shrinking under the paper's rq3 trace."""
+    from repro.cluster import traces
+    from repro.core import (ContextMode, ElasticRunner, PCMClient,
+                            PCMManager, load_context)
+
+    builds: List = []
+    n_tasks = 16 if quick else 48
+    pool = ["a10", "a10", "titan-x-pascal", "titan-x-pascal"]
+    trace = traces.rq3_aggressive_preemption(start_at=4.0, period=3.0,
+                                             pool=pool, floor=1)
+    mgr = PCMManager(mode=ContextMode.FULL, n_workers=0)
+    client = PCMClient(backend=mgr)
+    runner = ElasticRunner(mgr, trace, reconcile_every=0.25)
+    try:
+        rec = _build_engine_recipe("rq3.ctx", quick, builds)
+
+        def infer(seed):
+            eng = load_context("engine")
+            cfg = load_context("cfg")
+            return eng.generate(_prompts(cfg, 2, seed=seed),
+                                max_new_tokens=4)
+
+        t0 = time.monotonic()
+        runner.start()
+        batch = client.map(infer, list(range(n_tasks)),
+                           context=client.context(rec), timeout=600)
+        results = batch.gather()
+        wall = time.monotonic() - t0
+        runner.stop()
+        st = mgr.stats()
+        if strict:
+            assert len(results) == n_tasks, "rq3 churn lost futures"
+        return {
+            "n_tasks": n_tasks,
+            "wall_seconds": wall,
+            "tasks_per_second": n_tasks / max(wall, 1e-9),
+            "joins": runner.joins,
+            "preemptions": runner.preemptions,
+            "builder_calls": st["builder_calls"],
+            "peer_installs": st["peer_installs"],
+            "pool_restores": st["context_restores"],
+        }
+    finally:
+        runner.stop()
+        mgr.shutdown()
+
+
+def bench_cluster(quick: bool = False, strict: bool = False) -> Dict:
+    storm = bench_storm(quick, strict)
+    rq3 = bench_rq3(quick, strict)
+    return {"quick": quick, "storm": storm, "rq3": rq3}

@@ -13,6 +13,12 @@ tasks) — and writes ``BENCH_pcm.json``; CI runs it as a ``--quick`` smoke
 job with a wall-clock timeout that doubles as a deadlock canary for the
 concurrent runtime.
 
+The ``cluster`` section (``--only cluster``) benchmarks the elastic
+runtime: join-storm bootstrap (N simultaneous cold joiners, P2P vs
+FS-only aggregate bootstrap seconds) and tasks/s under the rq3
+aggressive-preemption capacity trace; writes ``BENCH_cluster.json`` and
+runs in CI as the ``cluster-storm-smoke`` job under a hard timeout.
+
   PYTHONPATH=src python -m benchmarks.run [--quick/--full] [--only SECTION]
 """
 
@@ -31,15 +37,31 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smoke-sized runs (CI)")
     ap.add_argument("--only", default=None,
-                    choices=("paper", "micro", "roofline", "serving", "pcm"))
+                    choices=("paper", "micro", "roofline", "serving", "pcm",
+                             "cluster"))
     ap.add_argument("--json-out", default="BENCH_serving.json",
                     help="where the serving section writes its JSON record")
     ap.add_argument("--pcm-json-out", default="BENCH_pcm.json",
                     help="where the pcm section writes its JSON record")
+    ap.add_argument("--cluster-json-out", default="BENCH_cluster.json",
+                    help="where the cluster section writes its JSON record")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     t0 = time.time()
+    if args.only == "cluster":
+        # join-storm + elastic-trace benchmark: live workers with real
+        # engines — run only on request (not in the default sweep)
+        from benchmarks import cluster_bench
+        record = cluster_bench.bench_cluster(quick=args.quick, strict=True)
+        with open(args.cluster_json_out, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        top = record["storm"][f"n{max(cluster_bench.STORM_SIZES)}"]
+        print(f"# wrote {args.cluster_json_out} (P2P aggregate bootstrap "
+              f"x{top['speedup_aggregate_bootstrap']:.1f} vs FS-only at "
+              f"{top['p2p']['n_joiners']} joiners, "
+              f"{record['rq3']['tasks_per_second']:.2f} tasks/s under rq3)",
+              file=sys.stderr)
     if args.only in (None, "pcm"):
         from benchmarks import pcm_bench
         record = pcm_bench.bench_pcm(quick=args.quick,

@@ -1,35 +1,44 @@
-"""Opportunistic cluster serving: the paper's RQ3/RQ4 regimes, both as a
-cluster-scale deterministic simulation AND as a live mini-demo with real
-JAX inference and real preemption.
+"""Opportunistic cluster serving: the paper's RQ3/RQ4 regimes on the LIVE
+elastic runtime — real JAX inference, workers joining and leaving under a
+capacity trace, and peer-to-peer context bootstrap from warm donors — or,
+with ``--backend sim``, the same regimes as the cluster-scale
+deterministic discrete-event simulation.
 
-Run:  PYTHONPATH=src python examples/opportunistic_serving.py
+Run:  PYTHONPATH=src python examples/opportunistic_serving.py \
+          [--backend live|sim] [--trace rq3|rq4] [--tasks N]
+
+The live run compresses the paper's trace timeline (``rq3``: 1 GPU
+preempted per minute; ``rq4``: capacity ramping up from scarcity) onto a
+laptop-scale pool: an :class:`~repro.core.ElasticRunner` reconciles the
+worker pool against the trace on a background thread while ``client.map``
+drains a FEVER claim-verification sweep. Joiners bootstrap their context
+down the FetchSource ladder — peer-to-peer from a warm donor when one has
+a free fanout slot, else from the node snapshot pool, else the builder —
+so the sweep keeps its throughput through churn without re-paying startup.
 """
 
+import argparse
 import time
 
-import jax
-
 from repro.cluster import CostModel, simulate_sweep, traces
-from repro.configs import get_reduced_config
-from repro.core import (ContextMode, ContextRecipe, PCMManager, context_app,
-                        load_context, make_recipe)
-from repro.data import fever
-from repro.data.tokenizer import LABEL_TOKENS, HashTokenizer
-from repro.models import build_model
-from repro.serving import InferenceEngine
+from repro.core import (ContextMode, ContextRecipe, ElasticRunner, PCMClient,
+                        PCMManager, load_context, make_recipe)
 
 
-def simulated_cluster():
+def simulated_cluster(trace: str):
     """Fig. 8/9 at full scale (567-GPU census, deterministic DES)."""
     recipe = ContextRecipe(name="smollm2-pff")
     cost = CostModel()
-    print("== simulated: aggressive preemption (1 GPU/min from t=900s) ==")
-    for mode in (ContextMode.PARTIAL, ContextMode.FULL):
-        r = simulate_sweep(mode, traces.rq3_aggressive_preemption(), recipe,
-                           150_000, 100, cost=cost, until=4_000)
-        print(f"  {mode.value:8s}: {r.total_inferences:7d} inferences "
-              f"completed, {r.preemptions} preemptions "
-              f"(paper: partial 46k, full 62.9k)")
+    if trace == "rq3":
+        print("== simulated: aggressive preemption (1 GPU/min from "
+              "t=900s) ==")
+        for mode in (ContextMode.PARTIAL, ContextMode.FULL):
+            r = simulate_sweep(mode, traces.rq3_aggressive_preemption(),
+                               recipe, 150_000, 100, cost=cost, until=4_000)
+            print(f"  {mode.value:8s}: {r.total_inferences:7d} inferences "
+                  f"completed, {r.preemptions} preemptions "
+                  f"(paper: partial 46k, full 62.9k)")
+        return
     print("== simulated: opportunistic scale-out to 186 GPUs ==")
     r = simulate_sweep(ContextMode.FULL, traces.rq4_high_capacity(), recipe,
                        150_000, 100, cost=cost)
@@ -40,23 +49,55 @@ def simulated_cluster():
           "the shared FS")
 
 
-def live_preemption_demo():
-    """Real models, real preemption: 3 workers, one dies mid-sweep."""
-    print("== live: real inference with mid-sweep preemption ==")
+def _engine_recipe():
+    import jax
+
+    from repro.configs import get_reduced_config
+    from repro.data.tokenizer import HashTokenizer
+    from repro.models import build_model
+    from repro.serving import InferenceEngine
+
+    cfg = get_reduced_config("smollm2-1.7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
 
     def load_model():
-        cfg = get_reduced_config("smollm2-1.7b")
-        model = build_model(cfg)
-        params = model.init(jax.random.PRNGKey(0))
         engine = InferenceEngine(model, params, slots=4, cache_len=64,
-                                 prefill_buckets=(32,))
-        engine.generate([[2, 5]], max_new_tokens=1)
+                                 prefill_buckets=(32,), megastep=4)
         return {"engine": engine, "tok": HashTokenizer(cfg.vocab_size)}
 
-    mgr = PCMManager(mode=ContextMode.FULL, n_workers=3)
-    recipe = make_recipe("live.verifier", load_model)
+    return make_recipe("live.verifier", load_model, host_bytes=0)
 
-    @context_app(recipe=recipe, manager=mgr, n_items=8)
+
+def _live_trace(name: str):
+    """The paper traces, time-compressed onto a 4-GPU live pool: one
+    trace second per wall second, but with the paper's minutes-scale
+    events pulled into the first seconds of the run."""
+    pool = ["a10", "a10", "titan-x-pascal", "titan-x-pascal"]
+    if name == "rq3":
+        # depletion regime: full pool up front, 1 GPU reclaimed every 2.5s
+        # from t=3s down to a single survivor (floor=1: unlike the paper's
+        # full depletion, the demo must drain its queue)
+        return traces.rq3_aggressive_preemption(start_at=3.0, period=2.5,
+                                                pool=pool, floor=1)
+    # scarcity regime: start with 1 GPU, one more every 3s up to 4 —
+    # joiners bootstrap P2P from whoever is already warm
+    return traces.rq4_low_capacity(ramp_every=3.0, start=1, cap=4,
+                                   pool=pool)
+
+
+def live_elastic(trace: str, n_tasks: int):
+    """Real models under the real trace: the elastic factory joins and
+    preempts live workers while the claim sweep drains."""
+    from repro.data import fever
+    from repro.data.tokenizer import LABEL_TOKENS
+
+    print(f"== live: elastic pool under the {trace} trace ==")
+    recipe = _engine_recipe()
+    mgr = PCMManager(mode=ContextMode.FULL, n_workers=0)
+    client = PCMClient(backend=mgr)
+    runner = ElasticRunner(mgr, _live_trace(trace), reconcile_every=0.25)
+
     def verify(indices):
         engine = load_context("engine")
         tok = load_context("tok")
@@ -68,19 +109,36 @@ def live_preemption_demo():
                 for o, c in zip(outs, claims)]
 
     t0 = time.monotonic()
-    futs = [verify(list(range(b * 8, b * 8 + 8))) for b in range(8)]
-    # preempt one worker while the queue is still draining
-    victim = next(iter(mgr.workers))
-    mgr.preempt_worker(victim)
-    print(f"  preempted {victim} with tasks in flight (no warning)")
-    total = sum(sum(f.result()) for f in futs)
-    st = mgr.stats()
-    print(f"  all 64 claims verified anyway in "
-          f"{time.monotonic() - t0:.1f}s — requeued onto warm workers "
-          f"(context built {st['cold_invocations']}x, reused "
-          f"{st['warm_invocations']}x)")
+    runner.start()
+    try:
+        batch = client.map(verify, [list(range(b * 8, b * 8 + 8))
+                                    for b in range(n_tasks)],
+                           context=client.context(recipe), timeout=900)
+        total = sum(sum(r) for r in batch.gather())
+    finally:
+        runner.stop()
+        wall = time.monotonic() - t0
+        st = mgr.stats()
+        mgr.shutdown()
+    sources = [d.source.value for d in mgr.fetch_history()]
+    print(f"  {n_tasks * 8} claims verified ({total} correct) in "
+          f"{wall:.1f}s through {runner.joins} joins / "
+          f"{runner.preemptions} preemptions "
+          f"({n_tasks * 8 / wall:.1f} claims/s)")
+    print(f"  context acquisitions: {st['builder_calls']} builds, "
+          f"{st['peer_installs']} peer transfers, "
+          f"{st['context_restores']} pool restores "
+          f"(ladder decisions: {sources})")
 
 
 if __name__ == "__main__":
-    simulated_cluster()
-    live_preemption_demo()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=("live", "sim"), default="live")
+    ap.add_argument("--trace", choices=("rq3", "rq4"), default="rq4")
+    ap.add_argument("--tasks", type=int, default=12,
+                    help="live mode: number of 8-claim tasks")
+    args = ap.parse_args()
+    if args.backend == "sim":
+        simulated_cluster(args.trace)
+    else:
+        live_elastic(args.trace, args.tasks)

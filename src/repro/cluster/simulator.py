@@ -102,8 +102,19 @@ def modeled_start_seconds(a: Action, task: Task, profile: DeviceProfile,
 
 def modeled_fetch_seconds(a: Action, profile: DeviceProfile,
                           cost: CostModel, stats: dict) -> float:
-    """Modeled duration of one prefetch action (transfer + load), shared by
-    ClusterSimulator and SimulatorBackend. Updates transfer stats."""
+    """Modeled duration of one bootstrap-fetch action, shared by
+    ClusterSimulator and SimulatorBackend and keyed by the action's
+    FetchSource: POOL/DISK are snapshot promotions (the plan's restore
+    seconds — no network, no framework warm-up: the node process never
+    died), PEER/FS are transfers followed by the disk->HBM load, and BUILD
+    (no plan) pays the load path alone. Updates transfer stats."""
+    from repro.core.transfer import FetchSource
+    if a.plan is not None and a.plan.fetch_source in (FetchSource.POOL,
+                                                      FetchSource.DISK):
+        stats["pool"] = stats.get("pool", 0) + 1
+        return a.plan.seconds
+    if a.plan is None:                      # BUILD: nothing to transfer
+        return load_seconds(profile, a.recipe, cost, from_disk=False)
     stats["p2p" if a.plan.p2p else "fs"] += 1
     return a.plan.seconds + load_seconds(profile, a.recipe, cost,
                                          from_disk=True)
@@ -168,7 +179,8 @@ class ClusterSimulator:
         self._fetch_events: Dict[str, Event] = {}
         self._completions: List[Tuple[float, int]] = []
         self._worker_samples: List[Tuple[float, int]] = []
-        self._stats = dict(cold=0, warm=0, disk=0, preempt=0, p2p=0, fs=0)
+        self._stats = dict(cold=0, warm=0, disk=0, preempt=0, p2p=0, fs=0,
+                           pool=0)
         self._reconcile_ev: Optional[Event] = None
 
     # ------------------------------------------------------------ submit ---

@@ -26,28 +26,40 @@ def static(profiles: List[str] = None) -> Callable[[float], List[str]]:
 
 
 def rq3_aggressive_preemption(start_at: float = 900.0,
-                              period: float = 60.0
+                              period: float = 60.0,
+                              pool: List[str] = None,
+                              floor: int = 0
                               ) -> Callable[[float], List[str]]:
-    """20 GPUs; from ``start_at``, 1 GPU preempted per minute, A10s first
-    (paper §4.4), until the pool is depleted."""
+    """From ``start_at``, 1 GPU preempted per ``period`` seconds, A10s
+    first (paper §4.4), until the pool is depleted. ``pool`` defaults to
+    the paper's 20-GPU mix; live elastic runs pass a smaller pool (and a
+    time-compressed ``start_at``/``period``) to get the same depletion
+    shape at laptop scale. ``floor`` keeps that many slots alive forever —
+    the paper's runs deplete fully (floor=0, the sweep strands), a live
+    demo that must drain its queue keeps floor>=1."""
+    base = list(STATIC_20 if pool is None else pool)
 
     def capacity(t: float) -> List[str]:
         lost = 0 if t < start_at else int((t - start_at) // period) + 1
-        keep = max(0, 20 - lost)
-        pool = STATIC_20[::-1]          # TITAN X last -> preempt A10s first
-        return pool[:keep][::-1]
+        keep = max(min(floor, len(base)), len(base) - lost)
+        rev = base[::-1]                # TITAN X last -> preempt A10s first
+        return rev[:keep][::-1]
 
     return capacity
 
 
 def rq4_low_capacity(ramp_every: float = 240.0,
-                     start: int = 4, cap: int = 20
+                     start: int = 4, cap: int = 20,
+                     pool: List[str] = None
                      ) -> Callable[[float], List[str]]:
-    """Scarce cluster: start with 4 GPUs, one more every few minutes."""
+    """Scarce cluster: start with ``start`` GPUs, one more every
+    ``ramp_every`` seconds up to ``cap`` (drawn from ``pool``, default the
+    paper's 20-GPU mix)."""
+    base = list(STATIC_20 if pool is None else pool)
 
     def capacity(t: float) -> List[str]:
-        n = min(cap, start + int(t // ramp_every))
-        return STATIC_20[:n]
+        n = min(min(cap, len(base)), start + int(t // ramp_every))
+        return base[:n]
 
     return capacity
 

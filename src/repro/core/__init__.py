@@ -28,14 +28,18 @@ Module map:
                SnapshotPool (physical HOST_RAM/LOCAL_DISK tiers)
   library.py   per-worker executor holding materialized (named) contexts;
                restore-over-rebuild, demote to the pool
-  transfer.py  shared-FS vs peer-to-peer bootstrap planning + promotion
-               (restore) bandwidth modeling
+  transfer.py  the FetchSource ladder (PEER/POOL/DISK/FS/BUILD), donor-
+               fanout + bandwidth admission, measured-transfer calibration
   scheduler.py context-aware placement (DEVICE > HOST_RAM > LOCAL_DISK >
-               cold ladder, multi-context, contextless, priority hints),
-               requeue-on-preemption, stragglers
-  factory.py   reactive opportunistic pool reconciliation
+               cold ladder, multi-context, contextless, priority hints,
+               profile-aware ranking), FetchSource bootstrap decisions
+               (fetch_log — identical live and simulated), requeue-on-
+               preemption, stragglers
+  factory.py   reactive opportunistic pool reconciliation (WorkerFactory)
+               + ElasticRunner driving a live manager from capacity traces
   manager.py   live concurrent runtime (worker actor threads + mailboxes,
-               real JAX execution, physical preemption demotion) + Future
+               real JAX execution, physical preemption demotion,
+               donor->receiver peer context transfer) + Future
   backend.py   ExecutionBackend protocol + SimulatorBackend dry-run
   api.py       PCMClient / ContextHandle (pin, warm_up, demote, residency)
                / FutureBatch (+ legacy @context_app shim, paper Fig. 5)
@@ -48,26 +52,30 @@ from repro.core.api import (ContextHandle, FutureBatch, PCMClient,
 from repro.core.backend import (ExecutionBackend, LiveBackend, SimTaskResult,
                                 SimulatorBackend)
 from repro.core.context import (Context, ContextRecipe, ContextSnapshot,
-                                materialize, restore_context,
-                                snapshot_context)
+                                PeerExportError, export_context, materialize,
+                                restore_context, snapshot_context)
+from repro.core.factory import ElasticRunner, PoolDirective, WorkerFactory
 from repro.core.library import (Library, current_context,
                                 load_variable_from_context)
 from repro.core.manager import Future, PCMManager
 from repro.core.scheduler import (Action, Completion, ContextAwareScheduler,
-                                  Task, WorkerPhase)
+                                  FetchDecision, Task, WorkerPhase)
 from repro.core.store import (ContextMode, ContextStore, SnapshotPool, Tier,
                               TierFullError)
-from repro.core.transfer import TransferPlan, TransferPlanner
+from repro.core.transfer import FetchSource, TransferPlan, TransferPlanner
 
 __all__ = [
     "ContextHandle", "FutureBatch", "PCMClient", "context_app",
     "get_default_client", "get_default_manager", "load_context",
     "make_recipe", "set_default_manager", "ExecutionBackend", "LiveBackend",
     "SimTaskResult", "SimulatorBackend", "Context", "ContextRecipe",
-    "ContextSnapshot", "materialize", "restore_context", "snapshot_context",
+    "ContextSnapshot", "PeerExportError", "export_context", "materialize",
+    "restore_context", "snapshot_context",
+    "ElasticRunner", "PoolDirective", "WorkerFactory",
     "Library", "current_context",
     "load_variable_from_context", "Future", "PCMManager", "Action",
-    "Completion", "ContextAwareScheduler", "Task", "WorkerPhase",
+    "Completion", "ContextAwareScheduler", "FetchDecision", "Task",
+    "WorkerPhase",
     "ContextMode", "ContextStore", "SnapshotPool", "Tier", "TierFullError",
-    "TransferPlan", "TransferPlanner",
+    "FetchSource", "TransferPlan", "TransferPlanner",
 ]

@@ -138,6 +138,14 @@ class ContextHandle:
         """worker id -> highest tier currently holding this context."""
         return self._client.backend.residency(self.recipe)
 
+    def fetch_history(self) -> List:
+        """The FetchSource-ladder decisions the scheduler made for this
+        context so far: ``FetchDecision(worker_id, key, source, donor, t)``
+        records, in decision order. PEER entries name the donor worker the
+        bootstrap was served from. Identical vocabulary on the live and
+        simulator backends."""
+        return self._client.backend.fetch_history(self.recipe)
+
     def resident_workers(self, tier: Tier = Tier.DEVICE) -> List[str]:
         return [wid for wid, t in self.residency().items() if t >= tier]
 

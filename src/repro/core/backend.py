@@ -33,7 +33,7 @@ from repro.core.context import ContextRecipe
 from repro.core.manager import Future, PCMManager
 from repro.core.scheduler import Action, ContextAwareScheduler, Task
 from repro.core.store import ContextMode, ContextStore, Tier
-from repro.core.transfer import TransferPlanner
+from repro.core.transfer import FetchSource, TransferPlanner
 
 
 @runtime_checkable
@@ -75,6 +75,9 @@ class ExecutionBackend(Protocol):
     def release_context(self, recipe: ContextRecipe) -> None: ...
 
     def residency(self, recipe: ContextRecipe) -> Dict[str, Tier]: ...
+
+    def fetch_history(self, recipe: Optional[ContextRecipe] = None
+                      ) -> List: ...
 
     def lookup_task(self, task_id: str) -> Optional[Task]: ...
 
@@ -119,7 +122,9 @@ class SimulatorBackend:
                  cost=None, capacity_fn: Optional[Callable] = None,
                  planner: Optional[TransferPlanner] = None,
                  straggler_factor: float = 0.0,
-                 reconcile_every: float = 15.0):
+                 reconcile_every: float = 15.0,
+                 p2p: bool = True,
+                 donor_wait: bool = False):
         # cluster imports stay local: core does not depend on cluster at
         # module load, so the live path never pays for the simulator
         from repro.cluster.devices import PROFILES, CostModel
@@ -131,7 +136,14 @@ class SimulatorBackend:
         self.planner = planner or TransferPlanner()
         self.scheduler = ContextAwareScheduler(
             mode=mode, planner=self.planner,
-            straggler_factor=straggler_factor)
+            straggler_factor=straggler_factor,
+            p2p=p2p, donor_wait=donor_wait)
+        # modeled node snapshot pool: preempting a worker in full-context
+        # mode "demotes" its device-resident contexts here (mirroring the
+        # live runtime's retirement demotion), so a later joiner's ladder
+        # can decide POOL/DISK exactly like the live scheduler does
+        self._node_pool: Dict[str, Tier] = {}
+        self.scheduler.pool_tier = self._node_pool.get
         self._profiles_db = PROFILES
         self.profiles: Dict[str, Any] = {}
         self.reconcile_every = reconcile_every
@@ -144,7 +156,8 @@ class SimulatorBackend:
         self._page_cached: set = set()
         self._pinned: set = set()
         self._pending: List[Action] = []
-        self._stats = dict(cold=0, warm=0, disk=0, preempt=0, p2p=0, fs=0)
+        self._stats = dict(cold=0, warm=0, disk=0, preempt=0, p2p=0, fs=0,
+                           pool=0)
         self._reconcile_ev = None
         self.factory = None
         if capacity_fn is not None:
@@ -178,6 +191,13 @@ class SimulatorBackend:
         self._page_cached = {(w, k) for (w, k) in self._page_cached
                              if w != worker_id}
         self.profiles.pop(worker_id, None)
+        if self.mode == ContextMode.FULL:
+            # modeled retirement demotion: the reclaimed device's contexts
+            # survive in node host RAM (the live SnapshotPool behavior)
+            info = self.scheduler.workers.get(worker_id)
+            if info is not None:
+                for key in info.store.keys(Tier.DEVICE):
+                    self._node_pool[key] = Tier.HOST_RAM
         self._apply(self.scheduler.on_worker_leave(worker_id, self.loop.now))
 
     def _reconcile(self):
@@ -265,6 +285,10 @@ class SimulatorBackend:
                 continue
             info.store.drop(key, down_to=tier)
             moved.append(wid)
+        if moved:
+            # the demoted snapshot lands in the modeled node pool, where a
+            # cold joiner's ladder can find it (POOL/DISK rungs)
+            self._node_pool[key] = tier
         return moved
 
     # --------------------------------------------------------- execution ---
@@ -328,6 +352,10 @@ class SimulatorBackend:
 
         def done():
             self._fetch_events.pop(wid, None)
+            if a.source in (FetchSource.POOL, FetchSource.DISK):
+                # snapshot promotion consumes the pooled copy (single-
+                # owner move semantics, as in the live SnapshotPool)
+                self._node_pool.pop(key, None)
             info = self.scheduler.workers.get(wid)
             if info is not None:
                 try:
@@ -346,6 +374,16 @@ class SimulatorBackend:
         from repro.cluster.simulator import modeled_start_seconds
         profile = self.profiles[a.worker_id]
         task = self.scheduler.tasks[a.task_id]
+        # a start on a host/disk-resident worker is a snapshot promotion:
+        # it consumes the single-owner pooled copy, exactly as the live
+        # Library.ensure takes it from the SnapshotPool — without this the
+        # sim's ladder would keep offering a POOL rung the live runtime no
+        # longer has
+        for recipe, on_host, on_disk, on_device in zip(
+                a.recipes, a.host_resident or (), a.disk_resident or (),
+                a.device_resident or ()):
+            if (on_host or on_disk) and not on_device:
+                self._node_pool.pop(recipe.key(), None)
         dur = modeled_start_seconds(a, task, profile, self.scheduler,
                                     self.planner, self.cost, self.mode,
                                     self._page_cached, self._stats,
@@ -373,6 +411,12 @@ class SimulatorBackend:
     def lookup_task(self, task_id: str) -> Optional[Task]:
         return self.scheduler.tasks.get(task_id)
 
+    def fetch_history(self, recipe: Optional[ContextRecipe] = None) -> List:
+        """FetchSource-ladder decisions (optionally for one recipe) — the
+        same ``fetch_log`` records the live backend exposes, on modeled
+        time."""
+        return self.scheduler.fetch_history(recipe)
+
     @property
     def now(self) -> float:
         """Modeled seconds since the backend was created."""
@@ -386,4 +430,5 @@ class SimulatorBackend:
                 "disk_hits": self._stats["disk"],
                 "preemptions": self._stats["preempt"],
                 "p2p_transfers": self._stats["p2p"],
-                "fs_transfers": self._stats["fs"]}
+                "fs_transfers": self._stats["fs"],
+                "pool_restores": self._stats["pool"]}

@@ -288,6 +288,78 @@ class ContextSnapshot:
             spill_store.delete(self.spill_key)
 
 
+class PeerExportError(RuntimeError):
+    """The context value holds a device-stateful component that cannot be
+    cloned for a peer transfer (no ``clone_offloaded``/``export_template``
+    hooks) — the receiver must fall back down the fetch ladder."""
+
+
+def _clone_item(v: Any) -> Any:
+    """Clone one reachable component for a peer transfer. Device-stateful
+    components must provide the transfer duck-type (``clone_offloaded`` —
+    a structural twin sharing the AOT executables, device state detached —
+    plus ``export_template``); plain host objects are deep-copied."""
+    if callable(getattr(v, "clone_offloaded", None)) and \
+            callable(getattr(v, "export_template", None)):
+        return v.clone_offloaded()
+    if callable(getattr(v, "offload_device_state", None)):
+        raise PeerExportError(
+            f"{type(v).__qualname__} is device-stateful but does not "
+            "support peer transfer (clone_offloaded/export_template)")
+    import copy
+    return copy.deepcopy(v)
+
+
+def _exportable(value: Any):
+    """Donor components whose template state ships in the transfer.
+
+    Membership is ``_offloadable`` AND the transfer hooks: the receiver's
+    ``restore_context`` feeds ``host_state`` by index over the clone's
+    ``_offloadable`` walk, so the two enumerations must agree exactly — a
+    component with export hooks but no offload/restore hooks is cloned
+    (``_clone_item``) but ships no template, matching the restore side
+    that would never touch it."""
+    for v in _offloadable(value):
+        if callable(getattr(v, "export_template", None)) and \
+                callable(getattr(v, "clone_offloaded", None)):
+            yield v
+
+
+def export_context(ctx: Context) -> ContextSnapshot:
+    """Donor side of a peer-to-peer context bootstrap (FetchSource.PEER).
+
+    Unlike :func:`snapshot_context` (demotion — destructive, the donor
+    loses its device state), export builds a TEMPLATE copy while the donor
+    keeps serving: each device-stateful component contributes a pristine
+    host-side template (weights copied via ``jax.device_get``, per-slot
+    decode state blank) via ``export_template``, and the snapshot's value
+    is a structural clone (``clone_offloaded``) that SHARES the donor's
+    AOT-compiled executables in-process — which is why the receiver's
+    restore performs zero builder calls and zero XLA compiles. Plain host
+    components (tokenizers, configs) are deep-copied.
+
+    Raises :class:`PeerExportError` when a device-stateful component lacks
+    the transfer hooks; callers fall back down the fetch ladder."""
+    t0 = time.monotonic()
+    value = ctx.value
+    if isinstance(value, dict):
+        clone = {k: _clone_item(v) for k, v in value.items()}
+    elif isinstance(value, (list, tuple)):
+        clone = type(value)(_clone_item(v) for v in value)
+    else:
+        clone = _clone_item(value)
+    host_state: Dict[str, Any] = {}
+    for i, comp in enumerate(_exportable(value)):
+        host_state[f"c{i}"] = comp.export_template()
+    nbytes = _tree_nbytes(host_state) if host_state \
+        else ctx.recipe.host_bytes
+    return ContextSnapshot(recipe=ctx.recipe, value=clone,
+                           host_state=host_state, nbytes=nbytes,
+                           build_seconds=ctx.build_seconds,
+                           aot_seconds=ctx.aot_seconds,
+                           demote_seconds=time.monotonic() - t0)
+
+
 def snapshot_context(ctx: Context) -> ContextSnapshot:
     """Demote DEVICE -> HOST_RAM: pull every offloadable component's device
     state to host numpy (one ``jax.device_get`` per component) and detach

@@ -35,6 +35,7 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Set
 
 from repro.core.context import (Context, ContextRecipe, materialize,
                                 restore_context, snapshot_context)
+from repro.core.transfer import FetchSource
 
 _current: contextvars.ContextVar = contextvars.ContextVar(
     "repro_pcm_context", default=None)
@@ -108,6 +109,13 @@ class Library:
         self.restores = 0              # snapshot promotions (no builder)
         self.restore_seconds_total = 0.0
         self.demotions = 0
+        self.peer_installs = 0         # contexts adopted from a P2P donor
+        self.peer_exports = 0          # templates exported to receivers
+        self.peer_install_seconds = 0.0
+        # the ACTUAL source of every acquisition this Library performed
+        # (POOL/DISK/BUILD via ensure, PEER via adopt) — the execution-side
+        # complement of the scheduler's fetch_log decisions
+        self.fetch_sources: List[FetchSource] = []
 
     # ---------------------------------------------------------- contexts --
     def has(self, key: str) -> bool:
@@ -130,17 +138,23 @@ class Library:
             if self.snapshots is not None:
                 snap = self.snapshots.take(key)
                 if snap is not None:
+                    from_disk = snap.spilled
                     ctx = restore_context(
                         snap, self.worker_id,
                         spill_store=self.snapshots.spill_store())
                     self.restores += 1
                     self.restore_seconds_total += ctx.restore_seconds
                     self.snapshots.restore_seconds += ctx.restore_seconds
+                    self.fetch_sources.append(
+                        FetchSource.DISK if from_disk else FetchSource.POOL)
             if ctx is None:
                 ctx = materialize(recipe, self.worker_id)
                 self.builder_calls += 1
                 self.build_seconds_total += ctx.build_seconds
                 self.aot_seconds_total += ctx.aot_seconds
+                self.fetch_sources.append(
+                    FetchSource.FS if recipe.transfer_bytes > 0
+                    else FetchSource.BUILD)
             self._contexts[key] = ctx
         return self._contexts[key]
 
@@ -170,8 +184,19 @@ class Library:
             self.demote(key, force=force)
 
     def install(self, ctx: Context):
-        """Adopt a context transferred from a peer (P2P bootstrap)."""
+        """Make a context resident without building it here."""
         self._contexts[ctx.key] = ctx
+
+    def adopt(self, ctx: Context):
+        """Adopt a context restored from a peer-donated template snapshot
+        (P2P bootstrap): resident with zero builder calls and zero
+        compiles, at one device_put of transfer cost. Counted under
+        ``peer_install_seconds`` only — ``restore_seconds_total`` stays
+        pool/disk promotions, so the two never double-count."""
+        self.install(ctx)
+        self.peer_installs += 1
+        self.peer_install_seconds += ctx.restore_seconds
+        self.fetch_sources.append(FetchSource.PEER)
 
     def pin(self, key: str):
         self.pinned.add(key)

@@ -45,12 +45,13 @@ import traceback
 import weakref
 from typing import Any, Callable, Dict, List, Mapping, Optional
 
-from repro.core.context import ContextRecipe
+from repro.core.context import (GB, ContextRecipe, export_context,
+                                restore_context)
 from repro.core.library import Library
 from repro.core.scheduler import (Action, ContextAwareScheduler, ContextMode,
                                   Task)
 from repro.core.store import ContextStore, SnapshotPool, Tier
-from repro.core.transfer import TransferPlanner
+from repro.core.transfer import FetchSource, TransferPlan, TransferPlanner
 
 
 class Future:
@@ -153,7 +154,15 @@ class LiveWorker:
     Mailbox messages are ``(kind, ...)`` tuples routed by the manager:
 
       ("start", task_id)              run one task invocation
-      ("fetch", recipe)               materialize/restore off-path
+      ("fetch", recipe, plan)         materialize/restore off-path (the
+                                      POOL/DISK/FS/BUILD ladder rungs)
+      ("donate", recipe, rcv, plan)   export this worker's warm context as
+                                      a template snapshot and ship it to
+                                      receiver ``rcv`` (PEER transfer —
+                                      the donor keeps its copy serving)
+      ("install", recipe, snap, plan) adopt a donated snapshot (restore to
+                                      device); ``snap=None`` degrades to
+                                      the normal fetch ladder
       ("warm", recipe, event)         synchronous warm-up (event set when
                                       resident)
       ("demote", key, tier, event)    physically demote one context
@@ -168,10 +177,13 @@ class LiveWorker:
     no state is ever snapshotted mid-mutation.
     """
 
-    def __init__(self, worker_id: str, manager: "PCMManager"):
+    def __init__(self, worker_id: str, manager: "PCMManager", profile=None):
         self.worker_id = worker_id
+        self.profile = profile          # cluster.devices.DeviceProfile
         self.library = Library(worker_id, snapshots=manager.snapshots)
-        self.store = ContextStore()
+        hbm_gb = getattr(profile, "hbm_gb", None)
+        self.store = ContextStore(device_bytes=int(hbm_gb * GB)) \
+            if hbm_gb else ContextStore()
         self.mailbox: "queue.SimpleQueue" = queue.SimpleQueue()
         self.alive = True
         self._mgr = manager
@@ -206,7 +218,11 @@ class LiveWorker:
                 if kind == "start":
                     self._handle_start(msg[1])
                 elif kind == "fetch":
-                    self._handle_fetch(msg[1])
+                    self._handle_fetch(msg[1], msg[2])
+                elif kind == "donate":
+                    self._handle_donate(msg[1], msg[2], msg[3])
+                elif kind == "install":
+                    self._handle_install(msg[1], msg[2], msg[3])
                 elif kind == "warm":
                     self._handle_warm(msg[1], msg[2], msg[3])
                 elif kind == "demote":
@@ -216,13 +232,23 @@ class LiveWorker:
         self._drain_events()
 
     def _drain_events(self):
-        # a retiring worker must not strand synchronous callers: release
-        # every event still waiting in the mailbox
+        # a retiring worker must not strand synchronous callers or wedge
+        # the transfer pipeline: release every event still waiting in the
+        # mailbox, degrade pending donations so their receivers fall back
+        # down the ladder, and free every planner flow we would have
+        # completed
         while True:
             try:
                 msg = self.mailbox.get_nowait()
             except queue.Empty:
                 return
+            kind = msg[0]
+            if kind == "donate":
+                # the receiver is still FETCHING on our donation: hand it
+                # a None snapshot so it degrades to pool/disk/builder
+                self._mgr._deliver_install(msg[2], msg[1], None, msg[3])
+            elif kind in ("fetch", "install"):
+                self._mgr._flow_done(msg[-1])
             for part in msg:
                 if isinstance(part, threading.Event):
                     part.set()
@@ -270,9 +296,11 @@ class LiveWorker:
             mgr._dispatch(acts)
             mgr._cond.notify_all()
 
-    def _handle_fetch(self, recipe: ContextRecipe):
+    def _handle_fetch(self, recipe: ContextRecipe,
+                      plan: Optional[TransferPlan]):
         mgr = self._mgr
         if not self.alive:
+            mgr._flow_done(plan)
             return           # preempted with the fetch still queued: the
             # scheduler already forgot this worker — don't burn a build
         key = recipe.key()
@@ -283,12 +311,71 @@ class LiveWorker:
             traceback.print_exc(file=sys.stderr)
             failed = True
         with mgr._cond:
+            # no bandwidth calibration here: the ladder fallback may have
+            # run the builder, which says nothing about a transfer rate
+            mgr._flow_done_locked(plan)
             if not self.alive:
                 return
             # a failed build reports a non-matching key: the scheduler
             # clears the fetching state without recording residency
             acts = mgr.scheduler.on_fetch_done(
                 self.worker_id, "<build-failed>" if failed else key, mgr.now)
+            mgr._dispatch(acts)
+            mgr._cond.notify_all()
+
+    def _handle_donate(self, recipe: ContextRecipe, receiver_id: str,
+                       plan: Optional[TransferPlan]):
+        """Donor side of a PEER transfer: export a template snapshot of
+        the warm context (non-destructive — this worker keeps serving from
+        its own copy) and ship it to the receiver's mailbox. A donor that
+        lost the context (race with eviction/preemption) or whose export
+        fails degrades the receiver to the normal fetch ladder."""
+        mgr = self._mgr
+        key = recipe.key()
+        snap = None
+        if self.alive and self.library.has(key):
+            try:
+                snap = export_context(self.library.context(key))
+                self.library.peer_exports += 1
+            except BaseException:
+                traceback.print_exc(file=sys.stderr)
+        mgr._deliver_install(receiver_id, recipe, snap, plan)
+
+    def _handle_install(self, recipe: ContextRecipe, snap,
+                        plan: Optional[TransferPlan]):
+        """Receiver side of a PEER transfer: promote the donated snapshot
+        to the device and adopt it (zero builder calls, zero compiles).
+        ``snap=None`` means the donor could not serve — fall back down the
+        ladder (pool -> disk -> builder) via ``Library.ensure``."""
+        mgr = self._mgr
+        if not self.alive:
+            mgr._flow_done(plan)
+            return
+        key = recipe.key()
+        failed = False
+        measured = None
+        try:
+            if snap is not None:
+                ctx = restore_context(snap, self.worker_id)
+                self.library.adopt(ctx)
+                # calibrate on the transfer WORK (donor export + receiver
+                # restore), not end-to-end latency: mailbox queue wait —
+                # or a builder run on a degraded donation — is not
+                # bandwidth
+                measured = snap.demote_seconds + ctx.restore_seconds
+            else:
+                self.library.ensure(recipe)
+        except BaseException:
+            traceback.print_exc(file=sys.stderr)
+            failed = True
+            measured = None
+        with mgr._cond:
+            mgr._flow_done_locked(plan, measured_seconds=measured)
+            if not self.alive:
+                return
+            acts = mgr.scheduler.on_fetch_done(
+                self.worker_id, "<transfer-failed>" if failed else key,
+                mgr.now)
             mgr._dispatch(acts)
             mgr._cond.notify_all()
 
@@ -336,11 +423,17 @@ class PCMManager:
                  n_workers: int = 2,
                  planner: Optional[TransferPlanner] = None,
                  snapshots: Optional[SnapshotPool] = None,
-                 spill_dir: Optional[str] = None):
+                 spill_dir: Optional[str] = None,
+                 p2p: bool = True,
+                 donor_wait: bool = True):
         self.mode = mode
         self.planner = planner or TransferPlanner()
-        self.scheduler = ContextAwareScheduler(mode=mode, planner=self.planner)
+        self.scheduler = ContextAwareScheduler(mode=mode, planner=self.planner,
+                                               p2p=p2p, donor_wait=donor_wait)
         self.snapshots = snapshots or SnapshotPool(spill_dir=spill_dir)
+        # the POOL/DISK rungs of the scheduler's FetchSource ladder read
+        # node-pool residency straight from the live SnapshotPool
+        self.scheduler.pool_tier = self.snapshots.tier
         # when a pooled snapshot is consumed (restored elsewhere) or lost
         # (capacity), the HOST_RAM residency other workers recorded for it
         # is a phantom — invalidate it so the placement ladder stays honest
@@ -357,7 +450,9 @@ class PCMManager:
         # stats() so churn doesn't erase history
         self._retired = {"cold": 0, "warm": 0, "build_seconds": 0.0,
                          "restore_seconds": 0.0, "builder_calls": 0,
-                         "restores": 0, "demotions": 0}
+                         "restores": 0, "demotions": 0,
+                         "peer_installs": 0, "peer_exports": 0,
+                         "peer_install_seconds": 0.0}
         # every worker ever spawned (incl. preempted ones): shutdown joins
         # them all so no thread is mid-JAX-call at interpreter teardown
         self._spawned: List[LiveWorker] = []
@@ -374,16 +469,24 @@ class PCMManager:
         return time.monotonic() - self._t0
 
     # ------------------------------------------------------------- pool ----
-    def add_worker(self) -> str:
+    def add_worker(self, worker_id: Optional[str] = None,
+                   profile=None) -> str:
+        """Spawn one worker actor. ``worker_id``/``profile`` let a
+        WorkerFactory-driven elastic pool attach the trace's worker
+        identity and DeviceProfile (heterogeneous HBM capacity + profile-
+        aware placement); both default to manager-generated/anonymous."""
         with self._cond:
-            wid = f"live{next(self._ids):03d}"
-            w = LiveWorker(wid, self)
+            wid = worker_id or f"live{next(self._ids):03d}"
+            if wid in self.workers:
+                raise ValueError(f"worker {wid!r} already exists")
+            w = LiveWorker(wid, self, profile=profile)
             w.store.pinned.update(self._pinned)
             w.library.pinned.update(self._pinned)
             self.workers[wid] = w
             self._spawned.append(w)
             w.start()
             acts = self.scheduler.on_worker_join(wid, self.now,
+                                                 profile=profile,
                                                  store=w.store)
             self._dispatch(acts)
             self._cond.notify_all()
@@ -535,6 +638,13 @@ class PCMManager:
         t = self.snapshots.tier(recipe.key())
         return None if t is None else Tier(t)
 
+    def fetch_history(self, recipe: Optional[ContextRecipe] = None) -> List:
+        """FetchSource-ladder decisions made so far (optionally filtered
+        to one recipe) — (worker, key, source, donor, t) records from the
+        scheduler's ``fetch_log``."""
+        with self._lock:
+            return self.scheduler.fetch_history(recipe)
+
     def _on_snapshot_gone(self, key: str):
         """Pool callback (fired outside the pool lock): the snapshot for
         ``key`` no longer exists, so HOST_RAM/LOCAL_DISK residency claims
@@ -550,8 +660,11 @@ class PCMManager:
     # --------------------------------------------------------- execution ---
     def _dispatch(self, actions: List[Action]):
         """Route scheduler actions to worker mailboxes (callers hold the
-        lock). ``cancel`` needs no message: the revalidation barrier in
-        ``_handle_start`` discards any stale in-flight copy."""
+        lock). A PEER fetch goes to the DONOR first (("donate", ...) —
+        export then ship to the receiver); every other fetch source runs
+        on the receiver's own thread down the Library ladder. ``cancel``
+        needs no message: the revalidation barrier in ``_handle_start``
+        discards any stale in-flight copy."""
         for a in actions:
             w = self.workers.get(a.worker_id)
             if w is None or not w.alive:
@@ -560,11 +673,52 @@ class PCMManager:
                                                           self.now)
                     self._fail_unresolved()
                     self._dispatch(acts)
+                elif a.kind == "fetch":
+                    self._flow_done_locked(a.plan)
                 continue
             if a.kind == "start":
                 w.post(("start", a.task_id))
             elif a.kind == "fetch":
-                w.post(("fetch", a.recipe))
+                if a.source == FetchSource.PEER and a.donor:
+                    donor = self.workers.get(a.donor)
+                    if donor is not None and donor.alive:
+                        donor.post(("donate", a.recipe, a.worker_id,
+                                    a.plan))
+                        continue
+                w.post(("fetch", a.recipe, a.plan))
+
+    def _deliver_install(self, receiver_id: str, recipe: ContextRecipe,
+                         snap, plan: Optional[TransferPlan]):
+        """Hand a donated snapshot (or a None fallback) to the receiving
+        worker's mailbox; called from donor threads and drain paths. The
+        post happens under the manager lock: preemption flips ``alive``
+        and enqueues the retirement under the same lock, so the install
+        either lands ahead of the retirement (drained with its flow freed)
+        or is rerouted here — never stranded in a dead mailbox."""
+        with self._cond:
+            w = self.workers.get(receiver_id)
+            if w is None or not w.alive:
+                # receiver departed mid-transfer: the scheduler already
+                # cleaned it up — just free the planner flow
+                self._flow_done_locked(plan)
+                self._cond.notify_all()
+                return
+            w.post(("install", recipe, snap, plan))
+
+    def _flow_done(self, plan: Optional[TransferPlan],
+                   measured_seconds: Optional[float] = None):
+        with self._lock:
+            self._flow_done_locked(plan, measured_seconds)
+
+    def _flow_done_locked(self, plan: Optional[TransferPlan],
+                          measured_seconds: Optional[float] = None):
+        """Report a planned transfer finished: frees the donor/FS slot
+        immediately and, when real transfer work was measured (peer
+        export + restore), feeds it into the planner's bandwidth
+        calibration (callers hold the lock)."""
+        if plan is not None:
+            self.planner.complete(plan, self.now,
+                                  measured_seconds=measured_seconds)
 
     def _fail_unresolved(self):
         """Surface scheduler-declared failures (max_attempts exceeded) as
@@ -646,6 +800,9 @@ class PCMManager:
             r["builder_calls"] += library.builder_calls
             r["restores"] += library.restores
             r["demotions"] += library.demotions
+            r["peer_installs"] += library.peer_installs
+            r["peer_exports"] += library.peer_exports
+            r["peer_install_seconds"] += library.peer_install_seconds
 
     # ------------------------------------------------------------- stats ---
     def stats(self) -> Dict:
@@ -656,6 +813,9 @@ class PCMManager:
             builder_calls = self._retired["builder_calls"]
             restores = self._retired["restores"]
             demotions = self._retired["demotions"]
+            peer_installs = self._retired["peer_installs"]
+            peer_exports = self._retired["peer_exports"]
+            peer_install_s = self._retired["peer_install_seconds"]
             for w in self.workers.values():
                 for rec in w.library.records:
                     cold += rec.cold
@@ -665,11 +825,18 @@ class PCMManager:
                 builder_calls += w.library.builder_calls
                 restores += w.library.restores
                 demotions += w.library.demotions
+                peer_installs += w.library.peer_installs
+                peer_exports += w.library.peer_exports
+                peer_install_s += w.library.peer_install_seconds
             return {"cold_invocations": cold, "warm_invocations": warm,
                     "context_build_seconds": build_s,
                     "context_restore_seconds": restore_s,
                     "builder_calls": builder_calls,
                     "context_restores": restores,
                     "context_demotions": demotions,
+                    "peer_installs": peer_installs,
+                    "peer_exports": peer_exports,
+                    "peer_install_seconds": peer_install_s,
                     "completed": len(self.scheduler.completions),
-                    "snapshot_pool": self.snapshots.stats()}
+                    "snapshot_pool": self.snapshots.stats(),
+                    "transfer": self.planner.stats(self.now)}

@@ -9,9 +9,20 @@ SAME scheduling code run the real runtime and the paper-figure simulations.
 
 Policy highlights (paper §3 + production extensions):
   * placement prefers idle workers whose store already holds the task's
-    context at the mode's persist tier (warm-context affinity);
-  * cold idle workers are bootstrapped via the TransferPlanner (P2P from a
-    warm donor when cheaper than the shared FS);
+    context at the mode's persist tier (warm-context affinity); candidates
+    at the same residency rung are ranked by their DeviceProfile (fastest
+    compute for warm/cold starts, fastest PCIe for snapshot restores);
+  * cold workers bootstrap down the **FetchSource ladder**
+    (PEER > POOL > DISK > FS > BUILD, see ``repro.core.transfer``):
+    peer-to-peer from a warm donor under the TransferPlanner's fanout/
+    bandwidth admission, else a node-pool snapshot promotion, else the
+    shared FS / the builder. In full-context mode a queued task whose only
+    idle candidates are cold is held while its context is bootstrapped
+    (fetch first, start warm) instead of cold-building on the task path;
+    with ``donor_wait`` the scheduler queues behind saturated donors
+    rather than falling back to the shared FS. Every ladder decision is
+    recorded in ``fetch_log`` — the live runtime and the discrete-event
+    simulator produce comparable decision sequences from the same policy;
   * preempted tasks are requeued at the FRONT (they have already waited);
   * straggler mitigation: optionally duplicate the slowest running task to
     a warm idle worker when it exceeds ``straggler_factor`` x the median
@@ -25,11 +36,11 @@ import enum
 import itertools
 import statistics
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Set, Tuple
+from typing import (Callable, Deque, Dict, List, Optional, Set, Tuple)
 
 from repro.core.context import ContextRecipe
 from repro.core.store import ContextMode, ContextStore, Tier
-from repro.core.transfer import TransferPlan, TransferPlanner
+from repro.core.transfer import FetchSource, TransferPlan, TransferPlanner
 
 
 # ------------------------------------------------------------------ types --
@@ -79,8 +90,22 @@ class WorkerInfo:
     current: Optional[str] = None       # running / fetching task id
     fetching_key: Optional[str] = None
     fetching_recipe: Optional[ContextRecipe] = None
+    fetching_source: Optional[FetchSource] = None
     joined_at: float = 0.0
     fetch_blocked: Set[str] = field(default_factory=set)  # admission refused
+
+
+@dataclass
+class FetchDecision:
+    """One FetchSource-ladder decision, recorded in ``fetch_log`` when a
+    fetch action is issued. The live runtime and the simulator log through
+    the same code path, so their sequences are directly comparable."""
+
+    worker_id: str
+    key: str
+    source: FetchSource
+    donor: str = ""                     # PEER decisions: the chosen donor
+    t: float = 0.0
 
 
 @dataclass
@@ -96,6 +121,8 @@ class Action:
     disk_resident: Tuple[bool, ...] = ()      # per-recipe disk residency
     host_resident: Tuple[bool, ...] = ()      # per-recipe host-RAM residency
     device_resident: Tuple[bool, ...] = ()    # per-recipe HBM residency
+    source: Optional[FetchSource] = None      # fetch: ladder rung chosen
+    donor: str = ""                           # fetch: PEER donor worker id
 
 
 @dataclass
@@ -112,11 +139,24 @@ class ContextAwareScheduler:
     def __init__(self, mode: ContextMode = ContextMode.FULL,
                  planner: Optional[TransferPlanner] = None,
                  straggler_factor: float = 0.0,
-                 max_attempts: int = 100):
+                 max_attempts: int = 100,
+                 p2p: bool = True,
+                 donor_wait: bool = False):
         self.mode = mode
         self.planner = planner or TransferPlanner()
         self.straggler_factor = straggler_factor
         self.max_attempts = max_attempts
+        self.p2p = p2p                  # False: FS-only bootstrap (bench)
+        # donor_wait: when every donor is fanout-saturated, hold the fetch
+        # until a transfer completes instead of falling back to the shared
+        # FS — the paper's admission-controlled join storm. Only engaged
+        # while another fetch is in flight (its completion re-drives
+        # dispatch), so a wait can never stall the runtime.
+        self.donor_wait = donor_wait
+        # node SnapshotPool residency oracle (key -> Tier or None),
+        # installed by the backend: the POOL/DISK rungs of the ladder
+        self.pool_tier: Optional[Callable[[str], Optional[Tier]]] = None
+        self.fetch_log: List[FetchDecision] = []
 
         self.queue: Deque[Task] = collections.deque()
         self.tasks: Dict[str, Task] = {}
@@ -189,8 +229,14 @@ class ContextAwareScheduler:
                 # admission refused (pinned-full tier): remember the key so
                 # prefetch doesn't re-fire forever at this worker
                 info.fetch_blocked.add(ctx_key)
+        elif info.fetching_recipe is not None:
+            # fetch FAILED (builder raised / transfer aborted): block the
+            # key at this worker so the next dispatch cold-starts instead
+            # of re-fetching forever
+            info.fetch_blocked.add(info.fetching_recipe.key())
         info.fetching_key = None
         info.fetching_recipe = None
+        info.fetching_source = None
         info.current = None
         return self.dispatch(t)
 
@@ -220,6 +266,22 @@ class ContextAwareScheduler:
             actions += self._cancel_other_copies(primary, task_id)
         return actions + self.dispatch(t)
 
+    # ------------------------------------------------- profile-aware rank --
+    @staticmethod
+    def _compute_rank(w: WorkerInfo):
+        """Sort key: fastest accelerator first (warm/cold execution),
+        deterministic tie-break on worker id. Workers without a profile
+        rank behind profiled ones with nonzero compute."""
+        return (-float(getattr(w.profile, "fp16_tflops", 0.0) or 0.0),
+                w.worker_id)
+
+    @staticmethod
+    def _restore_rank(w: WorkerInfo):
+        """Sort key for snapshot-promotion placement: restore cost is one
+        host->HBM transfer, so the widest PCIe link wins."""
+        return (-float(getattr(w.profile, "pcie_gbps", 0.0) or 0.0),
+                w.worker_id)
+
     # ----------------------------------------------------------- dispatch --
     def dispatch(self, t: float) -> List[Action]:
         actions: List[Action] = []
@@ -227,12 +289,14 @@ class ContextAwareScheduler:
                 if w.phase == WorkerPhase.IDLE]
         # 1) warm-affinity placement — a worker is warm for a task iff ALL
         #    its contexts are device-resident; contextless tasks (no
-        #    recipes) are vacuously warm anywhere.
+        #    recipes) are vacuously warm anywhere. Same-rung candidates are
+        #    ranked by DeviceProfile (heterogeneity-aware placement).
         while self.queue and idle:
             task = self.queue[0]
             keys = task.keys()
-            warm = [w for w in idle
-                    if all(w.store.has(k, Tier.DEVICE) for k in keys)]
+            warm = sorted((w for w in idle
+                           if all(w.store.has(k, Tier.DEVICE)
+                                  for k in keys)), key=self._compute_rank)
             target = None
             warm_start = False
             if warm:
@@ -241,13 +305,30 @@ class ContextAwareScheduler:
                 # restore ladder: HOST_RAM (snapshot promotion, one H2D
                 # transfer) beats LOCAL_DISK (unspill + load) beats a cold
                 # worker (full transfer + build + compile)
-                host = [w for w in idle
-                        if all(w.store.has(k, Tier.HOST_RAM)
-                               for k in keys)]
-                disk = host or [w for w in idle
-                                if all(w.store.has(k, Tier.LOCAL_DISK)
-                                       for k in keys)]
-                target = disk[0] if disk else idle[0]
+                host = sorted((w for w in idle
+                               if all(w.store.has(k, Tier.HOST_RAM)
+                                      for k in keys)),
+                              key=self._restore_rank)
+                disk = host or sorted(
+                    (w for w in idle
+                     if all(w.store.has(k, Tier.LOCAL_DISK)
+                            for k in keys)), key=self._restore_rank)
+                if disk:
+                    target = disk[0]
+                else:
+                    # every idle candidate is COLD. In full-context mode,
+                    # bootstrap the context onto a cold worker down the
+                    # FetchSource ladder (fetch first, start warm) when a
+                    # cheap source exists, instead of cold-building on the
+                    # task critical path.
+                    verdict = (self._bootstrap_cold(task, idle, t, actions)
+                               if self.mode == ContextMode.FULL and keys
+                               else "start")
+                    if verdict == "fetch":
+                        continue          # idle shrank; task stays queued
+                    if verdict == "wait":
+                        break             # a completion will re-drive us
+                    target = sorted(idle, key=self._compute_rank)[0]
             self.queue.popleft()
             idle.remove(target)
             actions.append(self._start(task, target, t, warm_start))
@@ -271,12 +352,42 @@ class ContextAwareScheduler:
                 if not cands:
                     continue
                 w = cands[0]
+                act = self._fetch(recipe, w, t)
+                if act is None:
+                    continue              # donor-wait: retry next dispatch
                 free.remove(w)
-                actions.append(self._fetch(recipe, w, t))
+                actions.append(act)
         # 3) straggler duplication
         if self.straggler_factor and not self.queue:
             actions += self._duplicate_stragglers(t)
         return actions
+
+    def _bootstrap_cold(self, task: Task, idle: List[WorkerInfo], t: float,
+                        actions: List[Action]) -> str:
+        """Try to bootstrap the head task's first missing context onto a
+        cold idle worker instead of cold-starting the task. Returns
+        "fetch" (fetch issued, worker consumed from ``idle``), "wait"
+        (donors saturated, hold the queue for a completing transfer) or
+        "start" (no cheap source — cold-start as before)."""
+        for w in sorted(idle, key=self._compute_rank):
+            # bootstrap the first context THIS candidate is missing
+            recipe = next((r for r in task.recipes
+                           if not w.store.has(r.key(), Tier.DEVICE)
+                           and r.key() not in w.fetch_blocked), None)
+            if recipe is None:
+                continue
+            source, _, wait = self._choose_source(recipe, w, t, commit=False)
+            if wait:
+                return "wait"
+            if source in (FetchSource.PEER, FetchSource.POOL,
+                          FetchSource.DISK):
+                act = self._fetch(recipe, w, t)
+                if act is not None:
+                    idle.remove(w)
+                    actions.append(act)
+                    return "fetch"
+            break       # cheapest candidate says FS/BUILD: cold-start
+        return "start"
 
     def _start(self, task: Task, w: WorkerInfo, t: float, warm: bool
                ) -> Action:
@@ -311,19 +422,91 @@ class ContextAwareScheduler:
                       host_resident=host_resident,
                       device_resident=device_resident)
 
+    def _donors_for(self, key: str, exclude: str) -> Set[str]:
+        """Workers that can serve the context template peer-to-peer: any
+        worker (other than the receiver) holding it DEVICE-resident and
+        not itself mid-fetch. DEVICE, not LOCAL_DISK: a worker that
+        demoted the context into the node pool still shows lower-tier
+        residency but no longer holds a materialized copy to export —
+        routing a receiver at it would always degrade to the builder."""
+        return {wid for wid, info in self.workers.items()
+                if wid != exclude
+                and info.phase != WorkerPhase.FETCHING
+                and info.store.has(key, Tier.DEVICE)}
+
+    def _pool_claimed(self, key: str) -> bool:
+        """True while an in-flight fetch is already promoting this key out
+        of the node pool — pool snapshots are single-owner, so a second
+        POOL fetch for the same key would race it and cold-build."""
+        return any(info.fetching_key == key
+                   and info.fetching_source in (FetchSource.POOL,
+                                                FetchSource.DISK)
+                   for info in self.workers.values())
+
+    def _choose_source(self, recipe: ContextRecipe, w: WorkerInfo, t: float,
+                       commit: bool = True
+                       ) -> Tuple[Optional[FetchSource],
+                                  Optional[TransferPlan], bool]:
+        """Walk the FetchSource ladder (PEER > POOL > DISK > FS > BUILD)
+        for bootstrapping ``recipe`` onto ``w``. Returns (source, plan,
+        wait). ``wait=True`` means every donor is fanout-saturated and the
+        policy holds the fetch for a completing transfer (donor_wait).
+        With ``commit=False`` nothing is registered with the planner —
+        a dry decision for placement; re-invoke with ``commit=True`` (via
+        ``_fetch``) to actually reserve the flow."""
+        key = recipe.key()
+        allow_p2p = self.p2p and self.mode != ContextMode.AGNOSTIC
+        if allow_p2p:
+            donors = self._donors_for(key, w.worker_id)
+            if donors:
+                if commit:
+                    plan = self.planner.peer_plan(recipe.transfer_bytes,
+                                                  donors, t)
+                    if plan is not None:
+                        return FetchSource.PEER, plan, False
+                elif self.planner.available_donors(donors, t):
+                    return FetchSource.PEER, None, False
+                if self.donor_wait and any(
+                        info.phase == WorkerPhase.FETCHING
+                        for info in self.workers.values()):
+                    # saturated, but a transfer is in flight whose
+                    # completion re-drives dispatch: queue behind it
+                    return None, None, True
+        pool_tier = self.pool_tier(key) if self.pool_tier is not None \
+            else None
+        if pool_tier is not None and not self._pool_claimed(key):
+            from_disk = Tier(pool_tier) == Tier.LOCAL_DISK
+            plan = self.planner.pool_plan(
+                recipe.host_bytes, t, from_disk=from_disk,
+                h2d_bytes_per_s=(getattr(w.profile, "pcie_gbps", 0) or 0)
+                * (1024 ** 3) or None) if commit else None
+            return (FetchSource.DISK if from_disk else FetchSource.POOL,
+                    plan, False)
+        if recipe.transfer_bytes > 0:
+            plan = self.planner.fs_plan(recipe.transfer_bytes, t) \
+                if commit else None
+            return FetchSource.FS, plan, False
+        return FetchSource.BUILD, None, False
+
     def _fetch(self, recipe: ContextRecipe, w: WorkerInfo, t: float
-               ) -> Action:
-        donors = {wid for wid, info in self.workers.items()
-                  if wid != w.worker_id
-                  and info.store.has(recipe.key(), Tier.LOCAL_DISK)}
-        plan = self.planner.plan(recipe.transfer_bytes, donors, t,
-                                 allow_p2p=self.mode != ContextMode.AGNOSTIC)
+               ) -> Optional[Action]:
+        """Issue a bootstrap fetch for ``recipe`` on ``w`` down the
+        FetchSource ladder; None when the policy decides to wait for a
+        donor slot. The decision is appended to ``fetch_log``."""
+        source, plan, wait = self._choose_source(recipe, w, t, commit=True)
+        if wait:
+            return None
+        donor = plan.source if (plan is not None and plan.p2p) else ""
+        self.fetch_log.append(FetchDecision(
+            worker_id=w.worker_id, key=recipe.key(), source=source,
+            donor=donor, t=t))
         w.phase = WorkerPhase.FETCHING
         w.fetching_key = recipe.key()
         w.fetching_recipe = recipe
+        w.fetching_source = source
         w.current = None
         return Action(kind="fetch", worker_id=w.worker_id, task_id="",
-                      plan=plan, recipe=recipe)
+                      plan=plan, recipe=recipe, source=source, donor=donor)
 
     def _pending_context_demand(self) -> List[ContextRecipe]:
         # scan a bounded prefix: queues can hold 100k+ tasks and demand is
@@ -409,6 +592,17 @@ class ContextAwareScheduler:
         return actions
 
     # ------------------------------------------------------------- status --
+    def fetch_history(self, recipe: Optional[ContextRecipe] = None
+                      ) -> List[FetchDecision]:
+        """The FetchSource-ladder decisions issued so far, optionally
+        filtered to one recipe. Backends expose this under their own
+        locking."""
+        log = list(self.fetch_log)
+        if recipe is not None:
+            key = recipe.key()
+            log = [d for d in log if d.key == key]
+        return log
+
     @property
     def outstanding(self) -> int:
         return len(self.queue) + len(self.running)

@@ -13,23 +13,32 @@ Residency state machine of one context on one worker::
 
                  fetch/build                 task start
     SHARED_FS ---------------> LOCAL_DISK ---------------> DEVICE
-        ^                        |    ^                      |
-        |        drop(force)     |    |   promote (restore   |
-        +------------------------+    |   from snapshot,     |
-                                      |   zero compiles)     |
-                                      |                      v
-                                      +----- HOST_RAM <------+
-                                         demote (jax.device_get
-                                         snapshot of params +
-                                         engine state); HOST_RAM
-                                         spills to LOCAL_DISK via
-                                         checkpoint/io when the
-                                         pool is over capacity
+        ^                        |    ^                      |  ^
+        |        drop(force)     |    |   promote (restore   |  | PEER
+        +------------------------+    |   from snapshot,     |  | transfer
+                                      |   zero compiles)     |  | (donor
+                                      |                      v  | export ->
+                                      +----- HOST_RAM <------+  | receiver
+                                         demote (jax.device_get | restore;
+                                         snapshot of params +   | donor
+                                         engine state); HOST_RAM| keeps its
+                                         spills to LOCAL_DISK   | DEVICE
+                                         via checkpoint/io when | copy)
+                                         the pool is over       |
+                                         capacity      [warm peer worker]
 
 DEVICE->HOST_RAM demotion and HOST_RAM->LOCAL_DISK spill are PHYSICAL in
 the live runtime: the bytes move (see :class:`SnapshotPool` and
 ``repro.core.context.ContextSnapshot``), and promotion restores the
 materialized context without re-running the builder or recompiling.
+
+The PEER edge is the join-storm bootstrap path (paper §4.1): a cold
+worker reaches DEVICE directly from a warm peer's exported template
+(``repro.core.context.export_context`` — non-destructive, the donor keeps
+serving) instead of through the shared filesystem. Source selection walks
+the FetchSource ladder PEER > POOL > DISK > FS > BUILD (see
+``repro.core.transfer``), with per-donor fanout admission in the
+TransferPlanner gating concurrent peer flows.
 
 :class:`ContextStore` is the bookkeeping half (which keys are resident at
 which tier, capacity-bounded with LRU eviction per tier); eviction from a

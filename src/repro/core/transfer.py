@@ -1,4 +1,5 @@
-"""Context bootstrap planner: shared filesystem vs peer-to-peer transfer.
+"""Context bootstrap planning: the FetchSource ladder, bandwidth-aware
+admission, and measured-transfer calibration.
 
 The paper's insight (§1, §4.1): when many opportunistic workers arrive at
 once, cold-starting them all from the shared filesystem saturates it (the
@@ -9,11 +10,40 @@ bandwidth scales with the number of warm donors.
 On the TPU adaptation, "P2P" is a device-to-device weight broadcast along
 the ICI/DCN fabric (`jax.device_put` donor->slice / collective along the
 pod axis) — same planning math, different wires.
+
+The FetchSource ladder
+----------------------
+Every context acquisition — live or simulated — is one of five sources,
+ordered from cheapest to most expensive for a cold joiner::
+
+    PEER   donor->receiver snapshot transfer from a warm worker that holds
+           the materialized context (template export; the donor keeps
+           serving). Gated by per-donor fanout + bandwidth admission.
+    POOL   promotion of a HOST_RAM snapshot from the node SnapshotPool
+           (one host->HBM transfer; the snapshot is consumed).
+    DISK   promotion of a LOCAL_DISK spill (npz read + host->HBM).
+    FS     cold fetch of the artifact + env from the shared filesystem
+           (modeled bandwidth in simulation; in-process the builder's own
+           load path plays this role).
+    BUILD  pure construction — nothing to transfer (zero-byte recipes).
+
+The :class:`~repro.core.scheduler.ContextAwareScheduler` owns the ladder
+POLICY (``_choose_source``); this module owns the timing/admission MATH.
+Both execution backends (live PCMManager, discrete-event simulator) speak
+the same vocabulary, which is what lets one policy object drive both.
+
+Live flows report their **measured** duration back through
+:meth:`TransferPlanner.complete`, which (a) prunes the modeled flow the
+moment the real transfer finishes — without this, long-lived modeled flows
+make donors look saturated and the shared FS look contended for the whole
+modeled duration, under-reporting the bandwidth actually available — and
+(b) feeds an EWMA calibration of the per-path bandwidth so subsequent
+plans use observed rates.
 """
 
 from __future__ import annotations
 
-import time
+import enum
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -22,12 +52,27 @@ from repro.core.context import GB
 GBPS = GB  # bytes/second per "gigabyte-per-second" unit
 
 
+class FetchSource(enum.Enum):
+    """Where a context acquisition comes from (see module docstring)."""
+
+    PEER = "peer"
+    POOL = "pool"
+    DISK = "disk"
+    FS = "fs"
+    BUILD = "build"
+
+
 @dataclass
 class TransferPlan:
-    source: str                 # "shared_fs" or donor worker id
+    source: str                 # "shared_fs", "pool", "disk" or donor id
     seconds: float
     nbytes: int
     p2p: bool
+    fetch_source: FetchSource = FetchSource.FS
+
+    def __post_init__(self):
+        if self.p2p:
+            self.fetch_source = FetchSource.PEER
 
 
 @dataclass
@@ -41,6 +86,14 @@ class TransferPlanner:
     shared-FS bandwidth is divided among concurrent FS pulls (the paper's
     filesystem bottleneck); each donor sustains ``p2p_bytes_per_s`` and
     serves ``donor_fanout`` concurrent receivers before saturating.
+
+    Flow accounting: every planned transfer registers a flow whose modeled
+    ``done_at`` gates later admission. Flows are pruned on EVERY read path
+    (``plan``/``fs_load``/``donor_load``/``stats``) once ``done_at <= now``,
+    and a live runtime should call :meth:`complete` the moment a transfer
+    actually finishes — measured completions both free the donor/FS slot
+    early and calibrate the planner's bandwidth estimates (EWMA over
+    observed bytes/second).
     """
 
     def __init__(self, fs_bytes_per_s: float = 84 / 8 * GBPS,
@@ -57,9 +110,17 @@ class TransferPlanner:
         self.disk_bytes_per_s = disk_bytes_per_s  # local NVMe read
         self._fs_flows: List[_Flow] = []
         self._donor_flows: Dict[str, List[_Flow]] = {}
+        # measured-bandwidth calibration (EWMA bytes/s per path), fed by
+        # complete(); None until the first live observation
+        self._measured: Dict[str, Optional[float]] = {"p2p": None, "fs": None}
+        self._calibration_alpha = 0.5
+        self.completed_flows = 0
 
     # ------------------------------------------------------------ internal --
     def _gc(self, now: float):
+        """Prune flows whose modeled completion has passed. Called from
+        every read path: a stale flow (done_at <= now) must never count
+        against bandwidth shares or donor fanout."""
         self._fs_flows = [f for f in self._fs_flows if f.done_at > now]
         for d in list(self._donor_flows):
             self._donor_flows[d] = [f for f in self._donor_flows[d]
@@ -67,18 +128,46 @@ class TransferPlanner:
             if not self._donor_flows[d]:
                 del self._donor_flows[d]
 
+    def _p2p_rate(self) -> float:
+        measured = self._measured["p2p"]
+        if measured is not None:
+            return measured
+        return min(self.p2p_bytes_per_s, self.nic_bytes_per_s)
+
+    def _fs_rate(self, concurrent: int) -> float:
+        measured = self._measured["fs"]
+        if measured is not None:
+            return measured / max(1, concurrent)
+        return min(self.nic_bytes_per_s, self.fs_bytes_per_s / concurrent)
+
     def _fs_seconds(self, nbytes: int, now: float) -> float:
         concurrent = len(self._fs_flows) + 1
-        rate = min(self.nic_bytes_per_s, self.fs_bytes_per_s / concurrent)
-        return nbytes / rate
+        return nbytes / self._fs_rate(concurrent)
 
     def _donor_seconds(self, donor: str, nbytes: int) -> Optional[float]:
         flows = self._donor_flows.get(donor, [])
         if len(flows) >= self.donor_fanout:
             return None
-        return nbytes / min(self.p2p_bytes_per_s, self.nic_bytes_per_s)
+        return nbytes / self._p2p_rate()
 
     # -------------------------------------------------------------- public --
+    def fs_load(self, now: float) -> int:
+        """Concurrent shared-FS pulls still in flight at ``now``."""
+        self._gc(now)
+        return len(self._fs_flows)
+
+    def donor_load(self, donor: str, now: float) -> int:
+        """Concurrent receivers this donor is serving at ``now``."""
+        self._gc(now)
+        return len(self._donor_flows.get(donor, []))
+
+    def available_donors(self, donors: Set[str], now: float) -> List[str]:
+        """The donors with a free fanout slot at ``now`` (sorted for
+        determinism). Admission gate for the scheduler's PEER rung."""
+        self._gc(now)
+        return [d for d in sorted(donors)
+                if len(self._donor_flows.get(d, [])) < self.donor_fanout]
+
     def plan(self, nbytes: int, donors: Set[str], now: float,
              allow_p2p: bool = True,
              fs_nbytes: Optional[int] = None) -> TransferPlan:
@@ -95,13 +184,77 @@ class TransferPlanner:
                 if sec is not None and sec < best[0]:
                     best = (sec, d, True)
         seconds, source, p2p = best
-        flow = _Flow(done_at=now + seconds)
-        if p2p:
-            self._donor_flows.setdefault(source, []).append(flow)
+        return self._register(TransferPlan(source=source, seconds=seconds,
+                                           nbytes=nbytes, p2p=p2p), now)
+
+    def peer_plan(self, nbytes: int, donors: Set[str], now: float
+                  ) -> Optional[TransferPlan]:
+        """Plan a P2P transfer from the best available donor, or None when
+        every donor is fanout-saturated (the scheduler then either waits
+        for a slot or falls down the ladder)."""
+        for d in self.available_donors(donors, now):
+            sec = self._donor_seconds(d, nbytes)
+            if sec is not None:
+                return self._register(
+                    TransferPlan(source=d, seconds=sec, nbytes=nbytes,
+                                 p2p=True), now)
+        return None
+
+    def fs_plan(self, nbytes: int, now: float,
+                fs_nbytes: Optional[int] = None) -> TransferPlan:
+        """Plan a shared-FS fetch at the current contention level."""
+        self._gc(now)
+        eff = fs_nbytes if fs_nbytes is not None else nbytes
+        return self._register(
+            TransferPlan(source="shared_fs",
+                         seconds=self._fs_seconds(eff, now),
+                         nbytes=nbytes, p2p=False), now)
+
+    def pool_plan(self, nbytes: int, now: float,
+                  from_disk: bool = False,
+                  h2d_bytes_per_s: Optional[float] = None) -> TransferPlan:
+        """Plan a snapshot promotion from the node pool (POOL/DISK rungs).
+        Node-local PCIe/NVMe bandwidth — no shared-fabric flow to track."""
+        plan = TransferPlan(
+            source="disk" if from_disk else "pool",
+            seconds=self.restore_seconds(nbytes, from_disk=from_disk,
+                                         h2d_bytes_per_s=h2d_bytes_per_s),
+            nbytes=nbytes, p2p=False,
+            fetch_source=FetchSource.DISK if from_disk else FetchSource.POOL)
+        return plan
+
+    def _register(self, plan: TransferPlan, now: float) -> TransferPlan:
+        flow = _Flow(done_at=now + plan.seconds)
+        plan._flow = flow
+        if plan.p2p:
+            self._donor_flows.setdefault(plan.source, []).append(flow)
         else:
             self._fs_flows.append(flow)
-        return TransferPlan(source=source, seconds=seconds, nbytes=nbytes,
-                            p2p=p2p)
+        return plan
+
+    def complete(self, plan: TransferPlan, now: float,
+                 measured_seconds: Optional[float] = None):
+        """Report a planned transfer finished at ``now`` (live runtimes
+        call this from the receiving worker). Frees the flow immediately —
+        the stale-flow fix: without it a fast real transfer would keep its
+        donor/FS slot occupied for the whole MODELED duration — and, given
+        ``measured_seconds``, folds the observed bytes/second into the
+        planner's EWMA calibration."""
+        flow = getattr(plan, "_flow", None)
+        if flow is not None:
+            # pool_plan promotions are node-local and never registered a
+            # flow: nothing to free, and they must not count as transfers
+            flow.done_at = min(flow.done_at, now)
+            self._gc(now)
+            self.completed_flows += 1
+        if measured_seconds is not None and measured_seconds > 0 \
+                and plan.fetch_source in (FetchSource.PEER, FetchSource.FS):
+            path = "p2p" if plan.p2p else "fs"
+            rate = plan.nbytes / measured_seconds
+            prev = self._measured[path]
+            a = self._calibration_alpha
+            self._measured[path] = rate if prev is None \
+                else a * rate + (1 - a) * prev
 
     def restore_seconds(self, nbytes: int, from_disk: bool = False,
                         h2d_bytes_per_s: Optional[float] = None) -> float:
@@ -117,7 +270,15 @@ class TransferPlanner:
             t += nbytes / self.disk_bytes_per_s
         return t
 
-    def stats(self) -> Dict:
+    def calibration(self) -> Dict:
+        """Observed bytes/s per path (None until live feedback arrives)."""
+        return dict(self._measured)
+
+    def stats(self, now: Optional[float] = None) -> Dict:
+        if now is not None:
+            self._gc(now)
         return {"fs_active": len(self._fs_flows),
                 "donors_active": {k: len(v)
-                                  for k, v in self._donor_flows.items()}}
+                                  for k, v in self._donor_flows.items()},
+                "completed_flows": self.completed_flows,
+                "measured_bytes_per_s": dict(self._measured)}

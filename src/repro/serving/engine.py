@@ -416,6 +416,51 @@ class InferenceEngine:
                 "engine device state is offloaded (context demoted to "
                 "HOST_RAM/LOCAL_DISK) — restore the context before use")
 
+    # ------------------------------------------- P2P template transfer -----
+    def export_template(self) -> Dict:
+        """Donor side of a peer-to-peer context bootstrap: a host copy of
+        the weights plus a PRISTINE per-slot decode state (as a freshly
+        built engine would have), WITHOUT detaching anything from this
+        engine — the donor keeps serving. Pairs with ``clone_offloaded``:
+        restore the template into the clone on the receiving worker and it
+        decodes bit-identically to a cold-built engine, with zero builder
+        calls and zero XLA compiles (the executables ride on the clone)."""
+        self._require_resident()
+        host = jax.device_get({name: getattr(self, name)
+                               for name in self._DEVICE_STATE_FIELDS})
+        # scrub the donor's in-flight decode state: the template ships an
+        # EMPTY engine (all slots free), not the donor's live requests
+        host["cache"] = jax.tree_util.tree_map(np.zeros_like, host["cache"])
+        for name in ("lengths", "last_tokens", "temps", "gen_counts",
+                     "max_news"):
+            host[name] = np.zeros_like(host[name])
+        host["active_mask"] = np.zeros_like(host["active_mask"])
+        host["stop_table"] = np.full_like(host["stop_table"], NO_TOKEN)
+        return host
+
+    def clone_offloaded(self) -> "InferenceEngine":
+        """A structural twin of this engine for a P2P receiver: same
+        model/config, SHARING the AOT-compiled executables in-process (the
+        transferred 'template' — this is what makes the receiver's
+        bootstrap compile-free), with fresh empty queues/stats and NO
+        device state (``offloaded`` until ``restore_device_state`` pushes
+        an exported template in)."""
+        import copy
+        clone = copy.copy(self)
+        # own executable-cache dicts (same executable objects): a later
+        # compile on either engine must not mutate the other's cache
+        clone._exe = dict(self._exe)
+        clone._megastep_jits = dict(self._megastep_jits)
+        clone.queue = collections.deque()
+        clone.active = {}
+        clone.free_slots = collections.deque(range(self.slots))
+        clone._host_lengths = np.zeros_like(self._host_lengths)
+        clone.stats = EngineStats()
+        clone.compile_seconds = 0.0
+        for name in self._DEVICE_STATE_FIELDS:
+            setattr(clone, name, None)
+        return clone
+
     def warm_executables(self) -> float:
         """AOT-compile the megastep (every decode bucket) + every
         prefill-bucket executable.

@@ -1,0 +1,497 @@
+"""Elastic opportunistic runtime: FetchSource ladder, peer-to-peer context
+bootstrap, trace-driven worker factory, and the live/sim policy-parity
+contract."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (ContextAwareScheduler, ContextMode, ContextRecipe,
+                        ElasticRunner, FetchSource, PCMClient, PCMManager,
+                        SimulatorBackend, Task, Tier, TransferPlanner,
+                        export_context, load_context, make_recipe,
+                        materialize)
+from repro.core.context import GB, PeerExportError
+
+
+# ------------------------------------------------- planner flow accounting --
+class TestPlannerFlows:
+    NB = 10 * GB
+
+    def test_stale_flows_pruned_on_every_read_path(self):
+        """Regression: a flow whose modeled completion has passed must not
+        count against bandwidth shares or donor fanout — on ANY read path,
+        not just plan()."""
+        p = TransferPlanner(donor_fanout=1)
+        plan = p.peer_plan(self.NB, {"d0"}, now=0.0)
+        assert plan is not None and plan.p2p
+        # saturated while the flow is modeled in flight
+        assert p.peer_plan(self.NB, {"d0"}, now=plan.seconds / 2) is None
+        assert p.donor_load("d0", now=plan.seconds / 2) == 1
+        # once the modeled completion passes, every read path prunes it
+        later = plan.seconds + 1.0
+        assert p.donor_load("d0", now=later) == 0
+        assert p.stats(now=later)["donors_active"] == {}
+        assert p.peer_plan(self.NB, {"d0"}, now=later) is not None
+
+    def test_fs_share_recovers_after_flows_complete(self):
+        # wide per-node NICs so the AGGREGATE filesystem bandwidth is the
+        # binding constraint (the paper's Panasas bottleneck)
+        p = TransferPlanner(nic_bytes_per_s=1000 * GB)
+        solo = p.fs_plan(self.NB, now=0.0).seconds
+        contended = p.fs_plan(self.NB, now=0.0).seconds
+        assert contended > solo          # second flow sees the shared pipe
+        # far past both completions the share is back to full bandwidth
+        assert p.fs_plan(self.NB, now=1e6).seconds == pytest.approx(solo)
+
+    def test_measured_completion_frees_donor_early(self):
+        """The live runtime's fix: a real transfer that finishes in
+        milliseconds must free its donor slot immediately, not after the
+        multi-second MODELED duration."""
+        p = TransferPlanner(donor_fanout=1)
+        plan = p.peer_plan(self.NB, {"d0"}, now=0.0)
+        assert plan.seconds > 1.0        # modeled: seconds of wire time
+        assert p.peer_plan(self.NB, {"d0"}, now=0.01) is None
+        p.complete(plan, now=0.01, measured_seconds=0.01)
+        assert p.peer_plan(self.NB, {"d0"}, now=0.02) is not None
+        assert p.stats()["completed_flows"] == 1
+
+    def test_measured_seconds_calibrate_bandwidth(self):
+        p = TransferPlanner(donor_fanout=4)
+        modeled = p.peer_plan(self.NB, {"d0"}, now=0.0)
+        p.complete(modeled, now=0.5, measured_seconds=0.5)
+        cal = p.calibration()["p2p"]
+        assert cal == pytest.approx(self.NB / 0.5)
+        fast = p.peer_plan(self.NB, {"d0"}, now=1.0)
+        assert fast.seconds == pytest.approx(0.5)   # plans at observed rate
+
+    def test_donor_fanout_saturation_8_receivers_2_donors(self):
+        """Admission under a join storm: 2 donors x fanout 2 admit exactly
+        4 concurrent peer flows; receivers 5..8 are refused until a slot
+        frees."""
+        p = TransferPlanner(donor_fanout=2)
+        donors = {"d0", "d1"}
+        plans = [p.peer_plan(self.NB, donors, now=0.0) for _ in range(8)]
+        admitted = [pl for pl in plans if pl is not None]
+        assert len(admitted) == 4
+        assert sorted(pl.source for pl in admitted) == ["d0", "d0",
+                                                        "d1", "d1"]
+        assert p.peer_plan(self.NB, donors, now=0.0) is None
+        p.complete(admitted[0], now=0.05, measured_seconds=0.05)
+        again = p.peer_plan(self.NB, donors, now=0.1)
+        assert again is not None and again.source == "d0"
+
+
+# ------------------------------------------------------------ trace shapes --
+class TestTraces:
+    def test_rq3_monotone_depletion_a10_first(self):
+        from repro.cluster import traces
+        cap = traces.rq3_aggressive_preemption(start_at=100.0, period=10.0)
+        sizes = [len(cap(t)) for t in range(0, 400, 5)]
+        assert sizes[0] == 20
+        assert all(a >= b for a, b in zip(sizes, sizes[1:]))   # monotone
+        assert sizes[-1] == 0                                  # depletes
+        mid = cap(100.0 + 10.0 * 4.5)                          # 5 lost
+        assert mid.count("a10") == 5                           # A10s first
+        assert mid.count("titan-x-pascal") == 10
+
+    def test_rq3_floor_and_custom_pool(self):
+        from repro.cluster import traces
+        pool = ["a10", "a10", "titan-x-pascal"]
+        cap = traces.rq3_aggressive_preemption(start_at=1.0, period=1.0,
+                                               pool=pool, floor=1)
+        assert cap(0.0) == pool
+        assert len(cap(1e6)) == 1                              # never empty
+        assert cap(1e6) == ["titan-x-pascal"]                  # A10s lost
+
+    def test_rq4_ramp_bounds(self):
+        from repro.cluster import traces
+        cap = traces.rq4_low_capacity(ramp_every=100.0, start=4, cap=20)
+        sizes = [len(cap(t)) for t in range(0, 3000, 50)]
+        assert sizes[0] == 4
+        assert all(a <= b for a, b in zip(sizes, sizes[1:]))   # monotone up
+        assert max(sizes) == 20 and sizes[-1] == 20            # capped
+
+    def test_traces_deterministic(self):
+        from repro.cluster import traces
+        for mk in (traces.rq3_aggressive_preemption, traces.rq4_low_capacity,
+                   traces.rq4_high_capacity, traces.churn):
+            a, b = mk(), mk()
+            for t in (0.0, 123.4, 999.9, 5000.0):
+                assert a(t) == b(t)
+
+
+# ----------------------------------------------------- ladder policy unit --
+class TestFetchLadder:
+    R = ContextRecipe(name="ladder")
+
+    def _sched(self, **kw):
+        s = ContextAwareScheduler(mode=ContextMode.FULL, **kw)
+        return s
+
+    def test_peer_beats_pool_beats_fs(self):
+        s = self._sched()
+        s.on_worker_join("donor", 0.0)
+        s.workers["donor"].store.admit_recipe(self.R, Tier.DEVICE)
+        s.on_worker_join("cold", 0.0)
+        src, plan, wait = s._choose_source(self.R, s.workers["cold"], 1.0)
+        assert src == FetchSource.PEER and plan.source == "donor"
+        # no donor, pool snapshot -> POOL
+        s2 = self._sched()
+        s2.pool_tier = {self.R.key(): Tier.HOST_RAM}.get
+        s2.on_worker_join("cold", 0.0)
+        src, plan, _ = s2._choose_source(self.R, s2.workers["cold"], 1.0)
+        assert src == FetchSource.POOL
+        assert plan.fetch_source == FetchSource.POOL
+        # spilled pool snapshot -> DISK
+        s2.pool_tier = {self.R.key(): Tier.LOCAL_DISK}.get
+        src, plan, _ = s2._choose_source(self.R, s2.workers["cold"], 1.0)
+        assert src == FetchSource.DISK
+        # nothing anywhere -> FS (nonzero transfer bytes)
+        s3 = self._sched()
+        s3.on_worker_join("cold", 0.0)
+        src, _, _ = s3._choose_source(self.R, s3.workers["cold"], 1.0)
+        assert src == FetchSource.FS
+
+    def test_zero_byte_recipe_is_build(self):
+        r = ContextRecipe(name="tiny", artifact_bytes=0, env_bytes=0)
+        s = self._sched()
+        s.on_worker_join("cold", 0.0)
+        src, plan, _ = s._choose_source(r, s.workers["cold"], 1.0)
+        assert src == FetchSource.BUILD and plan is None
+
+    def test_pool_rung_single_owner_claim(self):
+        """Two cold workers must not both chase the same single-owner pool
+        snapshot: the second decision falls through to FS."""
+        s = self._sched()
+        s.pool_tier = {self.R.key(): Tier.HOST_RAM}.get
+        s.on_worker_join("c1", 0.0)
+        s.on_worker_join("c2", 0.0)
+        act = s._fetch(self.R, s.workers["c1"], 1.0)
+        assert act.source == FetchSource.POOL
+        src, _, _ = s._choose_source(self.R, s.workers["c2"], 1.0)
+        assert src == FetchSource.FS
+
+    def test_demoted_worker_is_not_a_donor(self):
+        """A worker whose context was demoted keeps HOST_RAM/LOCAL_DISK
+        store residency but no materialized copy — it must not be chosen
+        as a PEER donor (the donation could only degrade to the builder);
+        the ladder goes to the pool snapshot instead."""
+        s = self._sched()
+        s.on_worker_join("demoted", 0.0)
+        st = s.workers["demoted"].store
+        st.admit_recipe(self.R, Tier.DEVICE)
+        st.drop(self.R.key(), down_to=Tier.HOST_RAM)   # demotion
+        s.pool_tier = {self.R.key(): Tier.HOST_RAM}.get
+        s.on_worker_join("cold", 0.0)
+        src, _, _ = s._choose_source(self.R, s.workers["cold"], 1.0)
+        assert src == FetchSource.POOL
+
+    def test_p2p_disabled_skips_peer(self):
+        s = self._sched(p2p=False)
+        s.on_worker_join("donor", 0.0)
+        s.workers["donor"].store.admit_recipe(self.R, Tier.DEVICE)
+        s.on_worker_join("cold", 0.0)
+        src, _, _ = s._choose_source(self.R, s.workers["cold"], 1.0)
+        assert src == FetchSource.FS
+
+    def test_profile_aware_warm_placement(self):
+        """Among equally-warm idle workers the fastest profile wins."""
+        from repro.cluster.devices import PROFILES
+        s = self._sched()
+        s.on_worker_join("slow", 0.0, profile=PROFILES["titan-x-pascal"])
+        s.on_worker_join("fast", 0.0, profile=PROFILES["a10"])
+        for w in s.workers.values():
+            w.store.admit_recipe(self.R, Tier.DEVICE)
+        acts = s.submit(Task(task_id="t0", recipe=self.R), 1.0)
+        starts = [a for a in acts if a.kind == "start"]
+        assert starts[0].worker_id == "fast"
+
+
+# ------------------------------------------------------- peer export unit --
+class CloneableEngine:
+    """Minimal peer-transferable component (the InferenceEngine duck-type:
+    offload/restore + export_template/clone_offloaded)."""
+
+    def __init__(self, n=256):
+        self.weights = np.arange(n, dtype=np.float64)
+        self.exe_cache = {"megastep": object()}
+
+    def offload_device_state(self):
+        state = {"weights": self.weights}
+        self.weights = None
+        return state
+
+    def restore_device_state(self, host_state):
+        self.weights = host_state["weights"]
+
+    def export_template(self):
+        return {"weights": np.array(self.weights)}
+
+    def clone_offloaded(self):
+        import copy
+        clone = copy.copy(self)
+        clone.exe_cache = dict(self.exe_cache)
+        clone.weights = None
+        return clone
+
+
+class StatefulButNotTransferable:
+    def offload_device_state(self):
+        return {}
+
+    def restore_device_state(self, host_state):
+        pass
+
+
+class TestPeerExport:
+    def test_export_is_non_destructive_and_restores_identically(self):
+        from repro.core import restore_context
+        rec = make_recipe("pe", CloneableEngine, host_bytes=0)
+        ctx = materialize(rec, "donor")
+        donor_engine = ctx.value
+        snap = export_context(ctx)
+        # donor untouched and still serving
+        assert donor_engine.weights is not None
+        np.testing.assert_array_equal(donor_engine.weights,
+                                      np.arange(256, dtype=np.float64))
+        # receiver gets a distinct object with identical state + shared exe
+        restored = restore_context(snap, "receiver")
+        recv = restored.value
+        assert recv is not donor_engine
+        np.testing.assert_array_equal(recv.weights, donor_engine.weights)
+        assert recv.exe_cache["megastep"] is donor_engine.exe_cache[
+            "megastep"]
+
+    def test_untransferable_component_raises(self):
+        rec = ContextRecipe(name="nope").with_builder(
+            StatefulButNotTransferable)
+        ctx = materialize(rec, "donor")
+        with pytest.raises(PeerExportError):
+            export_context(ctx)
+
+    def test_plain_values_deepcopied(self):
+        rec = make_recipe("plain", lambda: {"cfg": {"a": 1}, "v": 7})
+        ctx = materialize(rec, "donor")
+        snap = export_context(ctx)
+        assert snap.value == ctx.value
+        assert snap.value["cfg"] is not ctx.value["cfg"]
+
+
+# ----------------------------------------------------------- elastic live --
+class TestElasticRunner:
+    def test_trace_drives_join_and_preempt_with_profiles(self):
+        from repro.cluster.devices import PROFILES
+        state = {"cap": ["a10", "titan-x-pascal"]}
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=0)
+        runner = ElasticRunner(mgr, lambda t: list(state["cap"]),
+                               reconcile_every=1e9)
+        try:
+            runner.step(0.0)
+            assert len(mgr.workers) == 2
+            infos = mgr.scheduler.workers
+            assert sorted(i.profile.name for i in infos.values()) == [
+                "a10", "titan-x-pascal"]
+            # heterogeneous HBM flows into the live store capacity
+            a10_wid = next(w for w, i in infos.items()
+                           if i.profile.name == "a10")
+            assert mgr.workers[a10_wid].store.capacity[Tier.DEVICE] == \
+                int(PROFILES["a10"].hbm_gb * GB)
+            assert mgr.submit(lambda: 7).result(timeout=30) == 7
+            state["cap"] = ["titan-x-pascal"]       # cluster reclaims the a10
+            runner.step(1.0)
+            assert len(mgr.workers) == 1
+            assert runner.preemptions == 1 and runner.joins == 2
+            assert mgr.submit(lambda: 8).result(timeout=30) == 8
+        finally:
+            mgr.shutdown()
+
+    def test_background_thread_reconciles(self):
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=0)
+        runner = ElasticRunner(mgr, lambda t: ["a10"], reconcile_every=0.05,
+                               time_scale=10.0)
+        try:
+            runner.start()
+            deadline = time.monotonic() + 10
+            while not mgr.workers and time.monotonic() < deadline:
+                time.sleep(0.02)
+            assert mgr.workers
+            assert runner.trace_now() > 0
+        finally:
+            runner.stop()
+            mgr.shutdown()
+
+
+class TestLivePeerBootstrap:
+    def test_join_storm_bootstraps_peer_to_peer_zero_builds(self):
+        """8 cold joiners against 2 warm donors: every bootstrap is served
+        peer-to-peer (donor-fanout admission serializes the storm), with
+        ZERO builder calls on joiners and identical task results."""
+        builds = []
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=2,
+                         donor_wait=True)
+        try:
+            rec = make_recipe("storm",
+                              lambda: builds.append(1) or {"v": 13})
+            mgr.warm_up(rec)
+            assert len(builds) == 2                 # donors only
+            futs = [mgr.submit(lambda: load_context("v"), recipe=rec)
+                    for _ in range(30)]
+            for _ in range(8):
+                mgr.add_worker()
+            assert all(f.result(timeout=60) == 13 for f in futs)
+            mgr.run_until_idle(timeout=30)
+            deadline = time.monotonic() + 20
+            while time.monotonic() < deadline:
+                res = mgr.residency(rec)
+                if all(t == Tier.DEVICE for t in res.values()):
+                    break
+                time.sleep(0.05)
+            decisions = mgr.fetch_history(rec)
+            assert len(builds) == 2                 # ZERO joiner builds
+            assert decisions and all(d.source == FetchSource.PEER
+                                     for d in decisions)
+            st = mgr.stats()
+            assert st["peer_installs"] == len(decisions)
+            assert st["transfer"]["completed_flows"] >= len(decisions)
+        finally:
+            mgr.shutdown()
+
+    def test_donor_loss_degrades_down_the_ladder(self):
+        """A donor preempted with a donation queued must not strand the
+        receiver: the transfer degrades to pool/builder and the task still
+        completes."""
+        builds = []
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=1,
+                         donor_wait=True)
+        try:
+            gate = threading.Event()
+
+            def build():
+                builds.append(1)
+                return {"v": 4}
+
+            rec = make_recipe("lost-donor", build)
+            mgr.warm_up(rec)
+            donor = next(iter(mgr.workers))
+            # keep the donor busy so the donation queues behind the task
+            slow = mgr.submit(lambda: gate.wait(10))
+            fut = mgr.submit(lambda: load_context("v"), recipe=rec)
+            mgr.add_worker()
+            time.sleep(0.1)
+            mgr.preempt_worker(donor)
+            gate.set()
+            assert fut.result(timeout=60) == 4
+        finally:
+            gate.set()
+            mgr.shutdown()
+
+    def test_fs_only_mode_builds_instead(self):
+        builds = []
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=1, p2p=False)
+        try:
+            rec = make_recipe("fsonly", lambda: builds.append(1) or {"v": 2})
+            mgr.warm_up(rec)
+            futs = [mgr.submit(lambda: load_context("v"), recipe=rec)
+                    for _ in range(6)]
+            mgr.add_worker()
+            assert all(f.result(timeout=60) == 2 for f in futs)
+            mgr.run_until_idle(timeout=30)
+            assert mgr.stats()["peer_installs"] == 0
+            assert all(d.source != FetchSource.PEER
+                       for d in mgr.fetch_history())
+        finally:
+            mgr.shutdown()
+
+
+# -------------------------------------------------------- policy parity ----
+def _storm_trace(t: float):
+    return ["a10"] * (2 if t < 5.0 else 10)
+
+
+class TestPolicyParity:
+    def test_live_and_sim_fetch_decisions_match(self):
+        """Acceptance: the same scheduler policy (same class, same
+        configuration), driven once by the live elastic runtime and once
+        by the discrete-event simulation of the same trace, produces the
+        same per-worker FetchSource decision sequence."""
+        rec = make_recipe("parity", lambda: {"v": 1})
+
+        # live: factory-named workers, manual trace steps
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=0,
+                         donor_wait=True)
+        try:
+            runner = ElasticRunner(mgr, _storm_trace, reconcile_every=1e9)
+            runner.step(0.0)                      # 2 donors join
+            mgr.warm_up(rec)
+            futs = [mgr.submit(
+                lambda: time.sleep(0.05) or load_context("v"), recipe=rec)
+                for _ in range(32)]
+            runner.step(10.0)                     # storm: 8 joiners
+            assert all(f.result(timeout=120) == 1 for f in futs)
+            mgr.run_until_idle(timeout=60)
+            live = {}
+            for d in mgr.scheduler.fetch_log:
+                live.setdefault(d.worker_id, []).append(d.source)
+        finally:
+            mgr.shutdown()
+
+        # sim: the same policy configuration over the same trace. Modeled
+        # transfers take wire-time seconds (no measured completions), so
+        # tasks carry n_items depth to keep demand alive across both
+        # donor-fanout transfer waves — the live run's 32 real tasks play
+        # the same role against its millisecond transfers.
+        backend = SimulatorBackend(capacity_fn=_storm_trace,
+                                   donor_wait=True, reconcile_every=5.0)
+        client = PCMClient(backend=backend)
+        h = client.context(rec)
+        h.warm_up()
+        futs = [client.submit(lambda x: x, i, context=h, n_items=40)
+                for i in range(32)]
+        for f in futs:
+            f.result()
+        sim = {}
+        for d in backend.scheduler.fetch_log:
+            sim.setdefault(d.worker_id, []).append(d.source)
+
+        assert live == sim
+        assert len(live) == 8                     # every joiner decided once
+        assert all(v == [FetchSource.PEER] for v in live.values())
+
+
+# --------------------------------------------------------- sim node pool ---
+class TestSimNodePool:
+    def test_sim_preemption_demotes_to_modeled_pool(self):
+        backend = SimulatorBackend(n_workers=2, donor_wait=False)
+        client = PCMClient(backend=backend)
+        h = client.context(ContextRecipe(name="np"))
+        h.warm_up()
+        victim = next(iter(backend.scheduler.workers))
+        backend.preempt_worker(victim)
+        assert backend.scheduler.pool_tier(h.recipe.key()) == Tier.HOST_RAM
+        # a later joiner... the surviving warm donor outranks the pool, so
+        # force the pool rung by preempting the other warm worker too
+        for wid in list(backend.scheduler.workers):
+            backend.preempt_worker(wid)
+        backend.add_worker()
+        res = client.submit(lambda: None, context=h).result()
+        assert res is not None
+        assert backend.stats()["pool_restores"] >= 1
+        # promotion consumed the single-owner snapshot
+        assert backend.scheduler.pool_tier(h.recipe.key()) is None
+
+    def test_host_resident_start_consumes_modeled_pool(self):
+        """A start on a host-resident worker is a snapshot promotion: it
+        must consume the modeled pool entry (as the live Library.ensure
+        takes the SnapshotPool copy), so a later joiner's ladder does not
+        chase a snapshot the runtime no longer has."""
+        backend = SimulatorBackend(n_workers=1)
+        client = PCMClient(backend=backend)
+        h = client.context(ContextRecipe(name="hp"))
+        h.warm_up()
+        backend.demote_context(h.recipe, Tier.HOST_RAM)
+        assert backend.scheduler.pool_tier(h.recipe.key()) == Tier.HOST_RAM
+        client.submit(lambda: None, context=h).result()   # promotes on-path
+        assert backend.scheduler.pool_tier(h.recipe.key()) is None
