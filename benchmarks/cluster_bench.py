@@ -17,10 +17,19 @@ Two sections, written to ``BENCH_cluster.json``:
     onto a 4-slot heterogeneous pool driven by a live ElasticRunner
     (floor=1 so the sweep can drain).
 
+``cost_ladder``
+    the cost-based fetch chooser's slow-donor vs fast-NVMe flip: with an
+    uncalibrated fast fabric the scheduler picks PEER; after a measured
+    completion calibrates the peer path slow (EWMA bandwidth), the SAME
+    donor/pool configuration flips to the local DISK restore. Records the
+    per-rung predicted seconds behind each decision.
+
 With ``strict=True`` (the ``cluster-storm-smoke`` CI job) the acceptance
 bars are asserted: at 8 joiners P2P bootstrap performs ZERO builder calls
-and ZERO XLA compiles on joiners, outputs are bit-identical, and the
-aggregate bootstrap time is >= 3x lower than FS-only.
+and ZERO XLA compiles on joiners, outputs are bit-identical, the
+aggregate bootstrap time is >= 3x lower than FS-only, and the cost
+chooser provably picks the cheaper rung on both sides of the calibration
+flip.
 """
 
 from __future__ import annotations
@@ -189,7 +198,62 @@ def bench_rq3(quick: bool, strict: bool) -> Dict:
         mgr.shutdown()
 
 
+def bench_cost_ladder(strict: bool) -> Dict:
+    """Slow-donor vs fast-NVMe: the cost chooser must take the cheapest
+    recovery path as the planner's calibration moves, not a fixed
+    priority order. Pure policy — deterministic, no engines."""
+    from repro.core import (ContextAwareScheduler, ContextMode,
+                            ContextRecipe, FetchSource, Tier,
+                            TransferPlanner)
+    from repro.core.context import GB
+
+    recipe = ContextRecipe(name="cost-ladder")
+    # modeled fast fabric: uncalibrated, the donor path wins the race
+    planner = TransferPlanner(p2p_bytes_per_s=1000 * GB,
+                              nic_bytes_per_s=1000 * GB)
+    sched = ContextAwareScheduler(mode=ContextMode.FULL, planner=planner)
+    sched.on_worker_join("donor", 0.0)
+    sched.workers["donor"].store.admit_recipe(recipe, Tier.DEVICE)
+    sched.on_worker_join("joiner", 0.0)
+    # the node pool holds a spilled snapshot on fast local NVMe
+    sched.pool_tier = {recipe.key(): Tier.LOCAL_DISK}.get
+
+    def decide(t: float) -> Dict:
+        rungs = sched.rung_costs(recipe, "joiner", t)
+        src, _, _ = sched._choose_source(recipe,
+                                         sched.workers["joiner"], t,
+                                         commit=False)
+        return {"chosen": src.value,
+                "rung_seconds": {s.value: sec for s, sec, _ in rungs}}
+
+    uncal = decide(1.0)
+    # one measured completion calibrates the peer path SLOW (a congested
+    # or distant donor): 100 s for the template transfer
+    plan = planner.peer_plan(recipe.transfer_bytes, {"donor"}, 1.0)
+    planner.complete(plan, now=1.0, measured_seconds=100.0)
+    cal = decide(200.0)
+    record = {
+        "uncalibrated": uncal,
+        "calibrated_slow_donor": cal,
+        "measured_p2p_bytes_per_s": planner.calibration()["p2p"],
+    }
+    if strict:
+        for side in (uncal, cal):
+            cheapest = min(side["rung_seconds"].items(),
+                           key=lambda kv: kv[1])[0]
+            assert side["chosen"] == cheapest, (
+                f"chooser picked {side['chosen']} but the cheapest rung "
+                f"was {cheapest}: {side['rung_seconds']}")
+        assert uncal["chosen"] == FetchSource.PEER.value, (
+            f"uncalibrated fast fabric should pick PEER, got {uncal}")
+        assert cal["chosen"] == FetchSource.DISK.value, (
+            f"slow-calibrated donor should lose to local NVMe, got {cal}")
+    return record
+
+
 def bench_cluster(quick: bool = False, strict: bool = False) -> Dict:
     storm = bench_storm(quick, strict)
     rq3 = bench_rq3(quick, strict)
-    return {"quick": quick, "storm": storm, "rq3": rq3}
+    cost_ladder = bench_cost_ladder(strict)
+    return {"quick": quick, "storm": storm, "rq3": rq3,
+            "cost_ladder": cost_ladder}

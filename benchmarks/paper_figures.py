@@ -91,6 +91,13 @@ def bench_rq4_opportunistic():
     emit("rq4.high.p2p_fraction",
          1e6 * r.p2p_transfers / max(1, r.p2p_transfers + r.fs_transfers),
          f"{r.p2p_transfers} p2p vs {r.fs_transfers} fs bootstraps")
+    # preempt-then-rejoin churn: rejoining capacity recovers over the
+    # modeled node snapshot pool (restore cost) instead of cold rebuilds
+    r = simulate_sweep(ContextMode.FULL, traces.churn(base=8, amplitude=6),
+                       RECIPE, 50_000, 100, cost=COST)
+    emit("rq4.churn.pool_restores", float(r.pool_restores),
+         f"{r.pool_restores} snapshot-pool recoveries, "
+         f"{r.p2p_transfers} p2p, {r.fs_transfers} fs bootstraps")
 
 
 def bench_table1_heterogeneity():

@@ -57,11 +57,14 @@ def main() -> None:
         with open(args.cluster_json_out, "w") as f:
             json.dump(record, f, indent=2, sort_keys=True)
         top = record["storm"][f"n{max(cluster_bench.STORM_SIZES)}"]
+        ladder = record["cost_ladder"]
         print(f"# wrote {args.cluster_json_out} (P2P aggregate bootstrap "
               f"x{top['speedup_aggregate_bootstrap']:.1f} vs FS-only at "
               f"{top['p2p']['n_joiners']} joiners, "
-              f"{record['rq3']['tasks_per_second']:.2f} tasks/s under rq3)",
-              file=sys.stderr)
+              f"{record['rq3']['tasks_per_second']:.2f} tasks/s under rq3, "
+              f"cost ladder {ladder['uncalibrated']['chosen']}->"
+              f"{ladder['calibrated_slow_donor']['chosen']} on slow-donor "
+              "calibration)", file=sys.stderr)
     if args.only in (None, "pcm"):
         from benchmarks import pcm_bench
         record = pcm_bench.bench_pcm(quick=args.quick,

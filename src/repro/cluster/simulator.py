@@ -7,6 +7,14 @@ store/residency bookkeeping, requeue-on-preemption and straggler logic are
 the production classes from ``repro.core``. This is how the paper's
 cluster-scale figures (RQ1–RQ4) are reproduced on a laptop, deterministic
 to the last event.
+
+Like the SimulatorBackend, the paper-figure simulator models the node
+snapshot pool across preemptions in full-context mode: a preempted
+worker's device-resident contexts survive as modeled HOST_RAM snapshots
+(the live runtime's retirement demotion), so a later joiner's cost ladder
+can take the POOL/DISK rung — restore cost, not a cold rebuild — exactly
+as the live PCMManager does. Pool snapshots are single-owner: a promotion
+(fetch or on-path start) consumes the entry.
 """
 
 from __future__ import annotations
@@ -23,7 +31,57 @@ from repro.core.context import ContextRecipe
 from repro.core.factory import WorkerFactory
 from repro.core.scheduler import Action, ContextAwareScheduler, Task
 from repro.core.store import ContextMode, ContextStore, Tier
-from repro.core.transfer import TransferPlanner
+from repro.core.transfer import FetchSource, TransferPlanner
+
+
+class ModeledNodePool:
+    """Modeled node snapshot pool shared by BOTH dry-run surfaces
+    (SimulatorBackend and ClusterSimulator): a preempted worker's
+    device-resident contexts survive here as HOST_RAM snapshots (the live
+    SnapshotPool's retirement demotion), feeding the scheduler's
+    POOL/DISK rungs via :meth:`get`. Snapshots are single-owner — a
+    promotion consumes the entry, whether it happens through a bootstrap
+    fetch or on the start path of a host/disk-resident placement. One
+    pool for the whole modeled cluster: the single-node simplification
+    both surfaces share, so their FetchSource decision sequences stay
+    comparable (and cannot drift by one surface editing its own copy of
+    this logic)."""
+
+    def __init__(self):
+        self._tiers: Dict[str, Tier] = {}
+
+    def get(self, key: str) -> Optional[Tier]:
+        """Residency oracle installed as ``scheduler.pool_tier``."""
+        return self._tiers.get(key)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._tiers
+
+    def put(self, key: str, tier: Tier = Tier.HOST_RAM):
+        self._tiers[key] = tier
+
+    def demote_worker(self, store: ContextStore):
+        """Model a preempted worker's retirement demotion: its
+        device-resident contexts survive in node host RAM."""
+        for key in store.keys(Tier.DEVICE):
+            self._tiers[key] = Tier.HOST_RAM
+
+    def consume_fetch(self, source, key: str):
+        """A completed POOL/DISK fetch promoted (and so consumed) the
+        single-owner snapshot."""
+        if source in (FetchSource.POOL, FetchSource.DISK):
+            self._tiers.pop(key, None)
+
+    def consume_start(self, a: Action):
+        """A start on a host/disk-resident worker is a snapshot promotion
+        (as the live ``Library.ensure`` takes the SnapshotPool copy): it
+        consumes the pooled entry, so a later joiner's ladder does not
+        chase a snapshot the runtime no longer has."""
+        for recipe, on_host, on_disk, on_device in zip(
+                a.recipes, a.host_resident or (), a.disk_resident or (),
+                a.device_resident or ()):
+            if (on_host or on_disk) and not on_device:
+                self._tiers.pop(recipe.key(), None)
 
 
 def modeled_start_seconds(a: Action, task: Task, profile: DeviceProfile,
@@ -108,7 +166,6 @@ def modeled_fetch_seconds(a: Action, profile: DeviceProfile,
     seconds — no network, no framework warm-up: the node process never
     died), PEER/FS are transfers followed by the disk->HBM load, and BUILD
     (no plan) pays the load path alone. Updates transfer stats."""
-    from repro.core.transfer import FetchSource
     if a.plan is not None and a.plan.fetch_source in (FetchSource.POOL,
                                                       FetchSource.DISK):
         stats["pool"] = stats.get("pool", 0) + 1
@@ -132,6 +189,7 @@ class SimResult:
     preemptions: int
     p2p_transfers: int
     fs_transfers: int
+    pool_restores: int = 0        # POOL/DISK-rung snapshot promotions
 
     @property
     def total_inferences(self) -> int:
@@ -170,6 +228,8 @@ class ClusterSimulator:
         self.scheduler = ContextAwareScheduler(
             mode=mode, planner=self.planner,
             straggler_factor=straggler_factor)
+        self._node_pool = ModeledNodePool()
+        self.scheduler.pool_tier = self._node_pool.get
         self.factory = WorkerFactory(capacity_fn)
         self.reconcile_every = reconcile_every
 
@@ -205,7 +265,8 @@ class ClusterSimulator:
             cold_starts=self._stats["cold"], warm_starts=self._stats["warm"],
             disk_hits=self._stats["disk"],
             preemptions=self._stats["preempt"],
-            p2p_transfers=self._stats["p2p"], fs_transfers=self._stats["fs"])
+            p2p_transfers=self._stats["p2p"], fs_transfers=self._stats["fs"],
+            pool_restores=self._stats["pool"])
 
     def _end_time(self) -> float:
         return max((t for t, _ in self._completions), default=self.loop.now)
@@ -230,6 +291,10 @@ class ClusterSimulator:
                         ev.cancel()
                 self._page_cached = {(w, k) for (w, k) in self._page_cached
                                      if w != d.worker_id}
+                if self.mode == ContextMode.FULL:
+                    info = self.scheduler.workers.get(d.worker_id)
+                    if info is not None:
+                        self._node_pool.demote_worker(info.store)
                 self._apply(self.scheduler.on_worker_leave(d.worker_id, now))
         self._worker_samples.append((now, self.factory.size))
         if not self.scheduler.all_done() or self.scheduler.outstanding:
@@ -249,16 +314,21 @@ class ClusterSimulator:
                     ev.cancel()
 
     def _start_fetch(self, a: Action):
+        from repro.core.store import TierFullError
         dur = modeled_fetch_seconds(a, self.profiles[a.worker_id],
                                     self.cost, self._stats)
         wid, key = a.worker_id, a.recipe.key()
 
         def done():
             self._fetch_events.pop(wid, None)
+            self._node_pool.consume_fetch(a.source, key)
             info = self.scheduler.workers.get(wid)
             if info is not None:
-                info.store.admit_recipe(a.recipe, Tier.DEVICE,
-                                        now=self.loop.now)
+                try:
+                    info.store.admit_recipe(a.recipe, Tier.DEVICE,
+                                            now=self.loop.now)
+                except TierFullError:
+                    pass     # on_fetch_done marks the key fetch_blocked
             self._apply(self.scheduler.on_fetch_done(wid, key,
                                                      self.loop.now))
 
@@ -267,6 +337,7 @@ class ClusterSimulator:
     def _start_task(self, a: Action):
         profile = self.profiles[a.worker_id]
         task = self.scheduler.tasks[a.task_id]
+        self._node_pool.consume_start(a)
         dur = modeled_start_seconds(a, task, profile, self.scheduler,
                                     self.planner, self.cost, self.mode,
                                     self._page_cached, self._stats,

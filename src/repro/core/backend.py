@@ -32,8 +32,8 @@ from typing import (Any, Callable, Dict, List, Mapping, Optional, Protocol,
 from repro.core.context import ContextRecipe
 from repro.core.manager import Future, PCMManager
 from repro.core.scheduler import Action, ContextAwareScheduler, Task
-from repro.core.store import ContextMode, ContextStore, Tier
-from repro.core.transfer import FetchSource, TransferPlanner
+from repro.core.store import ContextMode, ContextStore, Tier, TierFullError
+from repro.core.transfer import TransferPlanner
 
 
 @runtime_checkable
@@ -129,6 +129,7 @@ class SimulatorBackend:
         # module load, so the live path never pays for the simulator
         from repro.cluster.devices import PROFILES, CostModel
         from repro.cluster.events import EventLoop
+        from repro.cluster.simulator import ModeledNodePool
 
         self.mode = mode
         self.cost = cost or CostModel()
@@ -138,11 +139,12 @@ class SimulatorBackend:
             mode=mode, planner=self.planner,
             straggler_factor=straggler_factor,
             p2p=p2p, donor_wait=donor_wait)
-        # modeled node snapshot pool: preempting a worker in full-context
-        # mode "demotes" its device-resident contexts here (mirroring the
-        # live runtime's retirement demotion), so a later joiner's ladder
-        # can decide POOL/DISK exactly like the live scheduler does
-        self._node_pool: Dict[str, Tier] = {}
+        # modeled node snapshot pool (shared with ClusterSimulator):
+        # preempting a worker in full-context mode "demotes" its
+        # device-resident contexts here (mirroring the live runtime's
+        # retirement demotion), so a later joiner's ladder can decide
+        # POOL/DISK exactly like the live scheduler does
+        self._node_pool = ModeledNodePool()
         self.scheduler.pool_tier = self._node_pool.get
         self._profiles_db = PROFILES
         self.profiles: Dict[str, Any] = {}
@@ -196,8 +198,7 @@ class SimulatorBackend:
             # survive in node host RAM (the live SnapshotPool behavior)
             info = self.scheduler.workers.get(worker_id)
             if info is not None:
-                for key in info.store.keys(Tier.DEVICE):
-                    self._node_pool[key] = Tier.HOST_RAM
+                self._node_pool.demote_worker(info.store)
         self._apply(self.scheduler.on_worker_leave(worker_id, self.loop.now))
 
     def _reconcile(self):
@@ -288,7 +289,7 @@ class SimulatorBackend:
         if moved:
             # the demoted snapshot lands in the modeled node pool, where a
             # cold joiner's ladder can find it (POOL/DISK rungs)
-            self._node_pool[key] = tier
+            self._node_pool.put(key, tier)
         return moved
 
     # --------------------------------------------------------- execution ---
@@ -352,18 +353,16 @@ class SimulatorBackend:
 
         def done():
             self._fetch_events.pop(wid, None)
-            if a.source in (FetchSource.POOL, FetchSource.DISK):
-                # snapshot promotion consumes the pooled copy (single-
-                # owner move semantics, as in the live SnapshotPool)
-                self._node_pool.pop(key, None)
+            self._node_pool.consume_fetch(a.source, key)
             info = self.scheduler.workers.get(wid)
             if info is not None:
                 try:
                     info.store.admit_recipe(a.recipe, Tier.DEVICE,
                                             now=self.loop.now)
-                except ValueError:
-                    pass     # pin-blocked (TierFullError): on_fetch_done
-                    # marks the worker fetch_blocked for this key
+                except TierFullError:
+                    pass     # pin-blocked: on_fetch_done marks the worker
+                    # fetch_blocked for this key; other ValueErrors are
+                    # admission bugs and propagate
 
             self._apply(self.scheduler.on_fetch_done(wid, key,
                                                      self.loop.now))
@@ -374,16 +373,7 @@ class SimulatorBackend:
         from repro.cluster.simulator import modeled_start_seconds
         profile = self.profiles[a.worker_id]
         task = self.scheduler.tasks[a.task_id]
-        # a start on a host/disk-resident worker is a snapshot promotion:
-        # it consumes the single-owner pooled copy, exactly as the live
-        # Library.ensure takes it from the SnapshotPool — without this the
-        # sim's ladder would keep offering a POOL rung the live runtime no
-        # longer has
-        for recipe, on_host, on_disk, on_device in zip(
-                a.recipes, a.host_resident or (), a.disk_resident or (),
-                a.device_resident or ()):
-            if (on_host or on_disk) and not on_device:
-                self._node_pool.pop(recipe.key(), None)
+        self._node_pool.consume_start(a)
         dur = modeled_start_seconds(a, task, profile, self.scheduler,
                                     self.planner, self.cost, self.mode,
                                     self._page_cached, self._stats,

@@ -50,7 +50,8 @@ from repro.core.context import (GB, ContextRecipe, export_context,
 from repro.core.library import Library
 from repro.core.scheduler import (Action, ContextAwareScheduler, ContextMode,
                                   Task)
-from repro.core.store import ContextStore, SnapshotPool, Tier
+from repro.core.store import (ContextStore, SnapshotPool, Tier,
+                              TierFullError)
 from repro.core.transfer import FetchSource, TransferPlan, TransferPlanner
 
 
@@ -407,10 +408,11 @@ class LiveWorker:
                     try:
                         self.store.admit(key, tier, snap.nbytes,
                                          now=mgr.now)
-                    except ValueError:
+                    except TierFullError:
                         # bookkeeping refused (pin-blocked tier); the
                         # snapshot is in the pool regardless — the worker
-                        # just shows as cold to the placement ladder
+                        # just shows as cold to the placement ladder.
+                        # Other ValueErrors are admission bugs: propagate.
                         pass
         finally:
             event.set()

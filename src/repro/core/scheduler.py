@@ -13,16 +13,23 @@ Policy highlights (paper §3 + production extensions):
     at the same residency rung are ranked by their DeviceProfile (fastest
     compute for warm/cold starts, fastest PCIe for snapshot restores);
   * cold workers bootstrap down the **FetchSource ladder**
-    (PEER > POOL > DISK > FS > BUILD, see ``repro.core.transfer``):
-    peer-to-peer from a warm donor under the TransferPlanner's fanout/
-    bandwidth admission, else a node-pool snapshot promotion, else the
-    shared FS / the builder. In full-context mode a queued task whose only
-    idle candidates are cold is held while its context is bootstrapped
-    (fetch first, start warm) instead of cold-building on the task path;
-    with ``donor_wait`` the scheduler queues behind saturated donors
-    rather than falling back to the shared FS. Every ladder decision is
-    recorded in ``fetch_log`` — the live runtime and the discrete-event
-    simulator produce comparable decision sequences from the same policy;
+    (PEER / POOL / DISK / FS / BUILD, see ``repro.core.transfer``) by
+    PREDICTED SECONDS, not fixed priority: every feasible rung is scored
+    with the TransferPlanner's EWMA-calibrated bandwidths (donor fanout
+    shares, shared-FS contention, the worker's own PCIe link for snapshot
+    promotions, a modeled build cost) and the cheapest wins — a donor that
+    measured slow genuinely loses to a local NVMe restore; the canonical
+    PEER > POOL > DISK > FS > BUILD order is the deterministic tie-break.
+    In full-context mode a queued task whose only idle candidates are cold
+    is held while its context is bootstrapped (fetch first, start warm)
+    instead of cold-building on the task path; with ``donor_wait`` the
+    scheduler queues behind saturated donors — but only when an in-flight
+    fetch whose completion can actually unblock THIS key exists and the
+    predicted wait + transfer beats the best alternative rung. Every
+    ladder decision is recorded in ``fetch_log`` (including commit-time
+    degrades from the rung a dry placement decision promised) — the live
+    runtime and the discrete-event simulator produce comparable decision
+    sequences from the same policy;
   * preempted tasks are requeued at the FRONT (they have already waited);
   * straggler mitigation: optionally duplicate the slowest running task to
     a warm idle worker when it exceeds ``straggler_factor`` x the median
@@ -39,8 +46,9 @@ from dataclasses import dataclass, field
 from typing import (Callable, Deque, Dict, List, Optional, Set, Tuple)
 
 from repro.core.context import ContextRecipe
-from repro.core.store import ContextMode, ContextStore, Tier
-from repro.core.transfer import FetchSource, TransferPlan, TransferPlanner
+from repro.core.store import ContextMode, ContextStore, Tier, TierFullError
+from repro.core.transfer import (GBPS, FetchSource, TransferPlan,
+                                 TransferPlanner)
 
 
 # ------------------------------------------------------------------ types --
@@ -91,6 +99,8 @@ class WorkerInfo:
     fetching_key: Optional[str] = None
     fetching_recipe: Optional[ContextRecipe] = None
     fetching_source: Optional[FetchSource] = None
+    fetching_donor: str = ""            # PEER fetch: the serving donor
+    fetching_eta: Optional[float] = None  # predicted completion time
     joined_at: float = 0.0
     fetch_blocked: Set[str] = field(default_factory=set)  # admission refused
 
@@ -106,6 +116,10 @@ class FetchDecision:
     source: FetchSource
     donor: str = ""                     # PEER decisions: the chosen donor
     t: float = 0.0
+    # commit-time degrade: the rung a dry (commit=False) decision promised
+    # when the commit landed on a different one (e.g. the promised donor's
+    # fanout filled in between) — None for decisions that held
+    degraded_from: Optional[FetchSource] = None
 
 
 @dataclass
@@ -148,10 +162,12 @@ class ContextAwareScheduler:
         self.max_attempts = max_attempts
         self.p2p = p2p                  # False: FS-only bootstrap (bench)
         # donor_wait: when every donor is fanout-saturated, hold the fetch
-        # until a transfer completes instead of falling back to the shared
-        # FS — the paper's admission-controlled join storm. Only engaged
-        # while another fetch is in flight (its completion re-drives
-        # dispatch), so a wait can never stall the runtime.
+        # until a slot frees instead of taking a worse rung — the paper's
+        # admission-controlled join storm. Cost-bounded: engaged only when
+        # an in-flight fetch that can unblock THIS key exists (its
+        # completion re-drives dispatch, so a wait can never stall the
+        # runtime) AND predicted wait + peer transfer beats the cheapest
+        # alternative rung (see _wait_for_donor_beats).
         self.donor_wait = donor_wait
         # node SnapshotPool residency oracle (key -> Tier or None),
         # installed by the backend: the POOL/DISK rungs of the ladder
@@ -225,9 +241,10 @@ class ContextAwareScheduler:
                 # prefetch never re-fires
                 info.store.admit_recipe(info.fetching_recipe, Tier.DEVICE,
                                         now=t)
-            except ValueError:
+            except TierFullError:
                 # admission refused (pinned-full tier): remember the key so
-                # prefetch doesn't re-fire forever at this worker
+                # prefetch doesn't re-fire forever at this worker. Other
+                # ValueErrors are genuine bugs and propagate.
                 info.fetch_blocked.add(ctx_key)
         elif info.fetching_recipe is not None:
             # fetch FAILED (builder raised / transfer aborted): block the
@@ -237,6 +254,8 @@ class ContextAwareScheduler:
         info.fetching_key = None
         info.fetching_recipe = None
         info.fetching_source = None
+        info.fetching_donor = ""
+        info.fetching_eta = None
         info.current = None
         return self.dispatch(t)
 
@@ -381,11 +400,15 @@ class ContextAwareScheduler:
                 return "wait"
             if source in (FetchSource.PEER, FetchSource.POOL,
                           FetchSource.DISK):
-                act = self._fetch(recipe, w, t)
+                act = self._fetch(recipe, w, t, expected=source)
                 if act is not None:
                     idle.remove(w)
                     actions.append(act)
                     return "fetch"
+                # commit found the rung closed AND waiting now predicted
+                # cheaper than the alternatives: a key-relevant fetch is
+                # in flight, its completion re-drives dispatch
+                return "wait"
             break       # cheapest candidate says FS/BUILD: cold-start
         return "start"
 
@@ -408,11 +431,13 @@ class ContextAwareScheduler:
         for recipe in task.recipes:
             try:
                 w.store.admit_recipe(recipe, Tier.DEVICE, now=t)
-            except ValueError:
-                # pinned entries block admission (TierFullError): the task
-                # still runs, but residency is NOT recorded — the store
-                # never lies about capacity, and this worker won't be
-                # treated as warm for the key it couldn't admit
+            except TierFullError:
+                # pinned entries block admission: the task still runs, but
+                # residency is NOT recorded — the store never lies about
+                # capacity, and this worker won't be treated as warm for
+                # the key it couldn't admit. Only TierFullError is
+                # tolerable here; any other ValueError is an admission bug
+                # and must propagate.
                 pass
             w.store.touch(recipe.key(), now=t)
         return Action(kind="start", worker_id=w.worker_id,
@@ -443,67 +468,192 @@ class ContextAwareScheduler:
                                                 FetchSource.DISK)
                    for info in self.workers.values())
 
-    def _choose_source(self, recipe: ContextRecipe, w: WorkerInfo, t: float,
-                       commit: bool = True
-                       ) -> Tuple[Optional[FetchSource],
-                                  Optional[TransferPlan], bool]:
-        """Walk the FetchSource ladder (PEER > POOL > DISK > FS > BUILD)
-        for bootstrapping ``recipe`` onto ``w``. Returns (source, plan,
-        wait). ``wait=True`` means every donor is fanout-saturated and the
-        policy holds the fetch for a completing transfer (donor_wait).
-        With ``commit=False`` nothing is registered with the planner —
-        a dry decision for placement; re-invoke with ``commit=True`` (via
-        ``_fetch``) to actually reserve the flow."""
+    # fixed-priority tie-break between rungs predicting equal seconds —
+    # the order the uncalibrated defaults produce for a paper-size context
+    _LADDER_TIEBREAK = {FetchSource.PEER: 0, FetchSource.POOL: 1,
+                        FetchSource.DISK: 2, FetchSource.FS: 3,
+                        FetchSource.BUILD: 4}
+
+    @staticmethod
+    def _h2d_rate(w: WorkerInfo) -> Optional[float]:
+        """The worker's own host->HBM bandwidth (bytes/s) from its
+        DeviceProfile; None falls back to the planner's generic link."""
+        pcie = float(getattr(w.profile, "pcie_gbps", 0) or 0)
+        return pcie * GBPS if pcie > 0 else None
+
+    def _rung_costs(self, recipe: ContextRecipe, w: WorkerInfo, t: float
+                    ) -> Tuple[List[Tuple[float, int, FetchSource,
+                                          Optional[str]]], Set[str]]:
+        """Score every FEASIBLE rung for bootstrapping ``recipe`` onto
+        ``w`` in predicted seconds (side-effect-free — nothing registers
+        with the planner). Returns the rungs sorted cheapest-first (fixed
+        ladder order breaks ties) plus the donor set, so callers can tell
+        'no donors' from 'donors all fanout-saturated' (donor_wait)."""
         key = recipe.key()
-        allow_p2p = self.p2p and self.mode != ContextMode.AGNOSTIC
-        if allow_p2p:
+        h2d = self._h2d_rate(w)
+        rungs: List[Tuple[float, int, FetchSource, Optional[str]]] = []
+        donors: Set[str] = set()
+        if self.p2p and self.mode != ContextMode.AGNOSTIC:
             donors = self._donors_for(key, w.worker_id)
-            if donors:
-                if commit:
-                    plan = self.planner.peer_plan(recipe.transfer_bytes,
-                                                  donors, t)
-                    if plan is not None:
-                        return FetchSource.PEER, plan, False
-                elif self.planner.available_donors(donors, t):
-                    return FetchSource.PEER, None, False
-                if self.donor_wait and any(
-                        info.phase == WorkerPhase.FETCHING
-                        for info in self.workers.values()):
-                    # saturated, but a transfer is in flight whose
-                    # completion re-drives dispatch: queue behind it
-                    return None, None, True
+        if donors:
+            best = self.planner.peer_seconds(recipe.transfer_bytes,
+                                             donors, t)
+            if best is not None:
+                donor, transfer_s = best
+                # the receiver restores the shipped template host->HBM;
+                # no framework warm-up (its process is already alive) and
+                # no compile (AOT executables ride along)
+                rungs.append((transfer_s + self.planner.restore_seconds(
+                    recipe.host_bytes, h2d_bytes_per_s=h2d),
+                    self._LADDER_TIEBREAK[FetchSource.PEER],
+                    FetchSource.PEER, donor))
         pool_tier = self.pool_tier(key) if self.pool_tier is not None \
             else None
         if pool_tier is not None and not self._pool_claimed(key):
             from_disk = Tier(pool_tier) == Tier.LOCAL_DISK
-            plan = self.planner.pool_plan(
-                recipe.host_bytes, t, from_disk=from_disk,
-                h2d_bytes_per_s=(getattr(w.profile, "pcie_gbps", 0) or 0)
-                * (1024 ** 3) or None) if commit else None
-            return (FetchSource.DISK if from_disk else FetchSource.POOL,
-                    plan, False)
+            src = FetchSource.DISK if from_disk else FetchSource.POOL
+            rungs.append((self.planner.restore_seconds(
+                recipe.host_bytes, from_disk=from_disk, h2d_bytes_per_s=h2d),
+                self._LADDER_TIEBREAK[src], src, None))
         if recipe.transfer_bytes > 0:
-            plan = self.planner.fs_plan(recipe.transfer_bytes, t) \
-                if commit else None
-            return FetchSource.FS, plan, False
-        return FetchSource.BUILD, None, False
+            rungs.append((self.planner.cold_seconds(
+                recipe.transfer_bytes, recipe.host_bytes, t,
+                h2d_bytes_per_s=h2d),
+                self._LADDER_TIEBREAK[FetchSource.FS], FetchSource.FS, None))
+        rungs.append((self.planner.build_seconds(recipe.transfer_bytes),
+                      self._LADDER_TIEBREAK[FetchSource.BUILD],
+                      FetchSource.BUILD, None))
+        rungs.sort(key=lambda r: (r[0], r[1]))
+        return rungs, donors
 
-    def _fetch(self, recipe: ContextRecipe, w: WorkerInfo, t: float
-               ) -> Optional[Action]:
-        """Issue a bootstrap fetch for ``recipe`` on ``w`` down the
-        FetchSource ladder; None when the policy decides to wait for a
-        donor slot. The decision is appended to ``fetch_log``."""
+    def rung_costs(self, recipe: ContextRecipe, worker_id: str, t: float
+                   ) -> List[Tuple[FetchSource, float, str]]:
+        """Public observability surface of the cost chooser: the feasible
+        rungs for bootstrapping ``recipe`` onto ``worker_id`` as
+        ``(source, predicted_seconds, donor)`` tuples, cheapest first —
+        what ``_choose_source`` would pick and why."""
+        rungs, _ = self._rung_costs(recipe, self.workers[worker_id], t)
+        return [(src, sec, donor or "") for sec, _, src, donor in rungs]
+
+    def _wait_for_donor_beats(self, key: str, recipe: ContextRecipe,
+                              w: WorkerInfo, donors: Set[str], t: float,
+                              best_alternative: float) -> bool:
+        """donor_wait admission: hold this fetch for a donor slot ONLY if
+        (a) an in-flight fetch exists whose completion can actually
+        unblock THIS key — a receiver currently drawing from one of its
+        donors (frees a fanout slot), or a worker fetching the same key
+        (becomes a new donor) — and (b) the predicted wait plus an
+        unconstrained peer transfer still beats the best alternative rung.
+        Scoping to key-relevant fetches is both correctness (a joiner must
+        not queue behind an unrelated transfer that will never free a
+        donor for it) and liveness (each unblocker is a scheduler-tracked
+        fetch whose completion re-drives dispatch)."""
+        etas = [info.fetching_eta for info in self.workers.values()
+                if info.phase == WorkerPhase.FETCHING
+                and info.fetching_eta is not None
+                and (info.fetching_key == key
+                     or (info.fetching_donor
+                         and info.fetching_donor in donors))]
+        if not etas:
+            return False
+        wait_s = max(0.0, min(etas) - t)
+        peer_s = (self.planner.peer_rate_seconds(recipe.transfer_bytes)
+                  + self.planner.restore_seconds(
+                      recipe.host_bytes, h2d_bytes_per_s=self._h2d_rate(w)))
+        return wait_s + peer_s < best_alternative
+
+    def _choose_source(self, recipe: ContextRecipe, w: WorkerInfo, t: float,
+                       commit: bool = True
+                       ) -> Tuple[Optional[FetchSource],
+                                  Optional[TransferPlan], bool]:
+        """Pick the cheapest FetchSource rung (predicted seconds, see
+        ``_rung_costs``) for bootstrapping ``recipe`` onto ``w``. Returns
+        (source, plan, wait). ``wait=True`` means every donor is fanout-
+        saturated and waiting for a slot is predicted cheaper than the
+        best alternative rung (donor_wait). With ``commit=False`` nothing
+        is registered with the planner — a dry decision for placement;
+        re-invoke with ``commit=True`` (via ``_fetch``) to reserve the
+        flow. The commit path re-validates with the SAME admission
+        predicate and walks the cost order, so a rung that closed between
+        dry and commit degrades to the next-cheapest (``_fetch`` logs the
+        degrade) instead of silently changing shape."""
+        rungs, donors = self._rung_costs(recipe, w, t)
+        best_sec, _, best_src, _ = rungs[0]
+        peer_feasible = any(r[2] == FetchSource.PEER for r in rungs)
+        if (self.donor_wait and donors and not peer_feasible
+                and self._wait_for_donor_beats(recipe.key(), recipe, w,
+                                               donors, t, best_sec)):
+            return None, None, True
+        if not commit:
+            return best_src, None, False
+        for _, _, source, donor in rungs:
+            if source == FetchSource.PEER:
+                plan = self.planner.peer_plan(recipe.transfer_bytes,
+                                              donors, t)
+                if plan is None:
+                    # defensive only: within one call the scoring and the
+                    # commit see the same planner state at the same t, so
+                    # a scored-feasible PEER rung always commits — but a
+                    # plan-less PEER action would silently run the builder
+                    # on the receiver, so degrade rather than ship one
+                    continue
+                return FetchSource.PEER, plan, False
+            if source in (FetchSource.POOL, FetchSource.DISK):
+                plan = self.planner.pool_plan(
+                    recipe.host_bytes, t,
+                    from_disk=source == FetchSource.DISK,
+                    h2d_bytes_per_s=self._h2d_rate(w))
+                return source, plan, False
+            if source == FetchSource.FS:
+                return source, self.planner.fs_plan(recipe.transfer_bytes,
+                                                    t), False
+            return FetchSource.BUILD, None, False
+        # unreachable: _rung_costs always appends the BUILD rung, and the
+        # loop returns unconditionally when it reaches it
+
+    def _fetch_eta(self, source: FetchSource, plan: Optional[TransferPlan],
+                   recipe: ContextRecipe, w: WorkerInfo, t: float) -> float:
+        """Predicted completion time of a fetch just issued — the transfer
+        plus what the receiver does with it (mirroring the shape of the
+        backends' fetch execution): a PEER install restores the shipped
+        template host->HBM, POOL/DISK promotions are the plan alone, an FS
+        fetch pays the full cold load (warm-up + disk read + host->HBM),
+        and BUILD is the chooser's own build-cost model. Feeds
+        ``_wait_for_donor_beats`` — a wait estimate, not a contract."""
+        h2d = self._h2d_rate(w)
+        if source in (FetchSource.POOL, FetchSource.DISK):
+            return t + plan.seconds
+        if source == FetchSource.PEER:
+            return t + plan.seconds + self.planner.restore_seconds(
+                recipe.host_bytes, h2d_bytes_per_s=h2d)
+        if source == FetchSource.FS:
+            return t + plan.seconds + self.planner.cold_load_seconds(
+                recipe.transfer_bytes, recipe.host_bytes,
+                h2d_bytes_per_s=h2d)
+        return t + self.planner.build_seconds(recipe.transfer_bytes)
+
+    def _fetch(self, recipe: ContextRecipe, w: WorkerInfo, t: float,
+               expected: Optional[FetchSource] = None) -> Optional[Action]:
+        """Issue a bootstrap fetch for ``recipe`` on ``w`` at the cheapest
+        FetchSource rung; None when the policy decides to wait for a donor
+        slot. The decision is appended to ``fetch_log``; when a caller
+        passes the rung its dry decision promised (``expected``) and the
+        commit lands elsewhere, the decision records the degrade."""
         source, plan, wait = self._choose_source(recipe, w, t, commit=True)
         if wait:
             return None
         donor = plan.source if (plan is not None and plan.p2p) else ""
         self.fetch_log.append(FetchDecision(
             worker_id=w.worker_id, key=recipe.key(), source=source,
-            donor=donor, t=t))
+            donor=donor, t=t,
+            degraded_from=expected if (expected is not None
+                                       and expected != source) else None))
         w.phase = WorkerPhase.FETCHING
         w.fetching_key = recipe.key()
         w.fetching_recipe = recipe
         w.fetching_source = source
+        w.fetching_donor = donor
+        w.fetching_eta = self._fetch_eta(source, plan, recipe, w, t)
         w.current = None
         return Action(kind="fetch", worker_id=w.worker_id, task_id="",
                       plan=plan, recipe=recipe, source=source, donor=donor)

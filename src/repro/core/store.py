@@ -35,10 +35,16 @@ materialized context without re-running the builder or recompiling.
 The PEER edge is the join-storm bootstrap path (paper §4.1): a cold
 worker reaches DEVICE directly from a warm peer's exported template
 (``repro.core.context.export_context`` — non-destructive, the donor keeps
-serving) instead of through the shared filesystem. Source selection walks
-the FetchSource ladder PEER > POOL > DISK > FS > BUILD (see
-``repro.core.transfer``), with per-donor fanout admission in the
-TransferPlanner gating concurrent peer flows.
+serving) instead of through the shared filesystem. Which inbound edge a
+cold worker takes is decided by COST, not fixed priority: the scheduler
+scores every feasible FetchSource rung (PEER / POOL / DISK / FS / BUILD,
+see ``repro.core.transfer``) in predicted seconds — the TransferPlanner's
+EWMA-calibrated bandwidths, per-donor fanout shares, shared-FS contention
+and the worker's own PCIe link — and takes the cheapest, so a
+slow-measured donor loses to a local NVMe promotion. The canonical
+PEER > POOL > DISK > FS > BUILD order is what uncalibrated defaults
+produce for a paper-size context and remains the deterministic tie-break;
+per-donor fanout admission still gates concurrent peer flows.
 
 :class:`ContextStore` is the bookkeeping half (which keys are resident at
 which tier, capacity-bounded with LRU eviction per tier); eviction from a

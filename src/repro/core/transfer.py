@@ -13,8 +13,7 @@ pod axis) — same planning math, different wires.
 
 The FetchSource ladder
 ----------------------
-Every context acquisition — live or simulated — is one of five sources,
-ordered from cheapest to most expensive for a cold joiner::
+Every context acquisition — live or simulated — is one of five sources::
 
     PEER   donor->receiver snapshot transfer from a warm worker that holds
            the materialized context (template export; the donor keeps
@@ -25,12 +24,27 @@ ordered from cheapest to most expensive for a cold joiner::
     FS     cold fetch of the artifact + env from the shared filesystem
            (modeled bandwidth in simulation; in-process the builder's own
            load path plays this role).
-    BUILD  pure construction — nothing to transfer (zero-byte recipes).
+    BUILD  pure construction from scratch — no artifact to transfer.
+
+Selection is COST-BASED, not fixed-priority: the scheduler scores every
+feasible rung in predicted seconds — peer bandwidth at the donor's current
+fanout share, pool/disk promotion over the receiving worker's own PCIe
+link, the shared-FS share at the current contention level plus the cold
+load, and a modeled build/compile cost — and picks the cheapest. The
+EWMA-calibrated bandwidths from :meth:`TransferPlanner.complete` feed the
+scores, so a donor that measured slow genuinely loses to a local NVMe
+restore. The canonical order above (PEER > POOL > DISK > FS > BUILD) is
+what the *uncalibrated* defaults produce for a paper-size context, and
+remains the deterministic tie-break when two rungs predict equal seconds.
 
 The :class:`~repro.core.scheduler.ContextAwareScheduler` owns the ladder
-POLICY (``_choose_source``); this module owns the timing/admission MATH.
-Both execution backends (live PCMManager, discrete-event simulator) speak
-the same vocabulary, which is what lets one policy object drive both.
+POLICY (``_choose_source``); this module owns the timing/admission MATH —
+both the side-effect-free prediction surface (``peer_seconds``,
+``cold_seconds``, ``build_seconds``, ``restore_seconds``) the chooser
+scores with, and the flow-registering commit surface (``peer_plan``,
+``fs_plan``, ``pool_plan``). Both execution backends (live PCMManager,
+discrete-event simulator) speak the same vocabulary, which is what lets
+one policy object drive both.
 
 Live flows report their **measured** duration back through
 :meth:`TransferPlanner.complete`, which (a) prunes the modeled flow the
@@ -101,13 +115,23 @@ class TransferPlanner:
                  nic_bytes_per_s: float = 1.25 * GBPS,
                  donor_fanout: int = 2,
                  h2d_bytes_per_s: float = 16 * GBPS,
-                 disk_bytes_per_s: float = 2 * GBPS):
+                 disk_bytes_per_s: float = 2 * GBPS,
+                 warmup_seconds: float = 16.0,
+                 builder_bytes_per_s: float = 0.05 * GBPS):
         self.fs_bytes_per_s = fs_bytes_per_s      # aggregate Panasas
         self.p2p_bytes_per_s = p2p_bytes_per_s
         self.nic_bytes_per_s = nic_bytes_per_s    # per-node 10GbE cap
         self.donor_fanout = donor_fanout
         self.h2d_bytes_per_s = h2d_bytes_per_s    # host RAM -> HBM (PCIe)
         self.disk_bytes_per_s = disk_bytes_per_s  # local NVMe read
+        # cold-path cost knobs for the scheduler's rung scoring: framework
+        # warm-up on any from-scratch load (mirrors CostModel.
+        # framework_warmup_s), and the modeled from-scratch construction
+        # throughput — weight init + AOT compiles amortized over the
+        # artifact payload, calibrated so a paper-size context builds in
+        # minutes (the paper's 'minutes-long startup')
+        self.warmup_seconds = warmup_seconds
+        self.builder_bytes_per_s = builder_bytes_per_s
         self._fs_flows: List[_Flow] = []
         self._donor_flows: Dict[str, List[_Flow]] = {}
         # measured-bandwidth calibration (EWMA bytes/s per path), fed by
@@ -145,10 +169,28 @@ class TransferPlanner:
         return nbytes / self._fs_rate(concurrent)
 
     def _donor_seconds(self, donor: str, nbytes: int) -> Optional[float]:
+        """Predicted seconds of one more transfer from ``donor``: the
+        donor's uplink splits across its in-flight flows plus this one,
+        then the per-flow rate is NIC-capped — a lightly loaded donor's
+        receivers each still get their full NIC. A measured (EWMA) rate is
+        already a per-flow rate observed under real contention, so it is
+        used as-is rather than re-divided. None when fanout-saturated."""
         flows = self._donor_flows.get(donor, [])
         if len(flows) >= self.donor_fanout:
             return None
-        return nbytes / self._p2p_rate()
+        measured = self._measured["p2p"]
+        if measured is not None:
+            return nbytes / measured
+        share = self.p2p_bytes_per_s / (len(flows) + 1)
+        return nbytes / min(share, self.nic_bytes_per_s)
+
+    def _ranked_free_donors(self, donors: Set[str]) -> List[str]:
+        """Free-slot donors, least-loaded first (best fanout share), id
+        tie-break for determinism. Callers must have _gc'd already."""
+        return sorted(
+            (d for d in donors
+             if len(self._donor_flows.get(d, [])) < self.donor_fanout),
+            key=lambda d: (len(self._donor_flows.get(d, [])), d))
 
     # -------------------------------------------------------------- public --
     def fs_load(self, now: float) -> int:
@@ -160,13 +202,6 @@ class TransferPlanner:
         """Concurrent receivers this donor is serving at ``now``."""
         self._gc(now)
         return len(self._donor_flows.get(donor, []))
-
-    def available_donors(self, donors: Set[str], now: float) -> List[str]:
-        """The donors with a free fanout slot at ``now`` (sorted for
-        determinism). Admission gate for the scheduler's PEER rung."""
-        self._gc(now)
-        return [d for d in sorted(donors)
-                if len(self._donor_flows.get(d, [])) < self.donor_fanout]
 
     def plan(self, nbytes: int, donors: Set[str], now: float,
              allow_p2p: bool = True,
@@ -187,18 +222,66 @@ class TransferPlanner:
         return self._register(TransferPlan(source=source, seconds=seconds,
                                            nbytes=nbytes, p2p=p2p), now)
 
+    def peer_seconds(self, nbytes: int, donors: Set[str], now: float
+                     ) -> Optional[Tuple[str, float]]:
+        """Side-effect-free prediction of the best admissible peer
+        transfer: ``(donor, seconds)`` from the least-loaded free donor at
+        its current fanout share, or None when every donor is saturated.
+        This is the PEER rung's score in the scheduler's cost chooser AND
+        the selection the commit call (:meth:`peer_plan`) reuses — one
+        code path, so the dry and commit decisions cannot drift."""
+        self._gc(now)
+        ranked = self._ranked_free_donors(donors)
+        if not ranked:
+            return None
+        return ranked[0], self._donor_seconds(ranked[0], nbytes)
+
+    def peer_rate_seconds(self, nbytes: int) -> float:
+        """Predicted seconds of an UNCONSTRAINED peer transfer at the
+        calibrated point-to-point rate (no fanout share): what a transfer
+        would cost once a donor slot frees — the donor-wait cost bound."""
+        return nbytes / self._p2p_rate()
+
+    def cold_load_seconds(self, transfer_bytes: int, host_bytes: int,
+                          h2d_bytes_per_s: Optional[float] = None) -> float:
+        """The load a fresh process pays once its artifact is node-local:
+        framework warm-up + local-disk read + host->HBM promotion. Both
+        the tail of the FS rung score (:meth:`cold_seconds`) and the
+        post-transfer half of a committed FS fetch's ETA."""
+        return (self.warmup_seconds
+                + transfer_bytes / self.disk_bytes_per_s
+                + host_bytes / (h2d_bytes_per_s or self.h2d_bytes_per_s))
+
+    def cold_seconds(self, transfer_bytes: int, host_bytes: int, now: float,
+                     h2d_bytes_per_s: Optional[float] = None) -> float:
+        """Side-effect-free prediction of the FS rung end-to-end: shared-FS
+        fetch at the CURRENT contention level, then the cold load a fresh
+        process pays (:meth:`cold_load_seconds`)."""
+        self._gc(now)
+        return (self._fs_seconds(transfer_bytes, now)
+                + self.cold_load_seconds(transfer_bytes, host_bytes,
+                                         h2d_bytes_per_s))
+
+    def build_seconds(self, transfer_bytes: int) -> float:
+        """Modeled cost of the BUILD rung: framework warm-up plus from-
+        scratch construction of the context payload (weight init + AOT
+        compiles) at ``builder_bytes_per_s``. Deliberately slow per byte —
+        building a paper-size context takes minutes, so BUILD only wins
+        the cost race when there is (almost) nothing to transfer."""
+        return self.warmup_seconds + transfer_bytes / self.builder_bytes_per_s
+
     def peer_plan(self, nbytes: int, donors: Set[str], now: float
                   ) -> Optional[TransferPlan]:
-        """Plan a P2P transfer from the best available donor, or None when
-        every donor is fanout-saturated (the scheduler then either waits
-        for a slot or falls down the ladder)."""
-        for d in self.available_donors(donors, now):
-            sec = self._donor_seconds(d, nbytes)
-            if sec is not None:
-                return self._register(
-                    TransferPlan(source=d, seconds=sec, nbytes=nbytes,
-                                 p2p=True), now)
-        return None
+        """Commit a P2P transfer from the best available donor (the same
+        :meth:`peer_seconds` selection), or None when every donor is
+        saturated (the scheduler then either waits for a slot or takes
+        the cheapest remaining rung)."""
+        best = self.peer_seconds(nbytes, donors, now)
+        if best is None:
+            return None
+        donor, sec = best
+        return self._register(TransferPlan(source=donor, seconds=sec,
+                                           nbytes=nbytes, p2p=True), now)
 
     def fs_plan(self, nbytes: int, now: float,
                 fs_nbytes: Optional[int] = None) -> TransferPlan:
