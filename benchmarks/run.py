@@ -19,6 +19,13 @@ FS-only aggregate bootstrap seconds) and tasks/s under the rq3
 aggressive-preemption capacity trace; writes ``BENCH_cluster.json`` and
 runs in CI as the ``cluster-storm-smoke`` job under a hard timeout.
 
+The ``frontdoor`` section (``--only frontdoor``) benchmarks the streaming
+session front door: continuous batching vs drain-between-waves under the
+same open-loop Poisson session schedule (tokens/s, p50/p99 TTFT, greedy
+parity, zero warm compiles) plus the live multi-tenant session path (shed
+rate under an over-budget tenant); writes ``BENCH_frontdoor.json`` and
+runs in CI as the ``frontdoor-smoke`` job under a hard timeout.
+
   PYTHONPATH=src python -m benchmarks.run [--quick/--full] [--only SECTION]
 """
 
@@ -38,17 +45,34 @@ def main() -> None:
                     help="smoke-sized runs (CI)")
     ap.add_argument("--only", default=None,
                     choices=("paper", "micro", "roofline", "serving", "pcm",
-                             "cluster"))
+                             "cluster", "frontdoor"))
     ap.add_argument("--json-out", default="BENCH_serving.json",
                     help="where the serving section writes its JSON record")
     ap.add_argument("--pcm-json-out", default="BENCH_pcm.json",
                     help="where the pcm section writes its JSON record")
     ap.add_argument("--cluster-json-out", default="BENCH_cluster.json",
                     help="where the cluster section writes its JSON record")
+    ap.add_argument("--frontdoor-json-out", default="BENCH_frontdoor.json",
+                    help="where the frontdoor section writes its JSON record")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     t0 = time.time()
+    if args.only == "frontdoor":
+        # streaming front door: continuous-vs-drain Poisson open-loop run
+        # plus the live multi-tenant session path — run only on request
+        from benchmarks import frontdoor_bench
+        record = frontdoor_bench.bench_frontdoor(quick=args.quick,
+                                                 strict=True)
+        with open(args.frontdoor_json_out, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        eng, live = record["engine"], record["frontdoor_live"]
+        print(f"# wrote {args.frontdoor_json_out} (continuous "
+              f"x{eng['speedup_tokens_per_second']:.2f} tokens/s and "
+              f"x{eng['p99_ttft_improvement']:.1f} p99 TTFT vs drain at "
+              f"{eng['poisson_rate_per_s']:.2f} sessions/s; live "
+              f"{live['tokens_per_second']:.1f} tok/s, shed rate "
+              f"{live['shed_rate']:.2f})", file=sys.stderr)
     if args.only == "cluster":
         # join-storm + elastic-trace benchmark: live workers with real
         # engines — run only on request (not in the default sweep)

@@ -1,13 +1,19 @@
-"""Capacity traces for the paper's four experiment regimes.
+"""Capacity traces for the paper's four experiment regimes, plus the
+open-loop arrival generator for the streaming front door.
 
-A trace is ``capacity_fn(t) -> list[profile_name]`` — the opportunistic
-slots the cluster exposes at time t (what the TaskVine factory sees).
+A capacity trace is ``capacity_fn(t) -> list[profile_name]`` — the
+opportunistic slots the cluster exposes at time t (what the TaskVine
+factory sees). ``poisson_sessions`` is the LOAD side of the same story:
+deterministic open-loop session arrival times, shared by the frontdoor
+benchmark and simulator-backed session tests so both replay the identical
+workload.
 """
 
 from __future__ import annotations
 
 import hashlib
 import math
+import random
 from typing import Callable, List
 
 from repro.cluster.devices import cluster_census
@@ -79,6 +85,28 @@ def rq4_high_capacity(peak: int = 186, ramp_seconds: float = 420.0
         return pool[:max(4, int(peak * frac))]
 
     return capacity
+
+
+def poisson_sessions(rate: float, duration: float,
+                     seed: int = 0) -> List[float]:
+    """Open-loop Poisson session arrivals: sorted arrival times in
+    ``[0, duration)`` with exponential inter-arrival gaps of mean
+    ``1/rate`` (arrivals/second). Deterministic in ``seed`` — the
+    frontdoor benchmark and the simulator backend replay the exact same
+    schedule. Open-loop means arrivals never wait for service: this is the
+    load model that exposes queueing (and shedding) behaviour, unlike
+    closed-loop drivers whose offered load collapses under slowdown."""
+    if rate <= 0:
+        raise ValueError(f"rate must be positive, got {rate}")
+    if duration < 0:
+        raise ValueError(f"duration must be non-negative, got {duration}")
+    rng = random.Random(seed)
+    out: List[float] = []
+    t = rng.expovariate(rate)
+    while t < duration:
+        out.append(t)
+        t += rng.expovariate(rate)
+    return out
 
 
 def churn(base: int = 16, amplitude: int = 8, period: float = 600.0

@@ -235,10 +235,15 @@ class FutureBatch:
 
     def as_completed(self, timeout: Optional[float] = None
                      ) -> Iterator[Future]:
-        """Yield futures as they complete. On a concurrent backend this
-        waits on a condition variable (worker threads progress on their
-        own); on the single-threaded simulator it drives the event loop
-        stepwise."""
+        """Yield futures as they complete — ALWAYS in true completion
+        order, promptly. ``timeout`` is a rolling per-future deadline: it
+        bounds the wait since the LAST yielded completion (reset on every
+        yield), not the whole batch — so one slow future raises after
+        ``timeout`` stalled seconds without ever delaying or suppressing
+        faster completions that keep arriving. On a concurrent backend
+        this waits on a condition variable (worker threads progress on
+        their own); on the single-threaded simulator it drives the event
+        loop stepwise."""
         timeout = self._timeout if timeout is None else timeout
         deadline = None if timeout is None else time.monotonic() + timeout
         concurrent = getattr(self._backend, "concurrent", False)
@@ -247,12 +252,17 @@ class FutureBatch:
             if yielded < len(self._completed):
                 yield self._completed[yielded]
                 yielded += 1
+                # progress resets the rolling deadline: the timeout bounds
+                # the gap to the NEXT completion, so an eventually-slow
+                # future never blocks the prompt ones from being yielded
+                if timeout is not None:
+                    deadline = time.monotonic() + timeout
                 continue
             if deadline is not None and time.monotonic() >= deadline:
                 raise TimeoutError(
                     f"{len(self._futures) - yielded} of "
                     f"{len(self._futures)} futures incomplete after "
-                    f"{timeout:.3f}s")
+                    f"{timeout:.3f}s without progress")
             if concurrent:
                 # completions notify immediately; the 0.1s slice is only a
                 # heartbeat for the stall checks below
@@ -298,6 +308,7 @@ class PCMClient:
         self.backend = backend if backend is not None else PCMManager(
             mode=mode, n_workers=n_workers)
         self._handles: Dict[str, ContextHandle] = {}
+        self._frontdoor = None
 
     # ---------------------------------------------------------- contexts --
     def context(self, builder_or_recipe: Union[Callable, ContextRecipe],
@@ -394,6 +405,46 @@ class PCMClient:
                 fut.add_done_callback(on_done)
             futures.append(fut)
         return FutureBatch(futures, self.backend, timeout=timeout)
+
+    # ------------------------------------------------- streaming sessions --
+    def frontdoor(self, **kwargs) -> "Any":
+        """The client's streaming front door (admission, per-tenant
+        fairness, SLO routing — see ``repro.serving.frontdoor``), created
+        on first use. Configuration kwargs (``quotas``, ``lanes``,
+        ``engine_var``, ...) are accepted only on the creating call."""
+        if self._frontdoor is None:
+            from repro.serving.frontdoor import FrontDoor
+            self._frontdoor = FrontDoor(self.backend, **kwargs)
+        elif kwargs:
+            raise ValueError("front door already configured for this "
+                             "client — pass kwargs on the first call only")
+        return self._frontdoor
+
+    def session(self, context: ContextLike, *, tenant: str = "default",
+                slo=None, session_id: Optional[str] = None):
+        """Open a streaming session against ``context`` (whose built value
+        must expose an InferenceEngine under the front door's
+        ``engine_var``, default ``"engine"``). Works on the live AND
+        simulator backends; ``session.submit(prompt)`` returns a
+        TokenStream or raises ShedError on admission backpressure."""
+        from repro.serving.session import SLOClass
+        return self.frontdoor().open_session(
+            context, tenant=tenant, slo=slo or SLOClass.BATCH,
+            session_id=session_id)
+
+    def stream(self, prompt, *, context: ContextLike,
+               tenant: str = "default", slo=None,
+               max_new_tokens: int = 32, temperature: float = 0.0,
+               stop_tokens: Tuple[int, ...] = (1,)):
+        """One-shot streaming: open an ephemeral session, submit one turn,
+        return its TokenStream (iterate it for tokens as they decode)."""
+        sess = self.session(context, tenant=tenant, slo=slo)
+        try:
+            return sess.submit(prompt, max_new_tokens=max_new_tokens,
+                               temperature=temperature,
+                               stop_tokens=stop_tokens)
+        finally:
+            sess.close()
 
     # ----------------------------------------------------------- session --
     def drain(self) -> int:

@@ -1,9 +1,37 @@
-"""Continuous-batching inference engine built around fused decode megasteps.
+"""Continuously-batched inference engine built around fused decode megasteps.
 
 A fixed number of decode SLOTS share one cache pytree (allocated once — the
 cache, the weights, the per-slot decode state and the AOT-compiled
 prefill/megastep executables together form the PCM *context*; see
 repro.core.library). The execution model:
+
+**Continuous admission.**  The engine never drains between waves: every
+``step()`` first admits queued prefills into whatever slots are free —
+slots freed by the *previous* megastep, including mid-megastep early exits
+(the device loop breaks out as soon as a slot finishes while requests are
+queued) — then runs one decode megastep for the now-larger active set.  A
+request arriving against a busy engine therefore waits at most one
+megastep (≤ K tokens) before its prefill launches, not for the current
+batch to finish.  Greedy outputs are bit-identical regardless of what
+shares the batch (see ``test_batching_invariance``), so continuous
+admission changes *when* requests run, never *what* they generate, and it
+reuses the same AOT executables — zero extra compiles.
+``admission="drain"`` keeps the legacy drain-between-waves behaviour (all
+active slots run to completion before the next wave admits); it exists as
+the measured baseline for the front-door benchmark, not for serving.
+
+**Admission order.**  ``submit`` maintains a priority queue: a request with
+higher ``Request.priority`` (e.g. an interactive-SLO session turn from the
+front door) is inserted ahead of lower-priority queued work — it preempts
+*admission order only*, never a running decode; slots already decoding are
+untouched.  FIFO within a priority class.
+
+**Token streaming.**  A request's ``on_token`` callback fires once per
+generated token, in order, from the engine's existing host sync points
+(the per-wave first-token sync and the one-per-megastep block sync) — so
+streaming costs zero extra device syncs.  Callbacks run on the engine's
+thread: they must be cheap and never raise (exceptions are swallowed and
+reported to stderr; the stream, not the engine, is what breaks).
 
 **What is resident in a context.**  Everything the steady-state loop needs
 lives on device for the lifetime of the engine: the weights, the slot
@@ -65,7 +93,9 @@ from __future__ import annotations
 
 import collections
 import functools
+import sys
 import time
+import traceback
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -98,7 +128,12 @@ class InferenceEngine:
                  donate_cache: bool = True,
                  megastep: int = 1,
                  decode_buckets: Optional[Sequence[int]] = None,
-                 max_stop_tokens: int = 4):
+                 max_stop_tokens: int = 4,
+                 admission: str = "continuous"):
+        if admission not in ("continuous", "drain"):
+            raise ValueError(f"admission must be 'continuous' or 'drain', "
+                             f"got {admission!r}")
+        self.admission = admission
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -490,19 +525,29 @@ class InferenceEngine:
                              f"{self.max_stop_tokens}")
         if any(t < 0 for t in req.stop_tokens):
             raise ValueError("stop tokens must be non-negative ids")
-        self.queue.append(req)
+        if req.priority > 0:
+            # admission-order preemption: ahead of every queued request of
+            # strictly lower priority, behind equal-or-higher (FIFO within
+            # class) — running decodes are never disturbed
+            idx = next((i for i, q in enumerate(self.queue)
+                        if q.priority < req.priority), len(self.queue))
+            self.queue.insert(idx, req)
+        else:
+            self.queue.append(req)
         return req
 
     def has_work(self) -> bool:
         return bool(self.queue or self.active)
 
     def step(self) -> List[Request]:
-        """One scheduling step: admit a prefill wave if possible, then one
-        decode megastep (up to K tokens) for all active slots. Returns
-        finished requests."""
+        """One scheduling step: admit queued prefills into free slots, then
+        one decode megastep (up to K tokens) for all active slots. Returns
+        finished requests. In ``drain`` mode admission additionally waits
+        for the whole active set to finish."""
         self._require_resident()
         finished: List[Request] = []
-        if self.queue and self.free_slots:
+        if self.queue and self.free_slots and (
+                self.admission == "continuous" or not self.active):
             finished.extend(self._admit_wave())
         if self.active:
             finished.extend(self._megastep_wave())
@@ -571,10 +616,13 @@ class InferenceEngine:
         now = time.monotonic()
         done: List[Request] = []
         for i, r in enumerate(wave):
-            r.generated.append(int(first_np[i]))
+            tok = int(first_np[i])
+            r.generated.append(tok)
             r.first_token_time = now
             r.state = RequestState.DECODING
             self._host_lengths[r.slot] = len(r.prompt)
+            if r.on_token is not None:
+                self._emit(r, tok, 0)
             if row_active_np[i]:
                 self.active[r.slot] = r
             else:
@@ -593,7 +641,11 @@ class InferenceEngine:
          self.gen_counts, self._rng, block, produced) = exe(
             self.params, self.cache, self.lengths, self.last_tokens,
             self.temps, self.active_mask, self.gen_counts, self.max_news,
-            self.stop_table, self._rng, jnp.asarray(bool(self.queue)))
+            self.stop_table, self._rng,
+            # a drain engine never admits mid-batch, so freeing a slot early
+            # cannot help anyone — the loop runs its full K
+            jnp.asarray(bool(self.queue)
+                        and self.admission == "continuous"))
 
         # the single host sync for up to K tokens across all slots
         block_np, produced_np, active_np = jax.device_get(
@@ -603,7 +655,12 @@ class InferenceEngine:
         for s, r in list(self.active.items()):
             k = int(produced_np[s])
             if k:
-                r.generated.extend(int(t) for t in block_np[s, :k])
+                base = len(r.generated)
+                toks = [int(t) for t in block_np[s, :k]]
+                r.generated.extend(toks)
+                if r.on_token is not None:
+                    for j, t in enumerate(toks):
+                        self._emit(r, t, base + j)
             if not active_np[s]:
                 del self.active[s]
                 done.append(self._finish(r, now))
@@ -615,6 +672,18 @@ class InferenceEngine:
         self.stats.megasteps += 1
         self.stats.decode_seconds += time.monotonic() - t0
         return done
+
+    def _emit(self, r: Request, token: int, index: int):
+        """Fire a request's streaming callback. A raising callback must
+        never wedge the engine (other slots' requests share the batch), so
+        exceptions are reported and dropped — the stream breaks, not the
+        engine."""
+        try:
+            r.on_token(r, token, index)
+        except BaseException:
+            print(f"on_token callback failed for request {r.request_id}:",
+                  file=sys.stderr)
+            traceback.print_exc(file=sys.stderr)
 
     def _finish(self, r: Request, now: Optional[float] = None) -> Request:
         r.state = RequestState.DONE
@@ -628,6 +697,7 @@ class InferenceEngine:
         return {
             "active": len(self.active), "queued": len(self.queue),
             "free_slots": len(self.free_slots),
+            "admission": self.admission,
             "offloaded": self.offloaded,
             "cache_bytes": (0 if self.offloaded
                             else kvcache.cache_bytes(self.cache)),

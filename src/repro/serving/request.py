@@ -6,7 +6,7 @@ import enum
 import itertools
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 _ids = itertools.count()
 
@@ -35,10 +35,26 @@ class Request:
     # sync, so timing is tracked at block granularity
     first_token_time: Optional[float] = None
     finished_time: Optional[float] = None
+    # streaming: fired as (request, token, index) from the engine's host
+    # sync points — once per generated token, in generation order
+    on_token: Optional[Callable[["Request", int, int], None]] = None
+    # admission class: higher jumps ahead of lower in the engine queue
+    # (never preempts running decodes) — the front door maps
+    # SLOClass.INTERACTIVE here
+    priority: int = 0
 
     @property
     def done(self) -> bool:
         return self.state in (RequestState.DONE, RequestState.CANCELLED)
+
+    @property
+    def ttft_seconds(self) -> Optional[float]:
+        """Time to first token: queueing + admission + prefill. This is the
+        latency half of the metric split — never folded into decode
+        throughput."""
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
 
     @property
     def decode_seconds(self) -> Optional[float]:
@@ -49,11 +65,26 @@ class Request:
 
     @property
     def tokens_per_second(self) -> Optional[float]:
-        """Per-request decode throughput over the generated block(s)."""
+        """Per-request DECODE throughput: tokens after the first over the
+        ``first_token``-relative window only. Prefill and queueing time are
+        deliberately excluded from the denominator — they belong to
+        ``ttft_seconds`` — so streamed requests never conflate the two
+        (``end_to_end_tokens_per_second`` is the conflated whole-lifetime
+        rate, reported alongside, never in place of this)."""
         dt = self.decode_seconds
         if dt is None or len(self.generated) <= 1:
             return None
         return (len(self.generated) - 1) / max(dt, 1e-9)
+
+    @property
+    def end_to_end_tokens_per_second(self) -> Optional[float]:
+        """Whole-lifetime rate (arrival -> finish, prefill + queueing in
+        the denominator). Useful for capacity math; NOT a decode-speed
+        metric."""
+        if self.finished_time is None or not self.generated:
+            return None
+        dt = self.finished_time - self.arrival_time
+        return len(self.generated) / max(dt, 1e-9)
 
 
 @dataclass

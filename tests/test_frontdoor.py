@@ -1,0 +1,470 @@
+"""Streaming session front door: admission, fairness, routing, streaming
+over the live concurrent runtime and the simulator, and the live/sim
+decision-parity contract extended to sessions."""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster.traces import poisson_sessions
+from repro.configs import get_reduced_config
+from repro.core import ContextMode, PCMClient, PCMManager, SimulatorBackend, \
+    load_context, make_recipe
+from repro.models import build_model
+from repro.serving import (AdmissionController, InferenceEngine, SLOClass,
+                           ShedError, StreamError, TenantQuota, TokenBucket,
+                           TokenStream, Turn)
+
+
+# ------------------------------------------------------- poisson arrivals --
+class TestPoissonSessions:
+    def test_deterministic_in_seed(self):
+        a = poisson_sessions(5.0, 30.0, seed=4)
+        b = poisson_sessions(5.0, 30.0, seed=4)
+        c = poisson_sessions(5.0, 30.0, seed=5)
+        assert a == b
+        assert a != c
+
+    def test_shape_and_rate(self):
+        rate, duration = 50.0, 40.0
+        arr = poisson_sessions(rate, duration, seed=1)
+        assert arr == sorted(arr)
+        assert all(0.0 <= t < duration for t in arr)
+        # ~2000 expected arrivals: count within 4 sigma, mean gap ~ 1/rate
+        assert abs(len(arr) - rate * duration) < 4 * (rate * duration) ** .5
+        gaps = [b - a for a, b in zip(arr, arr[1:])]
+        assert sum(gaps) / len(gaps) == pytest.approx(1 / rate, rel=0.15)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            poisson_sessions(0.0, 10.0)
+        with pytest.raises(ValueError):
+            poisson_sessions(1.0, -1.0)
+        assert poisson_sessions(1.0, 0.0) == []
+
+
+# ------------------------------------------------------ admission control --
+def _turn(tenant="t", slo=SLOClass.BATCH, cost=16, ctx="ctx", lane=0):
+    return Turn(session_id=f"{tenant}-s", tenant=tenant, slo=slo,
+                ctx_key=ctx, lane=lane, prompt=[2] * (cost - 8),
+                max_new_tokens=8, stream=TokenStream(0))
+
+
+class TestTokenBucket:
+    def test_burst_then_refill(self):
+        b = TokenBucket(rate=10.0, burst=20.0, now=0.0)
+        assert b.try_take(20, now=0.0)
+        assert not b.try_take(1, now=0.0)
+        assert b.retry_after(10, now=0.0) == pytest.approx(1.0)
+        assert b.try_take(10, now=1.0)          # refilled 10 tokens
+        assert b.retry_after(999, now=1.0) is None   # can never fit
+
+    def test_unlimited(self):
+        b = TokenBucket(rate=float("inf"), burst=1.0, now=0.0)
+        assert all(b.try_take(1e9, now=0.0) for _ in range(100))
+
+
+class TestAdmissionController:
+    def test_rate_limit_shed_carries_retry_after(self):
+        ac = AdmissionController(default_quota=TenantQuota(
+            tokens_per_second=1.0, burst_tokens=20.0, max_queued_turns=99))
+        ac.admit(_turn(cost=16), now=0.0)
+        with pytest.raises(ShedError) as e:
+            ac.admit(_turn(cost=16), now=0.0)
+        assert e.value.reason == "rate_limit"
+        assert e.value.retry_after_seconds == pytest.approx(12.0)
+        assert ac.stats()["shed_by_tenant"] == {"t": 1}
+
+    def test_queue_full_shed(self):
+        ac = AdmissionController(default_quota=TenantQuota(
+            max_queued_turns=2))
+        ac.admit(_turn(), now=0.0)
+        ac.admit(_turn(), now=0.0)
+        with pytest.raises(ShedError) as e:
+            ac.admit(_turn(), now=0.0)
+        assert e.value.reason == "queue_full"
+        # a claim frees queue depth; admission recovers (backpressure, not
+        # a permanent ban)
+        assert ac.claim(None, now=0.0) is not None
+        ac.admit(_turn(), now=0.0)
+
+    def test_interactive_claimed_before_earlier_batch(self):
+        ac = AdmissionController()
+        batch = [_turn(tenant="b") for _ in range(3)]
+        for t in batch:
+            ac.admit(t, now=0.0)
+        inter = _turn(tenant="i", slo=SLOClass.INTERACTIVE)
+        ac.admit(inter, now=0.0)
+        assert ac.claim(None, now=0.0) is inter      # jumps the queue
+        assert ac.claim(None, now=0.0) is batch[0]   # FIFO after that
+
+    def test_drr_fairness_interleaves_flood(self):
+        """A tenant flooding the batch queue must not starve a light
+        tenant: DRR interleaves claims instead of draining the flood."""
+        ac = AdmissionController(drr_quantum=32.0)
+        flood = [_turn(tenant="hog", cost=32) for _ in range(10)]
+        light = [_turn(tenant="mouse", cost=32) for _ in range(2)]
+        for t in flood[:5]:
+            ac.admit(t, now=0.0)
+        for t in light:
+            ac.admit(t, now=0.0)
+        for t in flood[5:]:
+            ac.admit(t, now=0.0)
+        order = [ac.claim(None, now=0.0).tenant for _ in range(12)]
+        assert ac.claim(None, now=0.0) is None
+        # both of mouse's turns served within the first two DRR rounds,
+        # not after hog's 10-deep backlog
+        assert set(order[:4]) == {"hog", "mouse"}
+        assert order.count("mouse") == 2 and order.count("hog") == 10
+
+    def test_claim_scoped_to_context_lane(self):
+        ac = AdmissionController()
+        a = _turn(ctx="A", lane=0)
+        b = _turn(ctx="B", lane=1)
+        ac.admit(a, now=0.0)
+        ac.admit(b, now=0.0)
+        assert ac.claim(("B", 1), now=0.0) is b
+        assert ac.claim(("B", 1), now=0.0) is None
+        assert ac.pending_for(("A", 0)) == 1
+        assert ac.claim(None, now=0.0) is a
+
+
+# ----------------------------------------------------------- token stream --
+class TestTokenStream:
+    def test_exactly_once_by_index_and_divergence(self):
+        s = TokenStream(0)
+        assert s.push(0, 7) and s.push(1, 8)
+        assert not s.push(1, 8)                  # duplicate replay: dropped
+        with pytest.raises(StreamError):
+            s.push(1, 9)                         # divergent replay: greedy
+        s2 = TokenStream(1)                      # bit-parity broke -> raise
+        with pytest.raises(StreamError):
+            s2.push(2, 5)                        # gap
+
+    def test_iteration_and_result(self):
+        s = TokenStream(0)
+        got = []
+        t = threading.Thread(target=lambda: got.extend(s))
+        t.start()
+        for i, tok in enumerate([4, 5, 6]):
+            s.push(i, tok)
+            time.sleep(0.01)
+        s.finish()
+        t.join(timeout=5)
+        assert got == [4, 5, 6] and s.result(timeout=1) == [4, 5, 6]
+        assert s.finish() is None                # idempotent
+
+    def test_error_propagates_to_consumer(self):
+        s = TokenStream(0)
+        s.push(0, 1)
+        s.finish(error=RuntimeError("pump died"))
+        with pytest.raises(RuntimeError, match="pump died"):
+            s.result(timeout=1)
+
+    def test_consumer_timeout_is_per_token(self):
+        s = TokenStream(0)
+        with pytest.raises(TimeoutError):
+            list(s.tokens(timeout=0.05))
+
+
+# ------------------------------------------- as_completed rolling timeout --
+class TestAsCompletedRollingTimeout:
+    def test_per_future_deadline_resets_on_progress(self):
+        """Regression: timeout bounds the gap between completions, not the
+        whole batch — three 0.25s tasks on one worker (serialized, ~0.75s
+        total) must all be yielded with timeout=0.6."""
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=1)
+        try:
+            client = PCMClient(backend=mgr)
+            batch = client.map(time.sleep, [0.25, 0.25, 0.25])
+            done = list(batch.as_completed(timeout=0.6))
+            assert len(done) == 3
+        finally:
+            mgr.shutdown()
+
+    def test_stall_still_raises(self):
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=1)
+        try:
+            client = PCMClient(backend=mgr)
+            batch = client.map(time.sleep, [0.05, 2.0])
+            with pytest.raises(TimeoutError):
+                list(batch.as_completed(timeout=0.4))
+        finally:
+            mgr.shutdown()
+
+
+# ----------------------------------------------------- live + sim sessions --
+@pytest.fixture(scope="module")
+def smol():
+    cfg = get_reduced_config("smollm2-1.7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def prompts(cfg, n, seed=0):
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(8, cfg.vocab_size,
+                             size=rng.randint(3, 14))) for _ in range(n)]
+
+
+def engine_recipe(model, params, builds, name="fd.engine"):
+    def build():
+        builds.append(1)
+        return {"engine": InferenceEngine(
+            model, params, slots=2, cache_len=64, prefill_buckets=(16,),
+            megastep=4)}
+
+    # default (nonzero) footprint: the snapshot is transfer-worthy, so a
+    # preempted worker's context recovers via POOL/DISK instead of BUILD
+    return make_recipe(name, build)
+
+
+class TestLiveFrontDoor:
+    def test_session_streams_match_direct_engine(self, smol):
+        """Tokens streamed through open_session/submit must be
+        bit-identical to the same prompts run directly on an identical
+        engine — and serving must do zero context builds beyond warm-up."""
+        cfg, model, params = smol
+        ps = prompts(cfg, 6, seed=2)
+        ref_eng = InferenceEngine(model, params, slots=2, cache_len=64,
+                                  prefill_buckets=(16,), megastep=4)
+        ref = ref_eng.generate(ps, max_new_tokens=8)
+
+        builds = []
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=2)
+        try:
+            client = PCMClient(backend=mgr)
+            ctx = client.context(engine_recipe(model, params, builds))
+            ctx.warm_up()
+            warm_builds = len(builds)
+            with client.session(ctx, tenant="acme") as sess:
+                streams = [sess.submit(p, max_new_tokens=8) for p in ps]
+                outs = [list(s) for s in streams]       # consume by iter
+            assert outs == ref
+            assert [s.result(timeout=5) for s in streams] == ref
+            assert all(s.ttft_seconds is not None and s.ttft_seconds >= 0
+                       for s in streams)
+            assert len(builds) == warm_builds
+            fd = client.frontdoor()
+            assert fd.stats()["turns_completed"] == 6
+            assert fd.stats()["admission"]["shed_rate"] == 0.0
+        finally:
+            mgr.shutdown()
+
+    def test_client_stream_one_shot(self, smol):
+        cfg, model, params = smol
+        p = prompts(cfg, 1, seed=6)[0]
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=1)
+        try:
+            client = PCMClient(backend=mgr)
+            ctx = client.context(engine_recipe(model, params, []))
+            toks = list(client.stream(p, context=ctx, max_new_tokens=5))
+            assert 1 <= len(toks) <= 5
+        finally:
+            mgr.shutdown()
+
+    def test_interactive_mid_run_beats_saturated_batch_queue(self, smol):
+        """An INTERACTIVE turn submitted against a pool saturated with
+        queued batch turns must stream its first token before the batch
+        backlog drains (admission-order preemption, live backend)."""
+        cfg, model, params = smol
+        ps = prompts(cfg, 9, seed=4)
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=1)
+        try:
+            client = PCMClient(backend=mgr)
+            ctx = client.context(engine_recipe(model, params, []))
+            ctx.warm_up()
+            batch_sess = client.session(ctx, tenant="bulk")
+            # 8 batch turns on a 2-slot engine: the pool is saturated and
+            # a deep batch backlog is queued at the front door
+            batch = [batch_sess.submit(p, max_new_tokens=16)
+                     for p in ps[:8]]
+            inter_sess = client.session(ctx, tenant="person",
+                                        slo=SLOClass.INTERACTIVE)
+            inter = inter_sess.submit(ps[8], max_new_tokens=16)
+            inter.result(timeout=120)
+            for b in batch:
+                b.result(timeout=120)
+            # first token of the late interactive turn arrived before the
+            # backlog's tail got ITS first token (it jumped the queue) ...
+            assert inter.first_token_at < max(b.first_token_at
+                                              for b in batch)
+            # ... but running decodes were never preempted: every batch
+            # turn finished with its full token budget intact
+            assert all(len(b.result(timeout=5)) >= 1 for b in batch)
+        finally:
+            mgr.shutdown()
+
+    def test_over_budget_tenant_shed_live(self, smol):
+        cfg, model, params = smol
+        ps = prompts(cfg, 4, seed=8)
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=1)
+        try:
+            client = PCMClient(backend=mgr)
+            ctx = client.context(engine_recipe(model, params, []))
+            quota = TenantQuota(tokens_per_second=0.001,
+                                burst_tokens=float(len(ps[0]) + 8),
+                                max_queued_turns=8)
+            client.frontdoor(quotas={"cheap": quota})
+            sess = client.session(ctx, tenant="cheap")
+            first = sess.submit(ps[0], max_new_tokens=8)
+            with pytest.raises(ShedError) as e:
+                for p in ps[1:]:
+                    sess.submit(p, max_new_tokens=8)
+            assert e.value.reason == "rate_limit"
+            assert first.result(timeout=120)    # admitted turn unaffected
+            assert client.frontdoor().stats()["admission"][
+                "shed_by_tenant"]["cheap"] >= 1
+        finally:
+            mgr.shutdown()
+
+    def test_stream_survives_worker_preemption(self, smol):
+        """Mid-stream preemption: the session keeps streaming (zombie pump
+        finishes its invocation; the requeued pump re-acquires the context
+        through the ladder) with zero builder calls and zero engine
+        recompiles — outputs bit-identical to an undisturbed engine."""
+        cfg, model, params = smol
+        ps = prompts(cfg, 3, seed=10)
+        ref = InferenceEngine(model, params, slots=2, cache_len=64,
+                              prefill_buckets=(16,), megastep=4
+                              ).generate(ps, max_new_tokens=24)
+        builds = []
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=1)
+        try:
+            client = PCMClient(backend=mgr)
+            rec = engine_recipe(model, params, builds)
+            ctx = client.context(rec)
+            ctx.warm_up()
+            assert len(builds) == 1
+            compiles = client.submit(
+                lambda: load_context("engine").stats.compiles,
+                context=ctx).result(timeout=120)
+            sess = client.session(ctx, tenant="durable")
+            streams = [sess.submit(p, max_new_tokens=24) for p in ps]
+            # wait until tokens are actually flowing, then yank the device
+            assert streams[0].result(timeout=120) == ref[0]
+            victim = next(iter(mgr.workers))
+            mgr.preempt_worker(victim)
+            # the preempted worker finishes the invocation it cannot
+            # abandon (streams keep flowing), then demotes its contexts
+            # into the node snapshot pool; the replacement joins after and
+            # recovers through the ladder's POOL/DISK rungs
+            deadline = time.monotonic() + 60
+            while (mgr.snapshots.tier(rec.key()) is None
+                   and time.monotonic() < deadline):
+                time.sleep(0.05)
+            assert mgr.snapshots.tier(rec.key()) is not None
+            mgr.add_worker()
+            outs = [s.result(timeout=120) for s in streams]
+            assert outs == ref
+            assert len(builds) == 1             # restore, never rebuild
+            from repro.core import FetchSource
+            mgr.run_until_idle(timeout=60)
+            assert any(d.source in (FetchSource.POOL, FetchSource.DISK)
+                       for d in mgr.fetch_history(rec))
+            compiles_after = client.submit(
+                lambda: load_context("engine").stats.compiles,
+                context=ctx).result(timeout=120)
+            assert compiles_after == compiles   # zero recompiles
+        finally:
+            mgr.shutdown()
+
+
+class TestSimFrontDoor:
+    def test_sessions_on_simulator_backend(self):
+        backend = SimulatorBackend(n_workers=2)
+        client = PCMClient(backend=backend)
+        ctx = client.context(make_recipe("sim.ctx", lambda: {"v": 1}))
+        ctx.warm_up()
+        with client.session(ctx, tenant="acme") as sess:
+            streams = [sess.submit([3, 4, 5], max_new_tokens=8)
+                       for _ in range(5)]
+        outs = [s.result(timeout=30) for s in streams]
+        assert all(len(o) == 1 for o in outs)        # one modeled token
+        assert all(s.sim_result is not None for s in streams)
+        assert client.frontdoor().stats()["turns_completed"] == 5
+
+    def test_interactive_beats_batch_backlog_sim(self):
+        """Same admission-order contract as the live test, on the modeled
+        backend: a late INTERACTIVE turn is dispatched (and completes)
+        ahead of the queued batch backlog."""
+        backend = SimulatorBackend(n_workers=1)
+        client = PCMClient(backend=backend)
+        ctx = client.context(make_recipe("sim.slo", lambda: {"v": 1}))
+        ctx.warm_up()
+        bulk = client.session(ctx, tenant="bulk")
+        batch = [bulk.submit([2] * 4, max_new_tokens=8) for _ in range(6)]
+        inter = client.session(ctx, tenant="person",
+                               slo=SLOClass.INTERACTIVE
+                               ).submit([2] * 4, max_new_tokens=8)
+        inter.result(timeout=30)
+        for b in batch:
+            b.result(timeout=30)
+        assert (inter.sim_result.finished_at
+                <= max(b.sim_result.finished_at for b in batch))
+
+    def test_over_budget_tenant_shed_sim_matches_live_decision(self):
+        """Live/sim decision parity for admission: the same quota and the
+        same turn sequence shed at the same point with the same reason on
+        the modeled backend (admission runs on backend.now either way)."""
+        backend = SimulatorBackend(n_workers=1)
+        client = PCMClient(backend=backend)
+        ctx = client.context(make_recipe("sim.quota", lambda: {"v": 1}))
+        ctx.warm_up()
+        quota = TenantQuota(tokens_per_second=0.001, burst_tokens=12.0,
+                            max_queued_turns=8)
+        client.frontdoor(quotas={"cheap": quota})
+        sess = client.session(ctx, tenant="cheap")
+        sess.submit([2] * 4, max_new_tokens=8)       # cost 12: fits burst
+        with pytest.raises(ShedError) as e:
+            sess.submit([2] * 4, max_new_tokens=8)
+        assert e.value.reason == "rate_limit"
+        st = client.frontdoor().stats()["admission"]
+        assert st["admitted"] == 1 and st["shed"] == {"rate_limit": 1}
+
+    def test_routing_lanes_sticky_and_parity_with_live(self, smol):
+        """Sessions hash to sticky lanes identically on both backends, and
+        the front door's pump placement flows through the same FetchSource
+        ladder vocabulary live and simulated."""
+        cfg, model, params = smol
+        ps = prompts(cfg, 4, seed=12)
+
+        mgr = PCMManager(mode=ContextMode.FULL, n_workers=2)
+        try:
+            client = PCMClient(backend=mgr)
+            ctx = client.context(engine_recipe(model, params, []))
+            ctx.warm_up()
+            fd = client.frontdoor(lanes=2)
+            live_lanes = []
+            for i, p in enumerate(ps):
+                with client.session(ctx, session_id=f"sess-{3 + i}",
+                                    tenant="acme") as sess:
+                    live_lanes.append(sess.lane)
+                    sess.submit(p, max_new_tokens=6).result(timeout=120)
+            live_sources = {d.source for d in mgr.fetch_history()}
+            live_stats = fd.stats()["admission"]
+        finally:
+            mgr.shutdown()
+
+        backend = SimulatorBackend(n_workers=2)
+        sclient = PCMClient(backend=backend)
+        sctx = sclient.context(make_recipe("fd.engine", lambda: {"v": 1}))
+        sctx.warm_up()
+        sfd = sclient.frontdoor(lanes=2)
+        sim_lanes = []
+        for i, p in enumerate(ps):
+            with sclient.session(sctx, session_id=f"sess-{3 + i}",
+                                 tenant="acme") as sess:
+                sim_lanes.append(sess.lane)
+                sess.submit(p, max_new_tokens=6).result(timeout=30)
+        assert sim_lanes == live_lanes               # same crc32 routing
+        assert len(set(live_lanes)) == 2             # both lanes exercised
+        sim_sources = {d.source for d in backend.fetch_history()}
+        assert live_sources == sim_sources           # same ladder decisions
+        sim_stats = sfd.stats()["admission"]
+        assert (live_stats["admitted"], live_stats["shed"]) == \
+               (sim_stats["admitted"], sim_stats["shed"])

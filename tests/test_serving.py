@@ -195,6 +195,135 @@ def test_megastep_prefix_buckets_parity(smol):
            ("megastep", 8, 64, False) in bucketed._exe
 
 
+def test_drain_vs_continuous_greedy_parity(smol):
+    """Mid-stream admission (continuous) must not change any request's
+    greedy output vs drain-between-waves: batching invariance extended to
+    the admission policy."""
+    cfg, model, params = smol
+    ps = prompts(cfg, 7, seed=23)
+    outs = {}
+    for mode in ("continuous", "drain"):
+        eng = InferenceEngine(model, params, slots=2, cache_len=64,
+                              prefill_buckets=(16,), megastep=4,
+                              admission=mode)
+        # two-phase arrival: the second batch lands while the first is
+        # mid-decode, so continuous admits into a live wave
+        reqs = [eng.submit(Request(prompt=list(p), max_new_tokens=6))
+                for p in ps[:3]]
+        eng.step()
+        reqs += [eng.submit(Request(prompt=list(p), max_new_tokens=6))
+                 for p in ps[3:]]
+        eng.run_to_completion()
+        outs[mode] = [r.generated for r in reqs]
+    assert outs["continuous"] == outs["drain"]
+    with pytest.raises(ValueError):
+        InferenceEngine(model, params, slots=1, cache_len=32,
+                        admission="bogus")
+
+
+def test_continuous_admits_on_slot_free(smol):
+    """A queued prefill must be admitted the megastep after a slot frees —
+    not after the whole wave drains."""
+    cfg, model, params = smol
+    ps = prompts(cfg, 3, seed=29)
+
+    def run(mode):
+        eng = InferenceEngine(model, params, slots=2, cache_len=64,
+                              prefill_buckets=(16,), megastep=2,
+                              admission=mode)
+        eng.submit(Request(prompt=list(ps[0]), max_new_tokens=2))   # short
+        eng.submit(Request(prompt=list(ps[1]), max_new_tokens=16))  # long
+        eng.submit(Request(prompt=list(ps[2]), max_new_tokens=4))   # queued
+        overlapped = False
+        while eng.has_work():
+            eng.step()
+            snap = eng.snapshot()
+            if snap["queued"] == 0 and snap["active"] == 2:
+                overlapped = True       # 3rd admitted while long one runs
+        return overlapped
+
+    assert run("continuous"), \
+        "continuous admission never overlapped the queued request"
+    assert not run("drain"), \
+        "drain admitted mid-wave — it is not a drain baseline"
+
+
+def test_streaming_token_callbacks(smol):
+    """on_token must fire once per generated token, in order, with
+    contiguous indices, and the callback sequence must equal generated."""
+    cfg, model, params = smol
+    eng = InferenceEngine(model, params, slots=2, cache_len=64,
+                          prefill_buckets=(16,), megastep=4)
+    seen = {}
+    reqs = []
+    for p in prompts(cfg, 5, seed=31):
+        r = Request(prompt=list(p), max_new_tokens=7,
+                    on_token=lambda req, tok, i: seen.setdefault(
+                        id(req), []).append((i, tok)))
+        reqs.append(eng.submit(r))
+    eng.run_to_completion()
+    for r in reqs:
+        pairs = seen[id(r)]
+        assert [i for i, _ in pairs] == list(range(len(r.generated)))
+        assert [t for _, t in pairs] == r.generated
+
+
+def test_streaming_callback_error_does_not_break_engine(smol):
+    cfg, model, params = smol
+    eng = InferenceEngine(model, params, slots=1, cache_len=64,
+                          prefill_buckets=(16,))
+    ps = prompts(cfg, 2, seed=37)
+
+    def boom(req, tok, i):
+        raise RuntimeError("stream consumer crashed")
+
+    r1 = eng.submit(Request(prompt=list(ps[0]), max_new_tokens=4,
+                            on_token=boom))
+    r2 = eng.submit(Request(prompt=list(ps[1]), max_new_tokens=4))
+    eng.run_to_completion()
+    assert len(r1.generated) >= 1 and len(r2.generated) >= 1
+
+
+def test_priority_jumps_admission_queue(smol):
+    """priority>0 (interactive) requests are admitted ahead of queued
+    batch requests but never preempt running decodes."""
+    cfg, model, params = smol
+    eng = InferenceEngine(model, params, slots=1, cache_len=64,
+                          prefill_buckets=(16,), megastep=2)
+    ps = prompts(cfg, 4, seed=41)
+    running = eng.submit(Request(prompt=list(ps[0]), max_new_tokens=6))
+    eng.step()                                  # occupy the only slot
+    batch1 = eng.submit(Request(prompt=list(ps[1]), max_new_tokens=2))
+    batch2 = eng.submit(Request(prompt=list(ps[2]), max_new_tokens=2))
+    inter = eng.submit(Request(prompt=list(ps[3]), max_new_tokens=2,
+                               priority=1))
+    assert list(eng.queue) == [inter, batch1, batch2]
+    eng.run_to_completion()
+    # the running decode was never preempted, and the interactive request
+    # got its first token before either batch request
+    assert running.first_token_time < inter.first_token_time
+    assert inter.first_token_time < batch1.first_token_time
+    assert inter.first_token_time < batch2.first_token_time
+
+
+def test_request_metric_split(smol):
+    """tokens_per_second is decode-only (first_token-relative);
+    end_to_end_tokens_per_second includes queueing+prefill; ttft_seconds
+    is the gap between them."""
+    from repro.serving.request import Request as Req
+    r = Req(prompt=[1, 2, 3])
+    r.arrival_time = 100.0
+    r.first_token_time = 102.0
+    r.finished_time = 104.0
+    r.generated = [5, 6, 7, 8]
+    assert r.ttft_seconds == pytest.approx(2.0)
+    assert r.decode_seconds == pytest.approx(2.0)
+    # 3 decode steps after the first token over 2s — prefill excluded
+    assert r.tokens_per_second == pytest.approx(3 / 2.0)
+    # all 4 tokens over the 4s the client actually waited
+    assert r.end_to_end_tokens_per_second == pytest.approx(4 / 4.0)
+
+
 def test_temperature_sampling_differs(smol):
     cfg, model, params = smol
     ps = prompts(cfg, 2, seed=5)
