@@ -26,6 +26,13 @@ parity, zero warm compiles) plus the live multi-tenant session path (shed
 rate under an over-budget tenant); writes ``BENCH_frontdoor.json`` and
 runs in CI as the ``frontdoor-smoke`` job under a hard timeout.
 
+The ``paged`` section (``--only paged``) benchmarks the paged KV cache:
+concurrent-session multiplier at exactly the slot engine's allocated
+cache bytes, paged-vs-contiguous warm decode tokens/s (greedy outputs
+bit-identical, zero warm compiles), and mid-stream snapshot shrink (live
+pages only); writes ``BENCH_paged.json`` and runs in CI as the
+``paged-smoke`` job under a hard timeout.
+
   PYTHONPATH=src python -m benchmarks.run [--quick/--full] [--only SECTION]
 """
 
@@ -45,7 +52,7 @@ def main() -> None:
                     help="smoke-sized runs (CI)")
     ap.add_argument("--only", default=None,
                     choices=("paper", "micro", "roofline", "serving", "pcm",
-                             "cluster", "frontdoor"))
+                             "cluster", "frontdoor", "paged"))
     ap.add_argument("--json-out", default="BENCH_serving.json",
                     help="where the serving section writes its JSON record")
     ap.add_argument("--pcm-json-out", default="BENCH_pcm.json",
@@ -54,6 +61,8 @@ def main() -> None:
                     help="where the cluster section writes its JSON record")
     ap.add_argument("--frontdoor-json-out", default="BENCH_frontdoor.json",
                     help="where the frontdoor section writes its JSON record")
+    ap.add_argument("--paged-json-out", default="BENCH_paged.json",
+                    help="where the paged section writes its JSON record")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -73,6 +82,20 @@ def main() -> None:
               f"{eng['poisson_rate_per_s']:.2f} sessions/s; live "
               f"{live['tokens_per_second']:.1f} tok/s, shed rate "
               f"{live['shed_rate']:.2f})", file=sys.stderr)
+    if args.only == "paged":
+        # paged KV cache: session multiplier at fixed HBM, decode parity
+        # and snapshot shrink — run only on request
+        from benchmarks import paged_bench
+        record = paged_bench.bench_paged(quick=args.quick, strict=True)
+        with open(args.paged_json_out, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        ses, thr = record["sessions"], record["throughput"]
+        print(f"# wrote {args.paged_json_out} "
+              f"(x{ses['session_multiplier']:.1f} concurrent sessions at "
+              f"{ses['capacity_bytes']} cache bytes, decode "
+              f"x{thr['ratio_paged_vs_slot']:.2f} vs contiguous, snapshot "
+              f"shrink x{record['snapshot']['shrink_ratio']:.1f})",
+              file=sys.stderr)
     if args.only == "cluster":
         # join-storm + elastic-trace benchmark: live workers with real
         # engines — run only on request (not in the default sweep)

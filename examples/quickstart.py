@@ -76,6 +76,23 @@ drain. ``python -m benchmarks.run --only frontdoor`` measures
 continuous-vs-drain tokens/s and p50/p99 TTFT under an open-loop Poisson
 session load (BENCH_frontdoor.json).
 
+Paged KV cache (``paged=True``). The contiguous slot cache pays
+``slots x cache_len`` positions per leaf whether a slot holds 12 tokens
+or 512, so sessions-per-GPU is capped by allocated capacity. With
+``InferenceEngine(..., paged=True, page_size=...)`` the cache becomes a
+shared pool of fixed-size pages behind a per-slot page table: a request
+reserves ``ceil(tokens / page)`` pages at admission and frees them at
+finish, so concurrency is bounded by LIVE tokens — at the exact same HBM
+bytes the engine holds several times the sessions. Greedy outputs stay
+bit-identical to the slot cache, warm paths still compile nothing, and
+demotion/peer transfer ships only the live pages (``snapshot()`` splits
+``capacity_bytes`` from ``live_bytes``). Attention families page (dense
+GQA and MLA latents, routed through Pallas paged-decode kernels when
+``cfg.use_kernels``); SSM/xLSTM state and sliding-window ring buffers
+silently keep the slot path (``engine.paged_fallback`` says why).
+``python -m benchmarks.run --only paged`` measures the session
+multiplier, decode parity and snapshot shrink (BENCH_paged.json).
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
@@ -200,6 +217,32 @@ def main():
         except ShedError as e:
             print(f"over-budget tenant shed: {e.reason} "
                   f"(retry after {e.retry_after_seconds:.0f}s)")
+
+    # paged KV cache: the same engine API, sessions bounded by live
+    # tokens instead of slots x cache_len — and snapshots that ship only
+    # the pages requests actually own
+    print("== paged KV cache: more sessions per GPU, live-byte snapshots ==")
+    from repro.serving import Request
+    cfg = get_reduced_config("smollm2-1.7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # pool sized to TWO contiguous slots' bytes, shared by eight slots
+    paged = InferenceEngine(model, params, slots=8, cache_len=64,
+                            prefill_buckets=(16,), megastep=8, paged=True,
+                            page_size=8, num_pages=2 * (64 // 8))
+    for i in range(8):
+        paged.submit(Request(prompt=tok.encode(f"short question {i}"),
+                             max_new_tokens=8))
+    peak = 0
+    while paged.has_work():
+        paged.step()
+        peak = max(peak, paged.stats.live_pages)
+    snap = paged.snapshot()
+    print(f"{paged.stats.completed} sessions through a "
+          f"{snap['capacity_bytes']} byte pool (2 contiguous slots' "
+          f"worth), peak {peak} live pages; snapshots ship live bytes "
+          f"only ({snap['live_bytes']} idle vs {snap['capacity_bytes']} "
+          "allocated)")
 
     print("== simulator backend: same workload, modeled cluster time ==")
     sim = PCMClient(backend=SimulatorBackend(n_workers=8, profile="a10",

@@ -32,6 +32,14 @@ the live runtime: the bytes move (see :class:`SnapshotPool` and
 ``repro.core.context.ContextSnapshot``), and promotion restores the
 materialized context without re-running the builder or recompiling.
 
+Every edge below DEVICE moves LIVE bytes, not allocated capacity: a paged
+engine (``repro.serving.paged``) snapshots only the KV pages its requests
+actually own, so snapshot ``nbytes`` — and with it SnapshotPool occupancy,
+spill I/O, TransferPlanner predictions and peer-transfer seconds — scales
+with live context. The allocated pool (``capacity_bytes``) is an
+HBM-only cost that is rebuilt zero-filled at restore; contiguous slot
+caches estimate the same split via ``repro.serving.kvcache.live_bytes``.
+
 The PEER edge is the join-storm bootstrap path (paper §4.1): a cold
 worker reaches DEVICE directly from a warm peer's exported template
 (``repro.core.context.export_context`` — non-destructive, the donor keeps

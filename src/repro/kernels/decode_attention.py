@@ -6,6 +6,17 @@ dot instead of G separate vector products.
 
 Grid: (batch, kv_heads, num_kv_blocks); the kv-block axis is sequential and
 carries (m, l, acc) scratch. Per-sequence valid lengths arrive via SMEM.
+
+Paged variants (``paged_flash_decode``, ``paged_mla_decode``) decode
+straight out of a block/page-table cache (see ``repro.serving.paged``):
+the per-slot page table and valid lengths ride in as scalar-prefetch
+operands, so each KV block's *physical* page index is computed before the
+DMA is issued — gather-by-page-table without ever materializing a
+contiguous view. Block size equals the page size; pages whose first token
+is at/past the slot's valid length are skipped entirely, so per-slot work
+scales with live pages. The MLA variant attends over paged compressed
+latents ``c_kv`` plus the shared rope keys and accumulates output in
+latent space (absorbed-matrix decode: the caller applies ``w_uv``/``wo``).
 """
 
 from __future__ import annotations
@@ -115,3 +126,185 @@ def flash_decode(q, cache_k, cache_v, lengths, *, scale: float = 1.0,
 
 def _per_batch_lengths(lengths, B):
     return lengths.astype(jnp.int32)
+
+
+# ------------------------------------------------------------ paged decode --
+def _paged_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, scale: float, page: int,
+                         npages: int):
+    b, ji = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(ji == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]                       # valid kv count for this slot
+    live = ji * page < length                 # dead pages: no work at all
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)         # (page, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        k_pos = ji * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)         # (page, D)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ji == npages - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_flash_decode(q, k_pages, v_pages, page_table, lengths, *,
+                       scale: float = 1.0, interpret: bool = False):
+    """q (B, H, D); k/v_pages (NP+1, page, Hkv, D); page_table (B, n) int32
+    (physical page of each slot's j-th logical block — unreserved columns
+    must point at a valid index, conventionally the trash page NP);
+    lengths (B,) valid counts. Returns (B, H, D).
+
+    The page table and lengths are scalar-prefetch operands: the k/v
+    BlockSpec index maps read ``pt[b, j]`` to aim each block's DMA at the
+    right physical page. A slot with ``lengths[b] == 0`` (inactive) skips
+    every page; its output row is meaningless zeros the caller discards.
+    """
+    B, H, D = q.shape
+    page, Hkv = k_pages.shape[1], k_pages.shape[2]
+    npages = page_table.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+
+    kernel = functools.partial(_paged_decode_kernel, scale=scale, page=page,
+                               npages=npages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, npages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, j, pt, ln: (pt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, j, pt, ln: (pt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, j, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return out.reshape(B, H, D)
+
+
+def _paged_mla_kernel(pt_ref, len_ref, ql_ref, qr_ref, ckv_ref, kr_ref,
+                      o_ref, m_scr, l_scr, acc_scr, *, scale: float,
+                      page: int, npages: int):
+    b, ji = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(ji == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    live = ji * page < length
+
+    @pl.when(live)
+    def _compute():
+        ql = ql_ref[0].astype(jnp.float32)                # (H, R)
+        qr = qr_ref[0].astype(jnp.float32)                # (H, Dr)
+        ckv = ckv_ref[0].astype(jnp.float32)              # (page, R)
+        kr = kr_ref[0].astype(jnp.float32)                # (page, Dr)
+        # scores in latent space: absorbed q against compressed latents,
+        # plus the shared (per-token, head-broadcast) rope key term
+        s = (jax.lax.dot_general(ql, ckv, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+             + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+             ) * scale                                    # (H, page)
+        k_pos = ji * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        # value IS the latent: output accumulated in latent space (H, R)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+            p, ckv, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ji == npages - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_mla_decode(q_lat, q_rope, ckv_pages, krope_pages, page_table,
+                     lengths, *, scale: float = 1.0,
+                     interpret: bool = False):
+    """Absorbed-matrix MLA decode over paged compressed latents.
+
+    q_lat (B, H, R) — q_nope already absorbed through w_uk; q_rope
+    (B, H, Dr); ckv_pages (NP+1, page, R); krope_pages (NP+1, page, Dr);
+    page_table (B, n); lengths (B,) valid counts. Returns out_lat
+    (B, H, R) — the caller applies w_uv then wo.
+    """
+    B, H, R = q_lat.shape
+    page = ckv_pages.shape[1]
+    Dr = krope_pages.shape[2]
+    npages = page_table.shape[1]
+
+    kernel = functools.partial(_paged_mla_kernel, scale=scale, page=page,
+                               npages=npages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, npages),
+        in_specs=[
+            pl.BlockSpec((1, H, R), lambda b, j, pt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, H, Dr), lambda b, j, pt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, page, R), lambda b, j, pt, ln: (pt[b, j], 0, 0)),
+            pl.BlockSpec((1, page, Dr),
+                         lambda b, j, pt, ln: (pt[b, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, R), lambda b, j, pt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, R), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, R), q_lat.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      q_lat, q_rope, ckv_pages, krope_pages)
+    return out

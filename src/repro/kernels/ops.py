@@ -15,6 +15,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import flash_decode as _flash_decode
+from repro.kernels.decode_attention import \
+    paged_flash_decode as _paged_flash_decode
+from repro.kernels.decode_attention import \
+    paged_mla_decode as _paged_mla_decode
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.moe_gemm import grouped_gemm as _grouped_gemm
 from repro.kernels.ssm_scan import ssd_scan_bhs
@@ -45,6 +49,21 @@ def flash_decode(q, cache_k, cache_v, lengths, *, scale: float = 1.0,
                          interpret=_interpret())
 
 
+def paged_flash_decode(q, k_pages, v_pages, page_table, lengths, *,
+                       scale: float = 1.0):
+    """Decode straight out of a paged KV cache (see serving.paged)."""
+    return _paged_flash_decode(q, k_pages, v_pages, page_table, lengths,
+                               scale=scale, interpret=_interpret())
+
+
+def paged_mla_decode(q_lat, q_rope, ckv_pages, krope_pages, page_table,
+                     lengths, *, scale: float = 1.0):
+    """Absorbed-matrix MLA decode over paged compressed latents."""
+    return _paged_mla_decode(q_lat, q_rope, ckv_pages, krope_pages,
+                             page_table, lengths, scale=scale,
+                             interpret=_interpret())
+
+
 def ssm_scan(C_mat, B_mat, v, log_a, *, chunk: int = 128):
     """Mamba2/SSD entry point matching models.ssm conventions.
 
@@ -67,5 +86,5 @@ def grouped_gemm(x, w, **kw):
     return _grouped_gemm(x, w, interpret=_interpret(), **kw)
 
 
-__all__ = ["flash_attention", "flash_decode", "ssm_scan", "grouped_gemm",
-           "ref"]
+__all__ = ["flash_attention", "flash_decode", "paged_flash_decode",
+           "paged_mla_decode", "ssm_scan", "grouped_gemm", "ref"]

@@ -43,6 +43,40 @@ def flash_decode_ref(q, cache_k, cache_v, lengths, *, scale: float = 1.0):
                       ).astype(q.dtype)
 
 
+def _gather_pages(pages, page_table):
+    """(NP+1, P, ...) + (B, n) -> contiguous (B, n*P, ...)."""
+    B, n = page_table.shape
+    P = pages.shape[1]
+    return pages[page_table.reshape(-1)].reshape((B, n * P) +
+                                                 pages.shape[2:])
+
+
+def paged_decode_ref(q, k_pages, v_pages, page_table, lengths, *,
+                     scale: float = 1.0):
+    """Gather-then-attend oracle for the paged GQA decode kernel."""
+    k = _gather_pages(k_pages, page_table)
+    v = _gather_pages(v_pages, page_table)
+    return flash_decode_ref(q, k, v, lengths, scale=scale)
+
+
+def paged_mla_decode_ref(q_lat, q_rope, ckv_pages, krope_pages, page_table,
+                         lengths, *, scale: float = 1.0):
+    """Latent-space MLA decode oracle: gather paged c_kv + rope keys, score
+    with the absorbed query, return the latent-space output (B, H, R)."""
+    ckv = _gather_pages(ckv_pages, page_table)        # (B, T, R)
+    kr = _gather_pages(krope_pages, page_table)       # (B, T, Dr)
+    s = (jnp.einsum("bhr,btr->bht", q_lat.astype(jnp.float32),
+                    ckv.astype(jnp.float32))
+         + jnp.einsum("bhd,btd->bht", q_rope.astype(jnp.float32),
+                      kr.astype(jnp.float32))) * scale
+    pos = jnp.arange(ckv.shape[1])
+    valid = pos[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,btr->bhr", w, ckv.astype(jnp.float32)
+                      ).astype(q_lat.dtype)
+
+
 def ssd_scan_ref(q, k, v, log_a):
     """Sequential reference: state_t = a_t*state + k_t v_t^T; y_t = q_t@state.
 

@@ -289,6 +289,130 @@ def attend_decode(p, x, cfg, *, cache_k, cache_v, lengths,
     return y, cache_k, cache_v
 
 
+def _paged_write_row(pages: jax.Array, new_row: jax.Array,
+                     page_table: jax.Array, lengths: jax.Array,
+                     active: jax.Array) -> jax.Array:
+    """Write one token per slot into a paged cache at logical position
+    ``lengths``. pages (NP+1, P, ...); page_table (B, n); new_row (B, ...).
+
+    Inactive slots write into the TRASH page (index NP) — their stale page
+    table may point at pages now owned by another slot, so they must never
+    write through it. The clamp mirrors ``write_cache_row``'s
+    ``min(lengths, cache-1)`` so an at-capacity slot overwrites its last
+    position instead of escaping its reservation."""
+    B, n = page_table.shape
+    P = pages.shape[1]
+    trash = pages.shape[0] - 1
+    wpos = jnp.minimum(lengths, n * P - 1)
+    rows = jnp.arange(B)
+    dest = jnp.where(active, page_table[rows, wpos // P], trash)
+    return pages.at[dest, wpos % P].set(new_row.astype(pages.dtype))
+
+
+def _paged_gather(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """(NP+1, P, ...) + (B, n) -> contiguous view (B, n*P, ...)."""
+    B, n = page_table.shape
+    P = pages.shape[1]
+    return pages[page_table.reshape(-1)].reshape((B, n * P) +
+                                                 pages.shape[2:])
+
+
+def paged_attend_decode(p, x, cfg, *, k_pages, v_pages, page_table, lengths,
+                        active):
+    """One-token GQA decode against a paged KV cache.
+
+    x (B,1,d); k/v_pages (NP+1, P, Hkv, D); page_table (B, n) int32;
+    lengths (B,); active (B,) bool (inactive slots do no cache writes and
+    their outputs are garbage the caller discards).
+
+    With ``cfg.use_kernels`` attention runs in the Pallas paged kernel
+    (gather-by-page-table, per-slot work proportional to live pages);
+    otherwise the pages are gathered into a contiguous view and scored by
+    the same ``grouped_attention_narrow`` math as the slot cache — greedy
+    outputs stay bit-identical to the contiguous path.
+    """
+    c = cdt(cfg)
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(c), p["wq"].astype(c))
+    k_new = jnp.einsum("bsd,dhk->bshk", x.astype(c), p["wk"].astype(c))
+    v_new = jnp.einsum("bsd,dhk->bshk", x.astype(c), p["wv"].astype(c))
+    if cfg.qk_norm and "q_norm" in p:
+        q = rms_norm_heads(q, p["q_norm"], cfg.norm_eps)
+        k_new = rms_norm_heads(k_new, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope_cos_sin(lengths[:, None], q.shape[-1], cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k_new = apply_rope(k_new, cos, sin)
+
+    k_pages = _paged_write_row(k_pages, k_new[:, 0], page_table, lengths,
+                               active)
+    v_pages = _paged_write_row(v_pages, v_new[:, 0], page_table, lengths,
+                               active)
+    scale = 1.0 / math.sqrt(hd)
+    cap = page_table.shape[1] * k_pages.shape[1]
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        n_valid = jnp.where(active, jnp.minimum(lengths + 1, cap), 0)
+        out = kops.paged_flash_decode(q[:, 0], k_pages, v_pages, page_table,
+                                      n_valid, scale=scale)[:, None]
+    else:
+        kv = _paged_gather(k_pages, page_table)
+        vv = _paged_gather(v_pages, page_table)
+        pos = jnp.arange(cap, dtype=jnp.int32)
+        valid = pos[None, :] <= lengths[:, None]
+        out = grouped_attention_narrow(q * scale, kv, vv, valid)[:, :1]
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(c), p["wo"].astype(c))
+    return y, k_pages, v_pages
+
+
+def paged_mla_decode(p, x, cfg, *, ckv_pages, krope_pages, page_table,
+                     lengths, active):
+    """Absorbed-matrix MLA decode against paged compressed latents.
+
+    ckv_pages (NP+1, P, r); krope_pages (NP+1, P, dr); the per-session
+    resident footprint is the latent pages — never decompressed k/v — so
+    DeepSeek-style models keep their compressed footprint end-to-end."""
+    m = cfg.mla
+    c = cdt(cfg)
+    q = _mla_q(p, x, cfg)
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    cos, sin = rope_cos_sin(lengths[:, None], m.qk_rope_head_dim,
+                            cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    ckv_new, krope_new = _mla_latent(p, x, cfg)
+    krope_new = apply_rope(krope_new[:, :, None, :], cos, sin)[:, :, 0, :]
+    ckv_pages = _paged_write_row(ckv_pages, ckv_new[:, 0], page_table,
+                                 lengths, active)
+    krope_pages = _paged_write_row(krope_pages, krope_new[:, 0], page_table,
+                                   lengths, active)
+
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope.astype(c),
+                       p["w_uk"].astype(c))
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    cap = page_table.shape[1] * ckv_pages.shape[1]
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        n_valid = jnp.where(active, jnp.minimum(lengths + 1, cap), 0)
+        out_lat = kops.paged_mla_decode(
+            q_lat[:, 0], q_rope[:, 0], ckv_pages, krope_pages, page_table,
+            n_valid, scale=scale)[:, None].astype(jnp.float32)
+    else:
+        ckv = _paged_gather(ckv_pages, page_table)
+        kr = _paged_gather(krope_pages, page_table)
+        s = jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32) * scale,
+                       ckv.astype(jnp.float32))
+        s += jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32) * scale,
+                        kr.astype(jnp.float32))
+        pos = jnp.arange(cap, dtype=jnp.int32)
+        valid = pos[None, :] <= lengths[:, None]
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        out_lat = jnp.einsum("bhst,btr->bshr", w, ckv.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhd->bshd", out_lat.astype(c), p["w_uv"].astype(c))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(c))
+    return y, ckv_pages, krope_pages
+
+
 def grouped_attention_narrow(q, cache_k, cache_v, valid):
     """GQA scoring on NARROW KV — no head-repeat of the cache.
 

@@ -44,6 +44,13 @@ class Model:
     init_cache: Callable
     prefill: Callable
     decode_step: Callable
+    # paged decode (block/page-table KV cache, see repro.serving.paged):
+    # decode_paged(params, tokens (B,1), lengths, pages, page_table (B,n),
+    # active (B,) bool) -> (logits (B,V), pages). The physical page pool is
+    # built with init_cache(num_pages + 1, page_size, dtype). None for
+    # families whose state does not page (SSM/xLSTM/SWA/audio/vlm) — the
+    # engine keeps the contiguous slot path for them.
+    decode_paged: Optional[Callable] = None
 
 
 # ---------------------------------------------------------- block pieces ---
@@ -94,6 +101,31 @@ def dense_block_decode(p, x, cfg, *, lengths, window, cache_kv):
         a, ck, cv = attn.attend_decode(p["attn"], h, cfg, cache_k=cache_kv[0],
                                        cache_v=cache_kv[1], lengths=lengths,
                                        layer_window=window)
+        new_kv = (ck, cv)
+    x = x + a
+    h = apply_norm(p["ln2"], x, cfg)
+    if "moe" in p:
+        m, _ = moe_lib.apply_moe(p["moe"], h, cfg, capacity_factor=2.0)
+    else:
+        m = apply_mlp(p["mlp"], h, cfg)
+    return x + m, new_kv
+
+
+def dense_block_decode_paged(p, x, cfg, *, lengths, page_table, active,
+                             pages_kv):
+    """``dense_block_decode`` against paged KV storage: same residual
+    structure, attention reads/writes through the per-slot page table."""
+    h = apply_norm(p["ln1"], x, cfg)
+    if cfg.attention == "mla":
+        a, ck, kr = attn.paged_mla_decode(
+            p["attn"], h, cfg, ckv_pages=pages_kv[0],
+            krope_pages=pages_kv[1], page_table=page_table, lengths=lengths,
+            active=active)
+        new_kv = (ck, kr)
+    else:
+        a, ck, cv = attn.paged_attend_decode(
+            p["attn"], h, cfg, k_pages=pages_kv[0], v_pages=pages_kv[1],
+            page_table=page_table, lengths=lengths, active=active)
         new_kv = (ck, cv)
     x = x + a
     h = apply_norm(p["ln2"], x, cfg)
@@ -272,6 +304,38 @@ def build_decoder(cfg) -> Model:
             new_cache["dense0"] = new_dense0
         return logits, new_cache
 
+    def decode_paged(params, tokens, lengths, pages, page_table, active,
+                     extra=None):
+        """One-token decode against the paged pool. ``pages`` mirrors the
+        ``init_cache`` pytree built at (num_pages + 1, page_size); the page
+        table is shared by every layer (all layers grow in lockstep)."""
+        x = embed(params["embed"], tokens, cfg)
+
+        new_dense0 = []
+        for blk, pkv in zip(params.get("dense0", []),
+                            pages.get("dense0", [])):
+            x, kv = dense_block_decode_paged(blk, x, cfg, lengths=lengths,
+                                             page_table=page_table,
+                                             active=active, pages_kv=pkv)
+            new_dense0.append(kv)
+
+        def body(x, xs):
+            layer_params, pkv = xs
+            x, new_kv = dense_block_decode_paged(
+                layer_params, x, cfg, lengths=lengths,
+                page_table=page_table, active=active, pages_kv=pkv)
+            return x, new_kv
+
+        x, layers_kv = layer_scan(body, x, (params["layers"],
+                                            pages["layers"]))
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = unembed(params["embed"], x, cfg)[:, 0]
+        new_pages = {"layers": layers_kv}
+        if new_dense0:
+            new_pages["dense0"] = new_dense0
+        return logits, new_pages
+
     return Model(cfg=cfg, init=init, forward_hidden=forward_hidden,
                  forward=forward, init_cache=init_cache, prefill=prefill,
-                 decode_step=decode_step)
+                 decode_step=decode_step,
+                 decode_paged=None if window else decode_paged)

@@ -78,6 +78,28 @@ transient wave buffer lives only inside that executable — no separate
 host-driven merge step), so there is exactly one prefill executable per
 bucket length — all AOT-warmable.
 
+**Paged KV storage (``paged=True``).**  For families whose cache leaves
+keep the sequence axis right after the batch axis (dense/MoE full
+attention, MLA latents), the slot cache can be replaced by a shared pool
+of fixed-size pages behind a per-slot page table (``repro.serving.paged``).
+A request reserves ``ceil(min(prompt+max_new, cache_len)/page_size)``
+pages at admission — host-side free list, so decode never allocates on
+device — grows into them as it decodes, and releases them when it
+finishes: concurrent sessions are bounded by live tokens, not
+slots x cache_len. Prefill waves still compile to one executable per
+bucket (the wave prefills a transient ``ceil(bucket/P)``-page contiguous
+cache, scattered into the pool through the freshly reserved tables in the
+same dispatch); megasteps specialize on a power-of-two *page-count* bucket
+(subsuming the contiguous path's prefix view) and route through
+``model.decode_paged`` — the Pallas paged-decode kernels when
+``cfg.use_kernels``, else a gather-to-contiguous view whose math is
+bit-identical to the slot cache. Free/finished slots write only to the
+pool's TRASH page, so live pages are provably untouched by non-owners and
+the slot path's post-loop select/restore pass disappears. Families whose
+state does not page (SSM/xLSTM, sliding-window ring buffers) silently keep
+the slot cache; ``paged_fallback`` records why. Snapshots serialize only
+live pages, so every tier/peer-transfer rung shrinks with actual context.
+
 **Tier offload/restore (PCM snapshot hooks).**  The concurrent PCM runtime
 demotes idle/preempted contexts off the accelerator:
 ``offload_device_state()`` pulls the whole device-resident tuple (weights,
@@ -104,6 +126,7 @@ import numpy as np
 
 from repro.models.transformer import Model
 from repro.serving import kvcache
+from repro.serving import paged as paging
 from repro.serving.request import EngineStats, Request, RequestState
 from repro.serving.sampler import sample
 
@@ -129,7 +152,10 @@ class InferenceEngine:
                  megastep: int = 1,
                  decode_buckets: Optional[Sequence[int]] = None,
                  max_stop_tokens: int = 4,
-                 admission: str = "continuous"):
+                 admission: str = "continuous",
+                 paged: bool = False,
+                 page_size: int = 64,
+                 num_pages: Optional[int] = None):
         if admission not in ("continuous", "drain"):
             raise ValueError(f"admission must be 'continuous' or 'drain', "
                              f"got {admission!r}")
@@ -150,7 +176,60 @@ class InferenceEngine:
             raise ValueError(f"megastep must be >= 1, got {megastep}")
         self.max_stop_tokens = max_stop_tokens
 
-        self.cache = model.init_cache(slots, cache_len, cache_dtype)
+        # ---- paged-vs-contiguous storage resolution --------------------
+        # paged=True is a REQUEST: families whose state does not page fall
+        # back to the contiguous slot cache silently, recording why — so
+        # callers can flip one flag fleet-wide and SSM/xLSTM/SWA engines
+        # keep working unchanged.
+        self.page_size = int(page_size)
+        if paged and self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self._paged = False
+        self.paged_fallback: Optional[str] = None
+        if paged:
+            if model.decode_paged is None:
+                self.paged_fallback = (
+                    "model has no paged decode path (SSM/xLSTM state and "
+                    "sliding-window ring buffers keep the slot cache)")
+            elif cache_len <= 8:
+                self.paged_fallback = "cache_len too small to page"
+            else:
+                bax = kvcache.batch_axes(model.init_cache, cache_len,
+                                         cache_dtype)
+                sax = kvcache.seq_axes(model.init_cache, slots, cache_len,
+                                       cache_dtype)
+                if not paging.pageable(bax, sax):
+                    self.paged_fallback = (
+                        "cache leaves are not (batch, seq)-adjacent or do "
+                        "not scale with cache_len")
+                else:
+                    self._paged = True
+
+        if self._paged:
+            # the physical pool is the model's own cache pytree built at
+            # (num_pages + 1, page_size): page axis where the batch axis
+            # was, +1 TRASH page absorbing every masked write. Default
+            # num_pages matches the slot cache's capacity exactly — same
+            # HBM, but admission is bounded by live tokens so far more
+            # sessions fit when contexts are short.
+            self.max_pages = -(-cache_len // self.page_size)
+            self.num_pages = (int(num_pages) if num_pages is not None
+                              else slots * self.max_pages)
+            self.trash = self.num_pages
+            self._alloc = paging.PageAllocator(self.num_pages,
+                                               self.page_size)
+            self.cache = model.init_cache(self.num_pages + 1,
+                                          self.page_size, cache_dtype)
+            self.page_table = jnp.full((slots, self.max_pages), self.trash,
+                                       jnp.int32)
+            bks, b = {self.max_pages}, 1
+            while b < self.max_pages:
+                bks.add(b)
+                b *= 2
+            self._page_buckets = tuple(sorted(bks))
+        else:
+            self.cache = model.init_cache(slots, cache_len, cache_dtype)
+            self.page_table = None
         self._cache_dtype = jax.tree_util.tree_leaves(self.cache)[0].dtype
         self._axes = kvcache.batch_axes(model.init_cache, cache_len,
                                         cache_dtype)
@@ -162,8 +241,10 @@ class InferenceEngine:
         # use_kernels is excluded: the Pallas decode routing in
         # attend_decode depends on the cache size it sees, so mixing
         # prefix-view sizes across K could mix kernel/XLA numerics and
-        # break the cross-K greedy bit-parity guarantee.
-        prefixable = (getattr(self.cfg, "family", "") in ("dense", "moe")
+        # break the cross-K greedy bit-parity guarantee. The paged path
+        # subsumes the prefix view entirely (page-count buckets).
+        prefixable = (not self._paged
+                      and getattr(self.cfg, "family", "") in ("dense", "moe")
                       and not getattr(self.cfg, "sliding_window", 0)
                       and not getattr(self.cfg, "use_kernels", False)
                       and cache_len > 16)
@@ -198,15 +279,36 @@ class InferenceEngine:
         self.queue: collections.deque = collections.deque()
         self.active: Dict[int, Request] = {}          # slot -> request
         self.free_slots: collections.deque = collections.deque(range(slots))
-        self.stats = EngineStats()
+        self.stats = EngineStats(decode_path=(
+            "paged" if self._paged
+            else "prefix-bucket" if (len(self.decode_buckets) > 1
+                                     and self.megastep >= 4)
+            else "full"))
         self.compile_seconds = 0.0
+        # seq-axes tree for the contiguous live-bytes estimate (lazy
+        # prerequisite: seq_axes needs cache_len > 8)
+        self._byte_axes = self._seq_axes
+        if not self._paged and self._byte_axes is None and cache_len > 8:
+            self._byte_axes = kvcache.seq_axes(model.init_cache, slots,
+                                               cache_len, cache_dtype)
 
-        self._mega_donate = (1, 2, 3, 5, 6, 9) if donate_cache else ()
-        self._megastep_jits: Dict[int, Callable] = {}  # prefix -> jitted
-        pre_donate = (8, 9, 10, 11, 12, 13, 14, 15, 16) if donate_cache \
-            else ()
-        self._prefill_jit = jax.jit(self._prefill_impl,
-                                    donate_argnums=pre_donate)
+        self._megastep_jits: Dict[Tuple, Callable] = {}  # spec -> jitted
+        if self._paged:
+            # page_table rides at arg 1 and is NOT donated in the megastep
+            # (reused across dispatches); prefill donates it (returned
+            # updated with the wave's fresh rows)
+            self._mega_donate = (2, 3, 4, 6, 7, 10) if donate_cache else ()
+            pre_donate = tuple(range(9, 19)) if donate_cache else ()
+            self._prefill_jit = jax.jit(self._paged_prefill_impl,
+                                        donate_argnums=pre_donate)
+            self._DEVICE_STATE_FIELDS = (
+                InferenceEngine._DEVICE_STATE_FIELDS + ("page_table",))
+        else:
+            self._mega_donate = (1, 2, 3, 5, 6, 9) if donate_cache else ()
+            pre_donate = (8, 9, 10, 11, 12, 13, 14, 15, 16) if donate_cache \
+                else ()
+            self._prefill_jit = jax.jit(self._prefill_impl,
+                                        donate_argnums=pre_donate)
         self._exe: Dict[Tuple, Callable] = {}         # AOT executables
 
     # ------------------------------------------------------------- jitted --
@@ -320,6 +422,126 @@ class InferenceEngine:
                  if prefix < self.cache_len else view)
         return cache, lengths, last, active, gen, rng, block, produced
 
+    def _paged_prefill_impl(self, params, tokens, lens, slot_ids, valid,
+                            wave_temps, wave_max_new, wave_stops, pt_rows,
+                            page_table, cache, lengths, last_tokens, temps,
+                            active, gen_counts, max_news, stop_table, rng):
+        """Paged twin of ``_prefill_impl``: the wave prefills a transient
+        contiguous cache of ``ceil(bucket/P)`` pages, which is scattered
+        page-by-page into the donated pool through each row's freshly
+        reserved table (``pt_rows``: full (slots, max_pages) rows,
+        unreserved columns and padding rows aimed at TRASH), and the slot
+        page table is updated — all in the same dispatch. Still exactly one
+        executable per prefill bucket."""
+        rng, k = jax.random.split(rng)
+        P = self.page_size
+        wn = -(-tokens.shape[1] // P)
+        wave_cache = self.model.init_cache(self.slots, wn * P,
+                                           self._cache_dtype)
+        logits, wave_cache = self.model.prefill(params, tokens, lens,
+                                                wave_cache, extra=self.extra)
+        toks = sample(logits, k, wave_temps, vocab_size=self.cfg.vocab_size,
+                      active=valid)
+        cache = paging.scatter_view(
+            cache, wave_cache, jax.lax.slice_in_dim(pt_rows, 0, wn, axis=1),
+            self._axes, valid=valid, trash=self.trash)
+        page_table = page_table.at[slot_ids].set(
+            jnp.where(valid[:, None], pt_rows, page_table[slot_ids]))
+        stopped = jnp.any(toks[:, None] == wave_stops, axis=1)
+        full = wave_max_new <= 1
+        over = lens >= self.cache_len - 1
+        row_active = valid & ~(stopped | full | over)
+
+        def scat(dst, src):
+            keep = valid.reshape((-1,) + (1,) * (src.ndim - 1))
+            return dst.at[slot_ids].set(
+                jnp.where(keep, src.astype(dst.dtype), dst[slot_ids]))
+
+        lengths = scat(lengths, lens)
+        last_tokens = scat(last_tokens, toks)
+        temps = scat(temps, wave_temps)
+        active = scat(active, row_active)
+        gen_counts = scat(gen_counts, jnp.where(valid, 1, 0))
+        max_news = scat(max_news, wave_max_new)
+        stop_table = scat(stop_table, wave_stops)
+        return (toks, row_active, page_table, cache, lengths, last_tokens,
+                temps, active, gen_counts, max_news, stop_table, rng)
+
+    def _paged_megastep_impl(self, params, page_table, cache, lengths,
+                             last_tokens, temps, active, gen_counts,
+                             max_news, stop_table, rng, has_queue, *,
+                             npages: int):
+        """Paged twin of ``_megastep_impl``, addressed through a
+        ``npages``-column slice of the table (the page-count bucket plays
+        the contiguous path's prefix role — per-token work scales with live
+        pages). Two routes share the loop:
+
+        * ``cfg.use_kernels``: every token decodes through
+          ``model.decode_paged`` — the Pallas kernels read K/V pages in
+          place via scalar-prefetched page tables, no materialized view.
+        * fallback: the pages are gathered into a contiguous view ONCE,
+          the loop runs the same ``decode_step`` the slot cache uses, and
+          the touched pages are scattered back ONCE — page traffic is
+          amortized over the whole megastep instead of paid per token.
+
+        No post-loop select/restore pass either way: rows inactive at
+        entry scatter only to the TRASH page (fallback) or write through
+        TRASH-aimed tables (kernel route), so live pages are untouched by
+        construction."""
+        K = self.megastep
+        B = self.slots
+        entry_active = active
+        view_pt = (jax.lax.slice_in_dim(page_table, 0, npages, axis=1)
+                   if npages < self.max_pages else page_table)
+        gathered = not self.cfg.use_kernels
+        carry = (paging.gather_view(cache, view_pt, self._axes)
+                 if gathered else cache)
+
+        def cond(c):
+            step, _, _, _, act, _, _, _, _ = c
+            freed = jnp.any(entry_active & ~act)
+            return (step < K) & jnp.any(act) & ~(has_queue & freed)
+
+        def body(c):
+            step, pages, lengths, last, act, gen, rng, block, produced = c
+            rng, k = jax.random.split(rng)
+            if gathered:
+                logits, pages = self.model.decode_step(
+                    params, last[:, None], lengths, pages, extra=self.extra)
+            else:
+                logits, pages = self.model.decode_paged(
+                    params, last[:, None], lengths, pages, view_pt, act,
+                    extra=self.extra)
+            toks = sample(logits, k, temps, vocab_size=self.cfg.vocab_size,
+                          active=act, fallback=last)
+            lengths = jnp.where(act, lengths + 1, lengths)
+            gen = jnp.where(act, gen + 1, gen)
+            block = jax.lax.dynamic_update_slice_in_dim(
+                block, jnp.where(act, toks, 0)[:, None], step, axis=1)
+            produced = produced + act.astype(jnp.int32)
+            stopped = jnp.any(toks[:, None] == stop_table, axis=1)
+            full = gen >= max_news
+            over = lengths >= self.cache_len - 1
+            act = act & ~(stopped | full | over)
+            return (step + 1, pages, lengths, toks, act, gen, rng, block,
+                    produced)
+
+        init = (jnp.int32(0), carry, lengths, last_tokens, active,
+                gen_counts, rng, jnp.zeros((B, K), jnp.int32),
+                jnp.zeros((B,), jnp.int32))
+        (_, carry, lengths, last, active, gen, rng, block,
+         produced) = jax.lax.while_loop(cond, body, init)
+        lengths = jnp.where(active, lengths, 0)
+        if gathered:
+            # rows inactive at entry (free slots, stale tables) land in
+            # TRASH; active rows write back exactly their own pages
+            cache = paging.scatter_view(cache, carry, view_pt, self._axes,
+                                        valid=entry_active,
+                                        trash=self.trash)
+        else:
+            cache = carry
+        return cache, lengths, last, active, gen, rng, block, produced
+
     # ---------------------------------------------------- executables/AOT --
     def _get_exe(self, key: Tuple, jitfn, *args):
         """AOT compile cache: real compile_seconds measurement + a compile
@@ -364,6 +586,41 @@ class InferenceEngine:
             st[0], st[1], st[2], st[3], st[4], st[5], st[6], st[7], st[8],
             jax.ShapeDtypeStruct((), jnp.bool_))
 
+    def _paged_megastep_exe(self, npages: int):
+        key = ("megastep", self.megastep, "paged", npages)
+        exe = self._exe.get(key)
+        if exe is not None:
+            return exe
+        jkey = ("paged", npages)
+        jit = self._megastep_jits.get(jkey)
+        if jit is None:
+            jit = jax.jit(functools.partial(self._paged_megastep_impl,
+                                            npages=npages),
+                          donate_argnums=self._mega_donate)
+            self._megastep_jits[jkey] = jit
+        st = self._state_sds()
+        params = jax.tree_util.tree_map(self._sds, self.params)
+        pt = jax.ShapeDtypeStruct((self.slots, self.max_pages), jnp.int32)
+        return self._get_exe(
+            key, jit, params, pt,
+            st[0], st[1], st[2], st[3], st[4], st[5], st[6], st[7], st[8],
+            jax.ShapeDtypeStruct((), jnp.bool_))
+
+    def _decode_npages(self) -> int:
+        """Smallest page-count bucket that bounds every active slot's reads
+        and writes this megastep (host-tracked — no device sync). The paged
+        analogue of ``_decode_prefix``: the table slice is cheap, so the
+        bucket applies at every megastep size."""
+        bound = 1 + max(
+            self._host_lengths[s] + min(self.megastep,
+                                        r.max_new_tokens - len(r.generated))
+            for s, r in self.active.items())
+        need = -(-int(bound) // self.page_size)
+        for b in self._page_buckets:
+            if need <= b:
+                return b
+        return self.max_pages
+
     def _decode_prefix(self) -> int:
         """Smallest decode bucket that bounds every ACTIVE slot's writes
         this megastep: length + however many tokens it can still produce
@@ -391,12 +648,16 @@ class InferenceEngine:
         st = self._state_sds()
         params = jax.tree_util.tree_map(self._sds, self.params)
         i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        head = (params,
+                i32(self.slots, bucket), i32(self.slots), i32(self.slots),
+                jax.ShapeDtypeStruct((self.slots,), jnp.bool_),
+                jax.ShapeDtypeStruct((self.slots,), jnp.float32),
+                i32(self.slots), i32(self.slots, self.max_stop_tokens))
+        if self._paged:
+            head = head + (i32(self.slots, self.max_pages),
+                           i32(self.slots, self.max_pages))
         return self._get_exe(
-            key, self._prefill_jit, params,
-            i32(self.slots, bucket), i32(self.slots), i32(self.slots),
-            jax.ShapeDtypeStruct((self.slots,), jnp.bool_),
-            jax.ShapeDtypeStruct((self.slots,), jnp.float32),
-            i32(self.slots), i32(self.slots, self.max_stop_tokens),
+            key, self._prefill_jit, *head,
             st[0], st[1], st[2], st[3], st[4], st[5], st[6], st[7], st[8])
 
     # -------------------------------------------- PCM tier offload/restore --
@@ -418,12 +679,25 @@ class InferenceEngine:
         and stats stay on this object — they are the snapshot's "AOT-warm
         metadata", and they are why a later ``restore_device_state`` needs
         zero builder calls and zero XLA compiles. Idempotence is the
-        caller's job: offloading twice raises."""
+        caller's job: offloading twice raises.
+
+        Paged engines serialize ONLY the live pages (``_paged_live_ids``
+        carries their pool indices): the snapshot's ``nbytes`` — and hence
+        SnapshotPool occupancy, ContextStore admission and every
+        TransferPlanner prediction — scales with actual context, not
+        allocated capacity. The allocator, like the host length shadow and
+        the queue, stays attached to this object."""
         if self.offloaded:
             raise RuntimeError("engine device state is already offloaded")
         state = {name: getattr(self, name)
                  for name in self._DEVICE_STATE_FIELDS}
+        if self._paged:
+            live = np.asarray(self._alloc.live_ids(), np.int32)
+            state["cache"] = paging.gather_live(
+                self.cache, jnp.asarray(live), self._axes)
         host = jax.device_get(state)
+        if self._paged:
+            host["_paged_live_ids"] = live
         for name in self._DEVICE_STATE_FIELDS:
             setattr(self, name, None)
         return host
@@ -440,8 +714,28 @@ class InferenceEngine:
                    if n not in host_state]
         if missing:
             raise ValueError(f"snapshot is missing engine state: {missing}")
-        device = jax.device_put(
-            {n: host_state[n] for n in self._DEVICE_STATE_FIELDS})
+        if self._paged:
+            if "_paged_live_ids" not in host_state:
+                raise ValueError("paged snapshot is missing the live-page "
+                                 "index (_paged_live_ids)")
+            live = np.asarray(host_state["_paged_live_ids"], np.int32)
+            device = jax.device_put({n: host_state[n]
+                                     for n in self._DEVICE_STATE_FIELDS
+                                     if n != "cache"})
+            # rebuild the pool around the snapshotted live pages; released
+            # pages and TRASH come back zeroed, which is invisible to every
+            # read (non-owned columns are length-masked to exact-zero
+            # softmax weight) — decode stays bit-identical
+            pool = self.model.init_cache(self.num_pages + 1, self.page_size,
+                                         self._cache_dtype)
+            if live.size:
+                pool = paging.scatter_live(
+                    pool, jnp.asarray(live),
+                    jax.device_put(host_state["cache"]), self._axes)
+            device["cache"] = pool
+        else:
+            device = jax.device_put(
+                {n: host_state[n] for n in self._DEVICE_STATE_FIELDS})
         for name in self._DEVICE_STATE_FIELDS:
             setattr(self, name, device[name])
 
@@ -462,10 +756,21 @@ class InferenceEngine:
         calls and zero XLA compiles (the executables ride on the clone)."""
         self._require_resident()
         host = jax.device_get({name: getattr(self, name)
-                               for name in self._DEVICE_STATE_FIELDS})
+                               for name in self._DEVICE_STATE_FIELDS
+                               if name != "cache"})
         # scrub the donor's in-flight decode state: the template ships an
-        # EMPTY engine (all slots free), not the donor's live requests
-        host["cache"] = jax.tree_util.tree_map(np.zeros_like, host["cache"])
+        # EMPTY engine (all slots free), not the donor's live requests. A
+        # paged template carries ZERO cache pages (live set is empty) — the
+        # template's nbytes is essentially the weights.
+        if self._paged:
+            host["cache"] = jax.device_get(paging.gather_live(
+                self.cache, jnp.zeros((0,), jnp.int32), self._axes))
+            host["_paged_live_ids"] = np.zeros((0,), np.int32)
+            host["page_table"] = np.full((self.slots, self.max_pages),
+                                         self.trash, np.int32)
+        else:
+            host["cache"] = jax.tree_util.tree_map(
+                lambda l: np.zeros(l.shape, l.dtype), self.cache)
         for name in ("lengths", "last_tokens", "temps", "gen_counts",
                      "max_news"):
             host[name] = np.zeros_like(host[name])
@@ -490,8 +795,11 @@ class InferenceEngine:
         clone.active = {}
         clone.free_slots = collections.deque(range(self.slots))
         clone._host_lengths = np.zeros_like(self._host_lengths)
-        clone.stats = EngineStats()
+        clone.stats = EngineStats(decode_path=self.stats.decode_path)
         clone.compile_seconds = 0.0
+        if self._paged:
+            clone._alloc = paging.PageAllocator(self.num_pages,
+                                                self.page_size)
         for name in self._DEVICE_STATE_FIELDS:
             setattr(clone, name, None)
         return clone
@@ -505,11 +813,15 @@ class InferenceEngine:
         (idempotent — already-warm executables cost nothing)."""
         self._require_resident()
         before = self.compile_seconds
-        reachable = (self.decode_buckets if self.megastep >= 4
-                     else (self.cache_len,))
-        for b in reachable:
-            for restore in (False, True):
-                self._megastep_exe(b, restore)
+        if self._paged:
+            for npb in self._page_buckets:
+                self._paged_megastep_exe(npb)
+        else:
+            reachable = (self.decode_buckets if self.megastep >= 4
+                         else (self.cache_len,))
+            for b in reachable:
+                for restore in (False, True):
+                    self._megastep_exe(b, restore)
         for b in self.prefill_buckets:
             self._prefill_exe(b)
         return self.compile_seconds - before
@@ -525,6 +837,15 @@ class InferenceEngine:
                              f"{self.max_stop_tokens}")
         if any(t < 0 for t in req.stop_tokens):
             raise ValueError("stop tokens must be non-negative ids")
+        if self._paged:
+            need = self._alloc.pages_needed(
+                min(len(req.prompt) + req.max_new_tokens, self.cache_len))
+            if need > self.num_pages:
+                raise ValueError(
+                    f"request needs {need} pages for its whole lifetime "
+                    f"(prompt {len(req.prompt)} + max_new "
+                    f"{req.max_new_tokens}); the pool holds "
+                    f"{self.num_pages}")
         if req.priority > 0:
             # admission-order preemption: ahead of every queued request of
             # strictly lower priority, behind equal-or-higher (FIFO within
@@ -572,9 +893,31 @@ class InferenceEngine:
 
     # ------------------------------------------------------------ internal --
     def _admit_wave(self) -> List[Request]:
-        n = min(len(self.queue), len(self.free_slots))
-        wave = [self.queue.popleft() for _ in range(n)]
-        wave_slots = [self.free_slots.popleft() for _ in range(n)]
+        if self._paged:
+            # admission-time reservation walk: claim head-of-queue requests
+            # while a slot AND their whole-lifetime page reservation fit.
+            # The walk stops at the first request that doesn't fit (no
+            # queue-order bypass): it re-tries the moment a finish releases
+            # pages, so head-of-line wait is bounded by running decodes.
+            wave, wave_slots = [], []
+            while self.queue and self.free_slots:
+                r = self.queue[0]
+                need = self._alloc.pages_needed(
+                    min(len(r.prompt) + r.max_new_tokens, self.cache_len))
+                if not self._alloc.can_reserve(need):
+                    break
+                self.queue.popleft()
+                s = self.free_slots.popleft()
+                self._alloc.reserve(s, need)
+                wave.append(r)
+                wave_slots.append(s)
+            if not wave:
+                return []
+            n = len(wave)
+        else:
+            n = min(len(self.queue), len(self.free_slots))
+            wave = [self.queue.popleft() for _ in range(n)]
+            wave_slots = [self.free_slots.popleft() for _ in range(n)]
         # pad the wave to the full slot count with the remaining slot ids
         # (a permutation): ONE executable per bucket, always AOT-warmable.
         taken = set(wave_slots)
@@ -602,14 +945,30 @@ class InferenceEngine:
             r.slot = int(slot_ids[i])
 
         exe = self._prefill_exe(bucket)
-        (first, row_active, self.cache, self.lengths, self.last_tokens,
-         self.temps, self.active_mask, self.gen_counts, self.max_news,
-         self.stop_table, self._rng) = exe(
-            self.params, jnp.asarray(toks), jnp.asarray(lens),
-            jnp.asarray(slot_ids), jnp.asarray(valid), jnp.asarray(temps),
-            jnp.asarray(max_new), jnp.asarray(stops), self.cache,
-            self.lengths, self.last_tokens, self.temps, self.active_mask,
-            self.gen_counts, self.max_news, self.stop_table, self._rng)
+        if self._paged:
+            pt_rows = np.full((self.slots, self.max_pages), self.trash,
+                              np.int32)
+            for i, s in enumerate(wave_slots):
+                ids = self._alloc.owned(s)
+                pt_rows[i, :len(ids)] = ids
+            (first, row_active, self.page_table, self.cache, self.lengths,
+             self.last_tokens, self.temps, self.active_mask, self.gen_counts,
+             self.max_news, self.stop_table, self._rng) = exe(
+                self.params, jnp.asarray(toks), jnp.asarray(lens),
+                jnp.asarray(slot_ids), jnp.asarray(valid),
+                jnp.asarray(temps), jnp.asarray(max_new), jnp.asarray(stops),
+                jnp.asarray(pt_rows), self.page_table, self.cache,
+                self.lengths, self.last_tokens, self.temps, self.active_mask,
+                self.gen_counts, self.max_news, self.stop_table, self._rng)
+        else:
+            (first, row_active, self.cache, self.lengths, self.last_tokens,
+             self.temps, self.active_mask, self.gen_counts, self.max_news,
+             self.stop_table, self._rng) = exe(
+                self.params, jnp.asarray(toks), jnp.asarray(lens),
+                jnp.asarray(slot_ids), jnp.asarray(valid), jnp.asarray(temps),
+                jnp.asarray(max_new), jnp.asarray(stops), self.cache,
+                self.lengths, self.last_tokens, self.temps, self.active_mask,
+                self.gen_counts, self.max_news, self.stop_table, self._rng)
 
         # one host sync per wave: the first token + immediately-done flags
         first_np, row_active_np = jax.device_get((first, row_active))
@@ -633,19 +992,29 @@ class InferenceEngine:
 
     def _megastep_wave(self) -> List[Request]:
         t0 = time.monotonic()
-        # the restore pass is only needed when free slots exist whose cache
-        # rows must survive the megastep untouched
-        exe = self._megastep_exe(self._decode_prefix(),
-                                 len(self.active) < self.slots)
-        (self.cache, self.lengths, self.last_tokens, self.active_mask,
-         self.gen_counts, self._rng, block, produced) = exe(
-            self.params, self.cache, self.lengths, self.last_tokens,
-            self.temps, self.active_mask, self.gen_counts, self.max_news,
-            self.stop_table, self._rng,
-            # a drain engine never admits mid-batch, so freeing a slot early
-            # cannot help anyone — the loop runs its full K
-            jnp.asarray(bool(self.queue)
-                        and self.admission == "continuous"))
+        # a drain engine never admits mid-batch, so freeing a slot early
+        # cannot help anyone — the loop runs its full K
+        has_queue = jnp.asarray(bool(self.queue)
+                                and self.admission == "continuous")
+        if self._paged:
+            self.stats.live_pages = self._alloc.live_pages
+            exe = self._paged_megastep_exe(self._decode_npages())
+            (self.cache, self.lengths, self.last_tokens, self.active_mask,
+             self.gen_counts, self._rng, block, produced) = exe(
+                self.params, self.page_table, self.cache, self.lengths,
+                self.last_tokens, self.temps, self.active_mask,
+                self.gen_counts, self.max_news, self.stop_table, self._rng,
+                has_queue)
+        else:
+            # the restore pass is only needed when free slots exist whose
+            # cache rows must survive the megastep untouched
+            exe = self._megastep_exe(self._decode_prefix(),
+                                     len(self.active) < self.slots)
+            (self.cache, self.lengths, self.last_tokens, self.active_mask,
+             self.gen_counts, self._rng, block, produced) = exe(
+                self.params, self.cache, self.lengths, self.last_tokens,
+                self.temps, self.active_mask, self.gen_counts, self.max_news,
+                self.stop_table, self._rng, has_queue)
 
         # the single host sync for up to K tokens across all slots
         block_np, produced_np, active_np = jax.device_get(
@@ -689,18 +1058,50 @@ class InferenceEngine:
         r.state = RequestState.DONE
         r.finished_time = now if now is not None else time.monotonic()
         self.free_slots.append(r.slot)
+        if self._paged:
+            # pages go back to the pool immediately; the slot's stale device
+            # table row is harmless (reads are length-masked, writes by
+            # inactive slots go to TRASH) and is rewritten at re-admission
+            self._alloc.release(r.slot)
         self.stats.completed += 1
         return r
 
     def snapshot(self) -> Dict:
-        """Engine-state summary (used by PCM checkpointing & tests)."""
+        """Engine-state summary (used by PCM checkpointing & tests).
+
+        ``capacity_bytes`` is the allocated cache (what HBM pays),
+        ``live_bytes`` what a snapshot/peer transfer would actually ship:
+        exact page accounting on the paged path, a sequence-leaf pro-rated
+        estimate on the contiguous path. ``cache_bytes`` stays as a
+        back-compat alias for capacity."""
+        if self.offloaded:
+            cap = live = 0
+        elif self._paged:
+            pb = paging.pool_bytes(self.cache, self.num_pages)
+            cap = pb["capacity_bytes"]
+            live = pb["per_page_bytes"] * self._alloc.live_pages
+        else:
+            cap = kvcache.capacity_bytes(self.cache)
+            if self._byte_axes is None:
+                live = cap
+            else:
+                live_tokens = sum(int(self._host_lengths[s])
+                                  for s in self.active)
+                live = kvcache.live_bytes(self.cache, self._byte_axes,
+                                          live_tokens,
+                                          self.slots * self.cache_len)
         return {
             "active": len(self.active), "queued": len(self.queue),
             "free_slots": len(self.free_slots),
             "admission": self.admission,
             "offloaded": self.offloaded,
-            "cache_bytes": (0 if self.offloaded
-                            else kvcache.cache_bytes(self.cache)),
+            "cache_bytes": cap,
+            "capacity_bytes": cap,
+            "live_bytes": live,
+            "decode_path": self.stats.decode_path,
+            "live_pages": (self._alloc.live_pages if self._paged else 0),
+            "free_pages": (self._alloc.free_pages if self._paged else 0),
+            "paged_fallback": self.paged_fallback,
             "compile_seconds": self.compile_seconds,
             "stats": self.stats.as_dict(),
         }

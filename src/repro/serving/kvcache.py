@@ -1,4 +1,4 @@
-"""Slot-structured KV cache management for continuous batching.
+"""KV cache management for continuous batching: slot caches and pages.
 
 Caches are family-specific pytrees (dense KV, MLA latents, Mamba2 states,
 xLSTM matrix memories...) whose batch axis sits at a *different* position
@@ -6,6 +6,35 @@ per leaf. The engine discovers each leaf's batch axis once — by building
 abstract caches at two batch sizes and diffing shapes — then scatter-merges
 freshly-prefilled request caches into the live slot cache with a single
 jitted update, whatever the family.
+
+Two storage layouts share that vocabulary:
+
+* **Contiguous slot cache** — every slot owns ``cache_len`` positions per
+  leaf for its whole lifetime. ``merge_slots`` scatters prefill waves in,
+  ``select_slots`` keeps masked slots bit-identical through a megastep,
+  and ``slice_prefix``/``write_prefix`` bound decode to a bucketed prefix
+  of the allocation. Simple, but sessions-per-GPU is capped by *allocated
+  capacity*: a slot holding 12 tokens pays for 512.
+
+* **Paged cache** (``repro.serving.paged``) — leaves are split into
+  fixed-size pages indexed through a per-slot page table. A request
+  reserves ``ceil(tokens / page_size)`` pages at admission and releases
+  them the moment it finishes, so concurrency is bounded by *live tokens*
+  and the prefix-bucket view is subsumed: decode gathers (or, with
+  ``cfg.use_kernels``, Pallas-DMAs) exactly the pages in its table.
+  Allocate/free lifecycle: reserve at admission -> prefill scatters the
+  prompt's pages -> decode appends in place -> release on finish; free
+  slots write only to a TRASH page, so live pages need no restore pass.
+
+The byte split matters downstream: ``capacity_bytes`` is what HBM holds
+(the allocation), ``live_bytes`` is what a snapshot or peer transfer must
+actually ship. ContextStore occupancy and TransferPlanner predictions run
+on snapshot ``nbytes``, which the paged engine derives from live pages
+only — so every PEER/POOL/DISK/FS rung gets proportionally cheaper as
+contexts shrink. Non-attention families (SSM/xLSTM state matrices, SWA
+ring buffers, audio/VLM cross-attention memories) do not page; they keep
+the contiguous slot path and ``live_bytes == capacity_bytes`` scaled by
+their sequence-bearing leaves, estimated from host-tracked lengths.
 """
 
 from __future__ import annotations
@@ -125,6 +154,29 @@ def gather_slots(global_cache, slots: jax.Array, axes) -> Any:
     return jax.tree_util.tree_map(take, global_cache, axes)
 
 
-def cache_bytes(cache) -> int:
+def capacity_bytes(cache) -> int:
+    """Allocated bytes of the whole cache pytree — what HBM pays,
+    regardless of how much context is actually live."""
     return sum(x.size * x.dtype.itemsize
                for x in jax.tree_util.tree_leaves(cache))
+
+
+# back-compat alias: pre-paged callers meant "allocated capacity"
+cache_bytes = capacity_bytes
+
+
+def live_bytes(cache, axes, live_tokens: int, capacity_tokens: int) -> int:
+    """Estimated bytes of the *live* context in a contiguous slot cache:
+    sequence-scaling leaves (axes from ``seq_axes``; >= 0) are pro-rated by
+    ``live_tokens / capacity_tokens`` (capacity_tokens = slots x cache_len
+    summed over the batch), non-scaling leaves (SSM states, ring buffers at
+    -1) count whole — their footprint does not shrink with context. The
+    paged cache computes this exactly from its allocator instead
+    (``repro.serving.paged.pool_bytes`` x live pages)."""
+    total = 0
+    frac = min(1.0, live_tokens / max(1, capacity_tokens))
+    for leaf, ax in zip(jax.tree_util.tree_leaves(cache),
+                        jax.tree_util.tree_leaves(axes)):
+        nbytes = leaf.size * leaf.dtype.itemsize
+        total += int(nbytes * frac) if ax >= 0 else nbytes
+    return total

@@ -1,0 +1,208 @@
+"""Paged KV cache: fixed-size blocks behind a per-slot page table.
+
+The contiguous slot cache allocates ``slots x cache_len`` positions per
+leaf whether a slot holds 3 tokens or 3000 — sessions-per-GPU is capped by
+*allocated capacity*, and every snapshot/peer transfer ships dead bytes.
+The paged cache stores the same leaves as ``num_pages`` fixed-size blocks
+of ``page_size`` tokens each, shared by every slot through a per-slot page
+table::
+
+    physical storage        page table (device, (slots, max_pages) int32)
+    pages: (NP+1, P, ...)   pt[slot, j] = page holding tokens [jP, (j+1)P)
+                             unreserved columns point at the TRASH page
+
+Logical position ``t`` of a slot lives at ``pages[pt[slot, t // P], t % P]``.
+A slot reserves ``ceil(min(len(prompt) + max_new, cache_len) / P)`` pages at
+admission (host-side free list, no device-side allocation failure path),
+grows into them as it decodes, and releases them the moment it finishes —
+so concurrent sessions are bounded by *live tokens*, not slots x capacity.
+
+The TRASH page convention is what keeps free slots inert without a
+select/restore pass: physical buffers carry one extra page (index
+``num_pages``) that absorbs every masked write.  A free slot's stale page
+table row is redirected to TRASH before any scatter, and decode writes by
+inactive slots target TRASH — pages owned by live slots are provably never
+touched by anyone else (see ``test_paged_free_pages_untouched``).
+
+Physical page buffers are built by the model's own ``init_cache`` called as
+``init_cache(num_pages + 1, page_size, dtype)``: a cache leaf
+``(..., B, S, tail)`` becomes ``(..., NP+1, P, tail)`` with the page axis
+exactly where the batch axis was.  That is why paging is only enabled for
+families whose every leaf has the sequence axis immediately after the
+batch axis and scaling with ``cache_len`` (dense/MoE full attention and
+MLA latents); SSM/xLSTM state matrices and SWA ring buffers keep the
+contiguous slot path.
+
+Byte accounting: ``capacity_bytes`` is the allocated buffer (what HBM
+pays), ``live_bytes`` is pages actually owned by slots (what a snapshot or
+peer transfer ships) — ``gather_live``/``scatter_live`` serialize only the
+live set, so every rung of the PEER/POOL/DISK/FS fetch ladder shrinks with
+actual context.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``tokens`` positions (at least one)."""
+    return max(1, -(-int(tokens) // int(page_size)))
+
+
+class PageAllocator:
+    """Host-side free-list allocator for the shared page pool.
+
+    Reservation happens at admission time for a request's whole lifetime
+    (prompt + max_new, capped at cache_len), so decode never allocates on
+    device and a megastep can never run out of pages mid-flight.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 1 or page_size < 1:
+            raise ValueError(f"bad pool shape: {num_pages} pages x "
+                             f"{page_size} tokens")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: collections.deque = collections.deque(range(num_pages))
+        self._owned: Dict[int, List[int]] = {}     # slot -> page ids
+
+    # ------------------------------------------------------------- queries --
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def pages_needed(self, total_tokens: int) -> int:
+        return pages_for(total_tokens, self.page_size)
+
+    def can_reserve(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def owned(self, slot: int) -> List[int]:
+        return list(self._owned.get(slot, ()))
+
+    def live_ids(self) -> List[int]:
+        """Every page owned by some slot, ascending (snapshot order)."""
+        out: List[int] = []
+        for ids in self._owned.values():
+            out.extend(ids)
+        return sorted(out)
+
+    # ----------------------------------------------------------- lifecycle --
+    def reserve(self, slot: int, n: int) -> List[int]:
+        if slot in self._owned:
+            raise RuntimeError(f"slot {slot} already holds pages")
+        if n > len(self._free):
+            raise RuntimeError(f"pool exhausted: need {n}, "
+                               f"free {len(self._free)}")
+        ids = [self._free.popleft() for _ in range(n)]
+        self._owned[slot] = ids
+        return ids
+
+    def release(self, slot: int) -> int:
+        ids = self._owned.pop(slot, None)
+        if ids is None:
+            return 0
+        self._free.extend(ids)
+        return len(ids)
+
+    def reset(self) -> None:
+        self._free = collections.deque(range(self.num_pages))
+        self._owned = {}
+
+
+# ----------------------------------------------------------- pytree helpers --
+def pageable(batch_axes_tree: Any, seq_axes_tree: Any) -> bool:
+    """True iff every cache leaf scales with cache_len and keeps its
+    sequence axis immediately after its batch axis — the layout
+    ``init_cache(num_pages + 1, page_size)`` relies on."""
+    flat_b = jax.tree_util.tree_leaves(batch_axes_tree)
+    flat_s = jax.tree_util.tree_leaves(seq_axes_tree)
+    return all(s == b + 1 for b, s in zip(flat_b, flat_s))
+
+
+def gather_view(pages: Any, pt: jax.Array, axes: Any) -> Any:
+    """Contiguous-equivalent view of ``n`` pages per slot.
+
+    ``pt`` (B, n) int32.  Each leaf ``(..., NP+1, P, tail)`` (page axis at
+    its batch-axis position ``ab``) becomes ``(..., B, n*P, tail)`` — the
+    exact layout the contiguous decode math expects, so attention over the
+    view is bit-compatible with the slot cache."""
+    B, n = pt.shape
+    ids = pt.reshape(-1)
+
+    def g(leaf, ab):
+        m = jnp.moveaxis(leaf, (ab, ab + 1), (0, 1))      # (NP+1, P, rest)
+        v = m[ids]                                        # (B*n, P, rest)
+        v = v.reshape((B, n * m.shape[1]) + m.shape[2:])
+        return jnp.moveaxis(v, (0, 1), (ab, ab + 1))
+
+    return jax.tree_util.tree_map(g, pages, axes)
+
+
+def scatter_view(pages: Any, view: Any, pt: jax.Array, axes: Any,
+                 valid: Optional[jax.Array], trash: int) -> Any:
+    """Write a per-slot contiguous view back into the page pool.
+
+    Rows where ``valid`` is False (padding wave rows, free slots) scatter
+    into the TRASH page instead of whatever their stale table points at —
+    live pages are only ever written through their owner's table."""
+    B, n = pt.shape
+    dest = pt if valid is None else jnp.where(valid[:, None], pt, trash)
+    ids = dest.reshape(-1)
+
+    def s(leaf, vw, ab):
+        m = jnp.moveaxis(leaf, (ab, ab + 1), (0, 1))      # (NP+1, P, rest)
+        v = jnp.moveaxis(vw, (ab, ab + 1), (0, 1))
+        v = v.reshape((B * n, m.shape[1]) + m.shape[2:])
+        return jnp.moveaxis(m.at[ids].set(v.astype(m.dtype)), (0, 1),
+                            (ab, ab + 1))
+
+    return jax.tree_util.tree_map(s, pages, view, axes)
+
+
+def gather_live(pages: Any, live_ids: jax.Array, axes: Any) -> Any:
+    """Only the live pages of every leaf: ``(..., n_live, P, tail)``.
+
+    This is what snapshots/templates serialize — ``nbytes`` of the result
+    scales with actual context, so SnapshotPool occupancy, TransferPlanner
+    predictions and peer transfers all shrink proportionally."""
+
+    def g(leaf, ab):
+        m = jnp.moveaxis(leaf, ab, 0)
+        return jnp.moveaxis(m[live_ids], 0, ab)
+
+    return jax.tree_util.tree_map(g, pages, axes)
+
+
+def scatter_live(pages: Any, live_ids: jax.Array, live: Any,
+                 axes: Any) -> Any:
+    """Inverse of ``gather_live``: place snapshotted live pages back into a
+    (zero-initialized) full pool."""
+
+    def s(leaf, lv, ab):
+        m = jnp.moveaxis(leaf, ab, 0)
+        lvm = jnp.moveaxis(lv, ab, 0)          # page axis rides at ab, like
+        return jnp.moveaxis(                   # gather_live produced it
+            m.at[live_ids].set(lvm.astype(m.dtype)), 0, ab)
+
+    return jax.tree_util.tree_map(s, pages, live, axes)
+
+
+def pool_bytes(pages: Any, num_pages: int) -> Dict[str, int]:
+    """{"capacity_bytes", "per_page_bytes"} for a pool built with
+    ``num_pages`` usable pages (+1 trash page in the buffers)."""
+    total = sum(x.size * np.dtype(x.dtype).itemsize
+                for x in jax.tree_util.tree_leaves(pages))
+    per_page = total // (num_pages + 1)
+    return {"capacity_bytes": per_page * num_pages,
+            "per_page_bytes": per_page}

@@ -97,6 +97,12 @@ class EngineStats:
     megasteps: int = 0             # fused-decode dispatches (<= decode_tokens)
     compiles: int = 0              # executable-cache misses (0 when warm)
     decode_seconds: float = 0.0    # wall time inside megastep dispatch+sync
+    # which decode storage/view the engine resolved to at construction:
+    # "paged" (page-table cache), "prefix-bucket" (contiguous cache,
+    # length-bucketed prefix view) or "full" (contiguous, whole cache)
+    decode_path: str = "full"
+    # page-pool occupancy as of the most recent megastep (paged path only)
+    live_pages: int = 0
 
     @property
     def decode_tokens_per_second(self) -> float:
@@ -108,4 +114,6 @@ class EngineStats:
                     completed=self.completed, steps=self.steps,
                     prefill_batches=self.prefill_batches,
                     megasteps=self.megasteps, compiles=self.compiles,
-                    decode_seconds=self.decode_seconds)
+                    decode_seconds=self.decode_seconds,
+                    decode_path=self.decode_path,
+                    live_pages=self.live_pages)

@@ -138,3 +138,107 @@ def test_flash_attention_jit_grad_safe():
     out = jax.jit(lambda a: ops.flash_attention(a, a, a, causal=True,
                                                 scale=0.125))(q)
     assert out.shape == q.shape
+
+
+# ------------------------------------------------------------ paged decode --
+def _paged_setup(key, B, npages, num_pages, page, tail, dtype):
+    """Random pool + per-slot page table: each slot owns ``npages`` distinct
+    physical pages, drawn without overlap across slots; the trash page is
+    index ``num_pages``."""
+    import numpy as np
+    rng = np.random.RandomState(key)
+    pool = _mk(key, (num_pages + 1,) + (page,) + tail, dtype)
+    ids = rng.permutation(num_pages)[:B * npages]
+    pt = jnp.asarray(ids.reshape(B, npages).astype(np.int32))
+    return pool, pt
+
+
+@pytest.mark.parametrize("page,npages", [(8, 4), (16, 2), (32, 3), (7, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_flash_decode_sweep(page, npages, dtype):
+    B, H, Hkv, D = 3, 8, 2, 64
+    num_pages = 2 * B * npages
+    kp, pt = _paged_setup(1, B, npages, num_pages, page, (Hkv, D), dtype)
+    vp, _ = _paged_setup(2, B, npages, num_pages, page, (Hkv, D), dtype)
+    q = _mk(0, (B, H, D), dtype)
+    cap = npages * page
+    # odd lengths: page-boundary, mid-page, single-token
+    lengths = jnp.array([cap, (cap // 2) | 1, 1][:B], jnp.int32)
+    out = ops.paged_flash_decode(q, kp, vp, pt, lengths, scale=D ** -0.5)
+    exp = ref.paged_decode_ref(q, kp, vp, pt, lengths, scale=D ** -0.5)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32) -
+                                exp.astype(jnp.float32))))
+    assert err < TOL[dtype], err
+
+
+def test_paged_flash_decode_inactive_slot_is_finite():
+    """lengths == 0 (free/finished slot): every page is skipped; the output
+    row must be finite garbage the caller can discard — never NaN."""
+    B, H, Hkv, D, page, npages = 2, 4, 2, 64, 8, 3
+    num_pages = 2 * B * npages
+    kp, pt = _paged_setup(3, B, npages, num_pages, page, (Hkv, D),
+                          jnp.float32)
+    vp, _ = _paged_setup(4, B, npages, num_pages, page, (Hkv, D),
+                         jnp.float32)
+    q = _mk(0, (B, H, D), jnp.float32)
+    lengths = jnp.array([13, 0], jnp.int32)
+    out = ops.paged_flash_decode(q, kp, vp, pt, lengths, scale=D ** -0.5)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    exp = ref.paged_decode_ref(q, kp, vp, pt, lengths[:1], scale=D ** -0.5)
+    err = float(jnp.max(jnp.abs(out[:1] - exp[:1])))
+    assert err < TOL[jnp.float32], err
+
+
+def test_paged_flash_decode_trash_columns_masked():
+    """Columns past a slot's reservation point at the TRASH page; the
+    length mask must keep whatever lives there out of the result."""
+    B, H, Hkv, D, page, npages = 2, 4, 2, 64, 8, 4
+    num_pages = 2 * B * npages
+    kp, pt = _paged_setup(5, B, npages, num_pages, page, (Hkv, D),
+                          jnp.float32)
+    vp, _ = _paged_setup(6, B, npages, num_pages, page, (Hkv, D),
+                         jnp.float32)
+    q = _mk(0, (B, H, D), jnp.float32)
+    lengths = jnp.array([11, 2 * page], jnp.int32)   # 2 resp. 2 pages live
+    # redirect the dead tail columns to trash and poison the trash page
+    pt_trash = pt.at[:, 2:].set(num_pages)
+    kp = kp.at[num_pages].set(1e4)
+    vp = vp.at[num_pages].set(1e4)
+    out = ops.paged_flash_decode(q, kp, vp, pt_trash, lengths,
+                                 scale=D ** -0.5)
+    exp = ops.paged_flash_decode(q, kp, vp, pt, lengths, scale=D ** -0.5)
+    err = float(jnp.max(jnp.abs(out - exp)))
+    assert err < TOL[jnp.float32], err
+
+
+@pytest.mark.parametrize("page,npages", [(8, 4), (16, 3), (7, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_mla_decode_sweep(page, npages, dtype):
+    B, H, R, Dr = 3, 8, 32, 16
+    num_pages = 2 * B * npages
+    ckv, pt = _paged_setup(7, B, npages, num_pages, page, (R,), dtype)
+    kr, _ = _paged_setup(8, B, npages, num_pages, page, (Dr,), dtype)
+    ql = _mk(0, (B, H, R), dtype)
+    qr = _mk(1, (B, H, Dr), dtype)
+    cap = npages * page
+    lengths = jnp.array([cap, (cap // 2) | 1, 1][:B], jnp.int32)
+    scale = (R + Dr) ** -0.5
+    out = ops.paged_mla_decode(ql, qr, ckv, kr, pt, lengths, scale=scale)
+    exp = ref.paged_mla_decode_ref(ql, qr, ckv, kr, pt, lengths,
+                                   scale=scale)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32) -
+                                exp.astype(jnp.float32))))
+    assert err < TOL[dtype], err
+
+
+def test_paged_mla_decode_inactive_slot_is_finite():
+    B, H, R, Dr, page, npages = 2, 4, 32, 16, 8, 3
+    num_pages = 2 * B * npages
+    ckv, pt = _paged_setup(9, B, npages, num_pages, page, (R,), jnp.float32)
+    kr, _ = _paged_setup(10, B, npages, num_pages, page, (Dr,), jnp.float32)
+    ql = _mk(0, (B, H, R), jnp.float32)
+    qr = _mk(1, (B, H, Dr), jnp.float32)
+    lengths = jnp.array([9, 0], jnp.int32)
+    out = ops.paged_mla_decode(ql, qr, ckv, kr, pt, lengths,
+                               scale=(R + Dr) ** -0.5)
+    assert bool(jnp.all(jnp.isfinite(out)))

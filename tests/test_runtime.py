@@ -436,6 +436,20 @@ def _engine_recipe(name, model, params, builds=None):
     return make_recipe(name, build, host_bytes=0)
 
 
+def _paged_engine_recipe(name, model, params, builds=None):
+    from repro.serving import InferenceEngine
+
+    def build():
+        if builds is not None:
+            builds.append(1)
+        eng = InferenceEngine(model, params, slots=4, cache_len=64,
+                              prefill_buckets=(16,), megastep=4,
+                              paged=True, page_size=8)
+        return {"engine": eng}
+
+    return make_recipe(name, build, host_bytes=0)
+
+
 class TestEngineTierRoundTrip:
     def test_device_host_disk_device_parity(self, smol, tmp_path):
         """Acceptance: DEVICE -> HOST_RAM -> LOCAL_DISK -> DEVICE round
@@ -527,3 +541,61 @@ class TestEngineTierRoundTrip:
             assert mgr.lookup_task(fut.task_id).attempts >= 1
         finally:
             mgr.shutdown()
+
+
+class TestPagedEngineUnderPCM:
+    def test_midstream_snapshot_ships_live_pages_only(self, smol, tmp_path):
+        """A paged engine demoted mid-stream snapshots only its live pages:
+        pool occupancy shrinks with actual context (far below the full page
+        pool), and the HOST_RAM -> LOCAL_DISK -> DEVICE round trip restores
+        with zero builder calls, zero compiles, and a bit-identical
+        continuation of the in-flight decodes."""
+        cfg, model, params = smol
+        from repro.serving import Request
+
+        ps = _prompts(cfg, 2, seed=3)
+        ref = _paged_engine_recipe("pref", model, params).builder()["engine"]
+        for p in ps:
+            ref.submit(Request(prompt=list(p), max_new_tokens=12))
+        want = sorted(r.generated for r in ref.run_to_completion())
+
+        builds = []
+        pool = SnapshotPool(spill_dir=str(tmp_path))
+        lib = Library("w0", snapshots=pool)
+        rec = _paged_engine_recipe("paged-rt", model, params, builds)
+        ctx = lib.ensure(rec)
+        eng = ctx.value["engine"]
+        eng.warm_executables()                    # all page/prefill buckets
+        reqs = [eng.submit(Request(prompt=list(p), max_new_tokens=12))
+                for p in ps]
+        eng.step()                                # mid-stream: pages live
+        live1 = eng._alloc.live_pages
+        assert 0 < live1 < eng.num_pages
+        snap = eng.snapshot()
+        live_b, cap_b = snap["live_bytes"], snap["capacity_bytes"]
+        compiles_before = eng.stats.compiles
+
+        lib.demote(rec.key())                     # DEVICE -> HOST_RAM
+        assert eng.offloaded
+        nbytes_mid = pool.stats()["host_used_bytes"]
+        assert pool.spill(rec.key())              # HOST_RAM -> LOCAL_DISK
+        assert pool.tier(rec.key()) == Tier.LOCAL_DISK
+
+        ctx2 = lib.ensure(rec)                    # LOCAL_DISK -> DEVICE
+        eng2 = ctx2.value["engine"]
+        assert eng2 is eng and not eng2.offloaded
+        assert builds == [1]                      # ZERO builder calls
+        while eng2.has_work():
+            eng2.step()
+        assert sorted(r.generated for r in reqs) == want
+        assert eng2.stats.compiles == compiles_before   # ZERO compiles
+
+        # all pages released at completion: a second demote isolates the
+        # live-page contribution of the mid-stream snapshot exactly
+        assert eng2._alloc.live_pages == 0
+        lib.demote(rec.key())
+        nbytes_idle = pool.stats()["host_used_bytes"]
+        delta = nbytes_mid - nbytes_idle
+        # delta = live pages + their int32 ids; never the full pool
+        assert live_b <= delta <= live_b + 8 * live1
+        assert nbytes_mid < nbytes_idle + cap_b
