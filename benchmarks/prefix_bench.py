@@ -1,0 +1,189 @@
+"""Prefix-sharing benchmark: one prefill per shared prompt template.
+
+The fact-verification workload shape: N sessions whose prompts share one
+long instructions/few-shot prefix (>= 512 tokens) and diverge only in a
+short per-claim tail. Four claims travel together with the numbers (all
+strict-asserted in the CI ``prefix-smoke`` run):
+
+* **Prefill shrink**: with sharing on, total prefill tokens across the
+  cohort are <= 0.25x the no-sharing engine's — the template's KV is
+  computed once and every later admission prefills only its tail.
+* **TTFT**: a prefix-hitting session's p50 time-to-first-token is >= 2x
+  better than the same session cold — admission maps shared pages and
+  dispatches a tail-bucket prefill instead of a full-prompt one.
+* **Capacity**: at the exact same page pool (fixed HBM), the sharing
+  engine holds >= 1.5x the concurrent sessions of the PR-7 paged engine,
+  because hitters reserve only their unshared pages.
+* **Exactness**: greedy outputs are bit-identical to the no-sharing
+  engine (including sessions that pay a copy-on-write page copy
+  mid-stream), and the warm path performs zero compiles.
+
+Writes the machine-readable dict that ``benchmarks.run`` stores as
+``BENCH_prefix.json``.
+"""
+
+from __future__ import annotations
+
+import statistics
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.models import build_model
+from repro.serving import InferenceEngine, Request
+
+from benchmarks.common import emit
+
+CACHE_LEN = 576
+PAGE = 64
+PREFIX_TOKENS = 520          # >= 512, deliberately NOT page-aligned: every
+                             # hit lands mid-page, so the copy-on-write
+                             # boundary path is exercised at admission AND
+                             # at decode append
+N_SESSIONS = 16
+
+
+def _cohort(cfg, seed=0):
+    """N prompts = one shared template prefix + short unique tails."""
+    rng = np.random.RandomState(seed)
+    prefix = list(rng.randint(8, cfg.vocab_size, size=PREFIX_TOKENS))
+    return [prefix + list(rng.randint(8, cfg.vocab_size,
+                                      size=3 + (i % 8)))
+            for i in range(N_SESSIONS)]
+
+
+def _engine(model, params, *, sharing, slots, num_pages, megastep):
+    eng = InferenceEngine(model, params, slots=slots, cache_len=CACHE_LEN,
+                          prefill_buckets=(16,), megastep=megastep,
+                          paged=True, page_size=PAGE, num_pages=num_pages,
+                          prefix_sharing=sharing)
+    assert eng.stats.decode_path == "paged", eng.paged_fallback
+    if sharing:
+        assert eng.prefix_fallback is None, eng.prefix_fallback
+    eng.warm_executables()
+    return eng
+
+
+def _sequential_run(eng, prompts, max_new):
+    """One session at a time (each admission is its own wave), so
+    ``ttft_seconds`` isolates per-session prefill cost."""
+    reqs = []
+    for p in prompts:
+        r = eng.submit(Request(prompt=list(p), max_new_tokens=max_new))
+        eng.run_to_completion()
+        reqs.append(r)
+    return reqs
+
+
+def bench_prefix(quick: bool = False, arch: str = "smollm2-1.7b",
+                 strict: bool = False):
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_new = 8 if quick else 24
+    K = 4                        # < max_new so decodes span megasteps and
+                                 # peak concurrency is observable per step
+    prompts = _cohort(cfg)
+
+    # ------------------------------------- prefill shrink + TTFT + parity --
+    base = _engine(model, params, sharing=False, slots=4, num_pages=24,
+                   megastep=K)
+    shared = _engine(model, params, sharing=True, slots=4, num_pages=24,
+                     megastep=K)
+    warm_compiles = (base.stats.compiles, shared.stats.compiles)
+    base_reqs = _sequential_run(base, prompts, max_new)
+    shared_reqs = _sequential_run(shared, prompts, max_new)
+    parity = [r.generated for r in base_reqs] == \
+        [r.generated for r in shared_reqs]
+    assert parity, "shared vs cold greedy outputs diverged"
+    assert (base.stats.compiles, shared.stats.compiles) == warm_compiles, \
+        "warm runs must not compile"
+    # session 0 is the cohort's cold seed either way; 1..N-1 are the
+    # hitting population the TTFT claim is about
+    hit_ttft = statistics.median(
+        r.ttft_seconds for r in shared_reqs[1:])
+    cold_ttft = statistics.median(
+        r.ttft_seconds for r in base_reqs[1:])
+    ttft_ratio = cold_ttft / max(hit_ttft, 1e-9)
+    prefill_ratio = (shared.stats.prefill_tokens
+                     / max(base.stats.prefill_tokens, 1))
+    prefill = {
+        "sessions": N_SESSIONS,
+        "prefix_tokens": PREFIX_TOKENS,
+        "baseline_prefill_tokens": base.stats.prefill_tokens,
+        "shared_prefill_tokens": shared.stats.prefill_tokens,
+        "prefill_token_ratio": prefill_ratio,
+        "prefix_hits": shared.stats.prefix_hits,
+        "prefix_tokens_reused": shared.stats.prefix_tokens_reused,
+        "cow_copies": shared.stats.cow_copies,
+        "p50_ttft_cold_s": cold_ttft,
+        "p50_ttft_hit_s": hit_ttft,
+        "ttft_improvement": ttft_ratio,
+    }
+    emit("prefix.prefill.token_ratio", prefill_ratio,
+         f"{shared.stats.prefill_tokens} of "
+         f"{base.stats.prefill_tokens} baseline tokens prefilled "
+         "(target <= 0.25)")
+    emit("prefix.ttft.improvement", ttft_ratio,
+         f"p50 {hit_ttft * 1e3:.1f}ms hit vs {cold_ttft * 1e3:.1f}ms cold "
+         "(target >= 2x)")
+
+    # -------------------------------------- concurrent sessions, fixed HBM --
+    # Same pool for both engines: 4 whole-lifetime reservations' worth
+    # (each session needs ceil(554/64) = 9 pages unshared). The PR-7 paged
+    # engine tops out at pool/9 concurrent; sharing admits hitters at 1-2
+    # fresh pages each.
+    pool = 4 * (CACHE_LEN // PAGE)
+    cap_base = _engine(model, params, sharing=False, slots=N_SESSIONS,
+                       num_pages=pool, megastep=K)
+    cap_shared = _engine(model, params, sharing=True, slots=N_SESSIONS,
+                         num_pages=pool, megastep=K)
+
+    def peak_concurrent(eng):
+        for p in prompts:
+            eng.submit(Request(prompt=list(p), max_new_tokens=max_new))
+        peak = 0
+        out = []
+        while eng.has_work():
+            out += eng.step()
+            peak = max(peak, len(eng.active))
+        return peak, [r.generated for r in sorted(out,
+                                                  key=lambda r: r.request_id)]
+    base_peak, base_out = peak_concurrent(cap_base)
+    shared_peak, shared_out = peak_concurrent(cap_shared)
+    concurrent_parity = base_out == shared_out
+    assert concurrent_parity, "concurrent-cohort greedy outputs diverged"
+    multiplier = shared_peak / max(base_peak, 1)
+    capacity = {
+        "num_pages": pool,
+        "baseline_peak_sessions": base_peak,
+        "shared_peak_sessions": shared_peak,
+        "session_multiplier": multiplier,
+        "shared_cow_copies": cap_shared.stats.cow_copies,
+        "prefix_cache": cap_shared.snapshot()["prefix_cache"],
+    }
+    emit("prefix.sessions.multiplier", multiplier,
+         f"{shared_peak} concurrent vs {base_peak} without sharing at "
+         f"{pool} pages (target >= 1.5x)")
+
+    if strict:
+        assert parity and concurrent_parity
+        assert prefill_ratio <= 0.25, \
+            f"shared prefill at {prefill_ratio:.2f}x baseline tokens — " \
+            "needs <= 0.25x"
+        assert ttft_ratio >= 2.0, \
+            f"hitting p50 TTFT only x{ttft_ratio:.2f} better than cold"
+        assert multiplier >= 1.5, \
+            f"sharing held {shared_peak} sessions vs {base_peak} — " \
+            "needs >= 1.5x"
+        assert shared.stats.cow_copies >= 1, \
+            "cohort never exercised copy-on-write"
+        assert shared.stats.prefix_hits == N_SESSIONS - 1
+
+    return {
+        "arch": arch, "quick": quick, "cache_len": CACHE_LEN,
+        "page_size": PAGE, "max_new_tokens": max_new, "megastep": K,
+        "prefill": prefill, "capacity": capacity,
+        "greedy_parity": parity and concurrent_parity,
+    }

@@ -33,6 +33,14 @@ bit-identical, zero warm compiles), and mid-stream snapshot shrink (live
 pages only); writes ``BENCH_paged.json`` and runs in CI as the
 ``paged-smoke`` job under a hard timeout.
 
+The ``prefix`` section (``--only prefix``) benchmarks copy-on-write
+page-level prefix sharing: 16 sessions over one >= 512-token shared
+template — total prefill tokens vs the no-sharing engine (<= 0.25x), p50
+TTFT of a prefix hit vs cold (>= 2x), concurrent sessions at a fixed
+page pool vs the unshared paged engine (>= 1.5x), greedy bit-identical,
+zero warm compiles; writes ``BENCH_prefix.json`` and runs in CI as the
+``prefix-smoke`` job under a hard timeout.
+
   PYTHONPATH=src python -m benchmarks.run [--quick/--full] [--only SECTION]
 """
 
@@ -52,7 +60,7 @@ def main() -> None:
                     help="smoke-sized runs (CI)")
     ap.add_argument("--only", default=None,
                     choices=("paper", "micro", "roofline", "serving", "pcm",
-                             "cluster", "frontdoor", "paged"))
+                             "cluster", "frontdoor", "paged", "prefix"))
     ap.add_argument("--json-out", default="BENCH_serving.json",
                     help="where the serving section writes its JSON record")
     ap.add_argument("--pcm-json-out", default="BENCH_pcm.json",
@@ -63,6 +71,8 @@ def main() -> None:
                     help="where the frontdoor section writes its JSON record")
     ap.add_argument("--paged-json-out", default="BENCH_paged.json",
                     help="where the paged section writes its JSON record")
+    ap.add_argument("--prefix-json-out", default="BENCH_prefix.json",
+                    help="where the prefix section writes its JSON record")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -95,6 +105,21 @@ def main() -> None:
               f"{ses['capacity_bytes']} cache bytes, decode "
               f"x{thr['ratio_paged_vs_slot']:.2f} vs contiguous, snapshot "
               f"shrink x{record['snapshot']['shrink_ratio']:.1f})",
+              file=sys.stderr)
+    if args.only == "prefix":
+        # copy-on-write prefix sharing: one prefill per shared template,
+        # TTFT and capacity vs the unshared paged engine — run on request
+        from benchmarks import prefix_bench
+        record = prefix_bench.bench_prefix(quick=args.quick, strict=True)
+        with open(args.prefix_json_out, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        pre, cap = record["prefill"], record["capacity"]
+        print(f"# wrote {args.prefix_json_out} (prefill tokens "
+              f"x{pre['prefill_token_ratio']:.2f} of baseline over "
+              f"{pre['sessions']} sessions sharing {pre['prefix_tokens']} "
+              f"tokens, hit TTFT x{pre['ttft_improvement']:.1f} vs cold, "
+              f"x{cap['session_multiplier']:.1f} concurrent sessions at "
+              f"{cap['num_pages']} pages, {pre['cow_copies']} COW copies)",
               file=sys.stderr)
     if args.only == "cluster":
         # join-storm + elastic-trace benchmark: live workers with real

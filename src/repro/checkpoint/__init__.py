@@ -1,2 +1,3 @@
-from repro.checkpoint.io import load_pytree, save_pytree, is_valid
+from repro.checkpoint.io import load_chunks, load_pytree, save_pytree, \
+    is_valid
 from repro.checkpoint.manager import CheckpointManager, SpillStore

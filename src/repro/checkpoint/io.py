@@ -45,19 +45,73 @@ def _sha256_file(path: str, chunk: int = 1 << 20) -> str:
     return h.hexdigest()
 
 
-def save_pytree(tree, directory: str, extra_meta: Optional[Dict] = None
-                ) -> str:
+def _chunk_spec(key: str, chunk_rows: Optional[Dict]
+                ) -> Optional[Tuple[int, int]]:
+    """(rows, axis) per chunk for a flat key, or None when the key is
+    unchunked. ``chunk_rows`` maps "/"-joined flat-key PREFIXES to either
+    a row count (chunking the leading axis) or ``{"rows": r, "axis": a}``
+    (chunking axis ``a`` — how paged KV leaves chunk along their page
+    axis wherever it sits). A key matches when it equals the prefix or
+    continues it at a "/" boundary (so ``{"c0/cache": 64}`` covers every
+    leaf under that subtree)."""
+    if not chunk_rows:
+        return None
+    for prefix, spec in chunk_rows.items():
+        if key == prefix or key.startswith(prefix + "/"):
+            if isinstance(spec, dict):
+                return int(spec["rows"]), int(spec.get("axis", 0))
+            return int(spec), 0
+    return None
+
+
+def _sha256_array(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+def save_pytree(tree, directory: str, extra_meta: Optional[Dict] = None,
+                chunk_rows: Optional[Dict[str, int]] = None) -> str:
+    """Atomic save. ``chunk_rows`` streams matching leaves in
+    LEADING-AXIS chunks of that many rows — each chunk is its own npz
+    entry ``<key>#chunkNNNNN`` with its own sha256 in the manifest, so
+    integrity is verifiable (and a partial restore addressable) at chunk
+    granularity instead of whole-file. Paged KV snapshots pass one row per
+    page, making every chunk boundary a page boundary."""
     os.makedirs(os.path.dirname(directory) or ".", exist_ok=True)
     tmp = tempfile.mkdtemp(prefix=".ckpt_tmp_",
                            dir=os.path.dirname(directory) or ".")
     try:
         flat = _flatten(tree)
-        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        entries: Dict[str, np.ndarray] = {}
+        chunks: Dict[str, Dict] = {}
+        for key, v in flat.items():
+            spec = _chunk_spec(key, chunk_rows)
+            if spec is None or v.ndim == 0:
+                entries[key] = v
+                continue
+            rows, axis = spec
+            if rows < 1:
+                raise ValueError(f"chunk_rows for {key!r} must be >= 1, "
+                                 f"got {rows}")
+            if not -v.ndim <= axis < v.ndim:
+                raise ValueError(f"chunk axis {axis} out of range for "
+                                 f"{key!r} with shape {v.shape}")
+            dim = v.shape[axis]
+            n = -(-dim // rows) if dim else 0
+            sel = (slice(None),) * (axis % v.ndim)
+            digests = []
+            for i in range(n):
+                part = v[sel + (slice(i * rows, (i + 1) * rows),)]
+                entries[f"{key}#chunk{i:05d}"] = part
+                digests.append(_sha256_array(part))
+            chunks[key] = {"rows": rows, "axis": axis, "count": n,
+                           "sha256": digests}
+        np.savez(os.path.join(tmp, "arrays.npz"), **entries)
         digest = _sha256_file(os.path.join(tmp, "arrays.npz"))
         manifest = {
             "keys": sorted(flat.keys()),
             "dtypes": {k: str(v.dtype) for k, v in flat.items()},
             "shapes": {k: list(v.shape) for k, v in flat.items()},
+            "chunks": chunks,
             "sha256": digest,
             "nbytes": int(sum(v.nbytes for v in flat.values())),
             "meta": extra_meta or {},
@@ -71,6 +125,51 @@ def save_pytree(tree, directory: str, extra_meta: Optional[Dict] = None
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
+
+
+def _np_dtype(name: str):
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def load_chunks(directory: str, key: str, indices=None):
+    """Partial restore of one chunked leaf: return ``(chunks, spec)``
+    where ``chunks`` holds the requested chunk arrays (all of them when
+    ``indices`` is None), each verified against its manifest sha256. This
+    is the page-granular read path: a paged-KV spill saved with one row
+    per page can restore any subset of pages without touching the rest of
+    the payload bytes it shares a file with."""
+    if not is_valid(directory):
+        raise FileNotFoundError(f"no valid checkpoint at {directory}")
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    spec = manifest.get("chunks", {}).get(key)
+    if spec is None:
+        raise KeyError(f"{key!r} is not a chunked leaf of {directory}")
+    data = np.load(os.path.join(directory, "arrays.npz"))
+    idx = range(spec["count"]) if indices is None else indices
+    out = []
+    for i in idx:
+        arr = _restore_dtype(np.asarray(data[f"{key}#chunk{i:05d}"]),
+                             manifest["dtypes"][key])
+        got = _sha256_array(arr)
+        if got != spec["sha256"][i]:
+            raise ValueError(
+                f"chunk {i} of {key!r} failed verification "
+                f"({got[:12]} != {spec['sha256'][i][:12]})")
+        out.append(arr)
+    return out, spec
+
+
+def _restore_dtype(arr, name):
+    # npz stores ml_dtypes (bfloat16, fp8...) as raw void bytes
+    if arr.dtype.kind == "V":
+        import ml_dtypes
+        return arr.view(np.dtype(getattr(ml_dtypes, name)))
+    return arr
 
 
 def is_valid(directory: str) -> bool:
@@ -94,16 +193,21 @@ def load_pytree(directory: str, like: Any = None) -> Tuple[Any, Dict]:
     with open(os.path.join(directory, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(directory, "arrays.npz"))
+    chunks = manifest.get("chunks", {})
 
-    def _restore_dtype(arr, name):
-        # npz stores ml_dtypes (bfloat16, fp8...) as raw void bytes
-        if arr.dtype.kind == "V":
-            import ml_dtypes
-            return arr.view(np.dtype(getattr(ml_dtypes, name)))
-        return arr
+    def _load_key(k):
+        spec = chunks.get(k)
+        if spec is None:
+            return _restore_dtype(data[k], manifest["dtypes"][k])
+        parts = [_restore_dtype(data[f"{k}#chunk{i:05d}"],
+                                manifest["dtypes"][k])
+                 for i in range(spec["count"])]
+        if not parts:
+            return np.zeros(manifest["shapes"][k],
+                            _np_dtype(manifest["dtypes"][k]))
+        return np.concatenate(parts, axis=spec.get("axis", 0))
 
-    flat = {k: _restore_dtype(data[k], manifest["dtypes"][k])
-            for k in manifest["keys"]}
+    flat = {k: _load_key(k) for k in manifest["keys"]}
     if like is not None:
         leaves_with_path = jax.tree_util.tree_flatten_with_path(like)[0]
         treedef = jax.tree_util.tree_structure(like)

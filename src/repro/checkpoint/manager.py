@@ -93,9 +93,11 @@ class SpillStore:
             raise ValueError(f"invalid spill key {key!r}")
         return os.path.join(self.directory, key)
 
-    def save(self, key: str, tree: Any, meta: Optional[Dict] = None) -> str:
+    def save(self, key: str, tree: Any, meta: Optional[Dict] = None,
+             chunk_rows: Optional[Dict[str, int]] = None) -> str:
         return io.save_pytree(tree, self._path(key),
-                              extra_meta={"key": key, **(meta or {})})
+                              extra_meta={"key": key, **(meta or {})},
+                              chunk_rows=chunk_rows)
 
     def load(self, key: str, like: Any = None) -> Tuple[Any, Dict]:
         return io.load_pytree(self._path(key), like=like)

@@ -421,16 +421,19 @@ class PCMClient:
         return self._frontdoor
 
     def session(self, context: ContextLike, *, tenant: str = "default",
-                slo=None, session_id: Optional[str] = None):
+                slo=None, session_id: Optional[str] = None,
+                prefix_key: Optional[str] = None):
         """Open a streaming session against ``context`` (whose built value
         must expose an InferenceEngine under the front door's
         ``engine_var``, default ``"engine"``). Works on the live AND
         simulator backends; ``session.submit(prompt)`` returns a
-        TokenStream or raises ShedError on admission backpressure."""
+        TokenStream or raises ShedError on admission backpressure.
+        ``prefix_key`` names the session's shared prompt template so the
+        router colocates template-mates on one lane (prefix-cache hits)."""
         from repro.serving.session import SLOClass
         return self.frontdoor().open_session(
             context, tenant=tenant, slo=slo or SLOClass.BATCH,
-            session_id=session_id)
+            session_id=session_id, prefix_key=prefix_key)
 
     def stream(self, prompt, *, context: ContextLike,
                tenant: str = "default", slo=None,

@@ -258,9 +258,28 @@ class ContextSnapshot:
         # in flight concurrently (e.g. demote on two workers) — sharing a
         # directory would let the loser's discard delete the winner's data
         self.spill_key = f"ctx_{self.key}_{uuid.uuid4().hex[:8]}"
+        # paged-KV components (their offload dict carries the live-page
+        # index) stream their cache leaves through checkpoint/io in
+        # PAGE-ALIGNED chunks: each gathered leaf is sliced along its own
+        # page axis (``_paged_page_axes``, a pytree of ints mirroring the
+        # cache) in whole-page groups, so every chunk boundary is a page
+        # boundary — integrity (per-chunk sha256) and partial reads
+        # (io.load_chunks) address whole pages, never splitting one
+        from repro.checkpoint.io import _flatten
+        chunk_rows: dict = {}
+        for name, comp in self.host_state.items():
+            if not (isinstance(comp, dict) and "_paged_live_ids" in comp):
+                continue
+            axes = comp.get("_paged_page_axes")
+            if axes is None:                    # pre-axis snapshots
+                chunk_rows[f"{name}/cache"] = 8
+                continue
+            for key, ax in _flatten({"cache": axes}).items():
+                chunk_rows[f"{name}/{key}"] = {"rows": 8, "axis": int(ax)}
         spill_store.save(self.spill_key, self.host_state,
                          meta={"context_key": self.key,
-                               "recipe": self.recipe.name})
+                               "recipe": self.recipe.name},
+                         chunk_rows=chunk_rows or None)
         self._skeleton = jax.tree_util.tree_map(
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)
             if hasattr(a, "shape") else a, self.host_state)

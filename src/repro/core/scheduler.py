@@ -172,6 +172,13 @@ class ContextAwareScheduler:
         # node SnapshotPool residency oracle (key -> Tier or None),
         # installed by the backend: the POOL/DISK rungs of the ladder
         self.pool_tier: Optional[Callable[[str], Optional[Tier]]] = None
+        # template-prefix placement oracle ((task, worker_id) -> bool),
+        # installed by serving layers that know which worker's engine
+        # already holds a task's shared prompt prefix in its page-level
+        # prefix cache (repro.serving.paged.PrefixCache). A hit outranks
+        # every equally-placed candidate — the hitting worker skips the
+        # shared prefill entirely, which no DeviceProfile edge buys back
+        self.prefix_hit: Optional[Callable[[Task, str], bool]] = None
         self.fetch_log: List[FetchDecision] = []
 
         self.queue: Deque[Task] = collections.deque()
@@ -294,6 +301,20 @@ class ContextAwareScheduler:
         return (-float(getattr(w.profile, "fp16_tflops", 0.0) or 0.0),
                 w.worker_id)
 
+    def _placement_rank(self, task: Task):
+        """Candidate sort for warm/bootstrap placement. With a
+        ``prefix_hit`` oracle installed, a worker holding the task's
+        shared prompt prefix sorts ahead of every other candidate at the
+        same residency rung; compute rank breaks ties as before. Without
+        one this is exactly ``_compute_rank``."""
+        if self.prefix_hit is None:
+            return self._compute_rank
+
+        def rank(w: WorkerInfo):
+            return (0 if self.prefix_hit(task, w.worker_id) else 1,
+                    self._compute_rank(w))
+        return rank
+
     @staticmethod
     def _restore_rank(w: WorkerInfo):
         """Sort key for snapshot-promotion placement: restore cost is one
@@ -315,7 +336,8 @@ class ContextAwareScheduler:
             keys = task.keys()
             warm = sorted((w for w in idle
                            if all(w.store.has(k, Tier.DEVICE)
-                                  for k in keys)), key=self._compute_rank)
+                                  for k in keys)),
+                          key=self._placement_rank(task))
             target = None
             warm_start = False
             if warm:
@@ -388,7 +410,7 @@ class ContextAwareScheduler:
         "fetch" (fetch issued, worker consumed from ``idle``), "wait"
         (donors saturated, hold the queue for a completing transfer) or
         "start" (no cheap source — cold-start as before)."""
-        for w in sorted(idle, key=self._compute_rank):
+        for w in sorted(idle, key=self._placement_rank(task)):
             # bootstrap the first context THIS candidate is missing
             recipe = next((r for r in task.recipes
                            if not w.store.has(r.key(), Tier.DEVICE)

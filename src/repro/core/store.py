@@ -40,6 +40,20 @@ with live context. The allocated pool (``capacity_bytes``) is an
 HBM-only cost that is rebuilt zero-filled at restore; contiguous slot
 caches estimate the same split via ``repro.serving.kvcache.live_bytes``.
 
+Pages can be SHARED: with prefix sharing on, a page may be referenced by
+several slot reservations and by the engine's radix prefix cache at once
+(``repro.serving.paged.PrefixCache`` — copy-on-write page-level prefix
+sharing). The live set that demotes is the refcount>0 set, deduplicated:
+a page three requests map is one page of snapshot bytes, so sharing
+shrinks every rung below DEVICE exactly as it shrinks HBM. Demotion
+carries the per-page refcounts alongside the live-page index (restore
+validates them; the allocator and prefix cache ride on the engine object
+as host metadata, like the AOT executables), and the HOST_RAM ->
+LOCAL_DISK spill streams paged cache leaves through ``checkpoint/io`` in
+PAGE-ALIGNED chunks — one manifest sha256 per chunk of whole pages, so
+spill integrity and partial reads (``io.load_chunks``) address page
+boundaries, never a byte range that splits a page.
+
 The PEER edge is the join-storm bootstrap path (paper §4.1): a cold
 worker reaches DEVICE directly from a warm peer's exported template
 (``repro.core.context.export_context`` — non-destructive, the donor keeps

@@ -17,6 +17,13 @@ is at/past the slot's valid length are skipped entirely, so per-slot work
 scales with live pages. The MLA variant attends over paged compressed
 latents ``c_kv`` plus the shared rope keys and accumulates output in
 latent space (absorbed-matrix decode: the caller applies ``w_uv``/``wo``).
+
+Copy-on-write prefix sharing (``repro.serving.paged.PrefixCache``) needs
+NO kernel change: sharing is pure page-table aliasing — two slots whose
+table rows name the same physical page read the same KV through the same
+scalar-prefetched gather, and the engine guarantees a shared page is
+never written (first write copies it and repoints the row, so by the time
+this kernel runs every writable page is exclusively owned).
 """
 
 from __future__ import annotations

@@ -144,7 +144,8 @@ def blockwise_attention(q, k, v, *, scale: float, causal: bool,
     """Online-softmax attention; never materializes (S, T) for the full T.
 
     q (B,S,H,D); k,v (B,T,H,D) — same head count (callers repeat GQA KV).
-    ``q_offset`` shifts query positions (chunked prefill continuation).
+    ``q_offset`` shifts query positions (chunked prefill continuation); a
+    (B,) array gives every row its own offset (shared-prefix tail prefill).
     ``kv_len`` (B,) masks out padding keys.
     """
     B, S, H, D = q.shape
@@ -162,7 +163,11 @@ def blockwise_attention(q, k, v, *, scale: float, causal: bool,
     kc = k.reshape(B, nc, chunk, H, D).swapaxes(0, 1)  # (nc,B,C,H,D)
     vc = v.reshape(B, nc, chunk, H, D).swapaxes(0, 1)
 
-    q_pos = jnp.arange(S, dtype=jnp.int32) + q_offset          # (S,)
+    per_row = isinstance(q_offset, jax.Array) and q_offset.ndim == 1
+    if per_row:
+        q_pos = q_offset[:, None] + jnp.arange(S, dtype=jnp.int32)  # (B,S)
+    else:
+        q_pos = jnp.arange(S, dtype=jnp.int32) + q_offset           # (S,)
     qf = q.astype(jnp.float32) * scale
 
     def step(carry, inp):
@@ -170,12 +175,20 @@ def blockwise_attention(q, k, v, *, scale: float, causal: bool,
         ci, k_i, v_i = inp
         s = jnp.einsum("bshd,bchd->bshc", qf, k_i.astype(jnp.float32))
         k_pos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)  # (C,)
-        mask = jnp.ones((S, chunk), dtype=bool)
-        if causal:
-            mask &= q_pos[:, None] >= k_pos[None, :]
-        if window:
-            mask &= (q_pos[:, None] - k_pos[None, :]) < window
-        s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+        if per_row:
+            mask = jnp.ones((B, S, chunk), dtype=bool)
+            if causal:
+                mask &= q_pos[:, :, None] >= k_pos[None, None, :]
+            if window:
+                mask &= (q_pos[:, :, None] - k_pos[None, None, :]) < window
+            s = jnp.where(mask[:, :, None, :], s, NEG_INF)
+        else:
+            mask = jnp.ones((S, chunk), dtype=bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            s = jnp.where(mask[None, :, None, :], s, NEG_INF)
         if kv_len is not None:
             valid = k_pos[None, :] < kv_len[:, None]             # (B,C)
             s = jnp.where(valid[:, None, None, :], s, NEG_INF)
@@ -225,6 +238,62 @@ def attend_prefill(p, x, cfg, *, positions, layer_window: int = 0,
                    p["wo"].astype(cdt(cfg)))
     y = shard(y, "batch", "seq", None)
     return (y, (k, v)) if return_kv else (y, None)
+
+
+def _merge_rows(view: jax.Array, tail: jax.Array,
+                starts: jax.Array) -> jax.Array:
+    """Overlay freshly computed tail rows onto a gathered cache view.
+
+    view (B, L, ...) holds per-row cache content (shared prefix pages plus
+    whatever the row's private pages currently contain); tail (B, Tb, ...)
+    holds new values for logical positions [start, start + Tb). Row b of
+    the result equals view outside that span and tail inside it — prefix
+    positions pass through untouched (bitwise), which is what keeps the
+    shared-prefill path exact."""
+    B, L = view.shape[:2]
+    Tb = tail.shape[1]
+    pos = jnp.arange(L, dtype=jnp.int32)[None, :]              # (1, L)
+    idx = jnp.clip(pos - starts[:, None], 0, Tb - 1)           # (B, L)
+    idxe = jnp.broadcast_to(
+        idx.reshape((B, L) + (1,) * (tail.ndim - 2)),
+        (B, L) + tail.shape[2:])
+    gathered = jnp.take_along_axis(tail.astype(view.dtype), idxe, axis=1)
+    in_tail = (pos >= starts[:, None]) & (pos < starts[:, None] + Tb)
+    return jnp.where(in_tail.reshape((B, L) + (1,) * (view.ndim - 2)),
+                     gathered, view)
+
+
+def attend_prefill_shared(p, x, cfg, *, positions, starts, kv_len,
+                          view_k, view_v):
+    """Tail-only prefill attention for page-level prefix sharing.
+
+    x (B,Tb,d) embeds ONLY the unshared tail tokens of each row;
+    ``positions`` (B,Tb) are their absolute positions (starts[b] + i);
+    view_k/view_v (B,L,Hkv,D) are the rows' cache views gathered through
+    the page table, already holding the shared prefix KV. Computes q/k/v
+    for the tail, merges tail KV into the view at each row's offset, and
+    runs causal attention with per-row query offsets over the merged KV —
+    masked garbage beyond ``kv_len`` contributes exact zeros, so outputs
+    are bit-identical to a full-prompt prefill of the same row.
+
+    Returns (y (B,Tb,d), merged narrow (k, v)) — the merged KV is what the
+    caller scatters back into the row's pages (columns >= the shared-page
+    count only; shared pages are never written)."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    q = shard(q, "batch", "seq", "heads", None)
+    mk = _merge_rows(view_k, k, starts)
+    mv = _merge_rows(view_v, v, starts)
+    mk = shard(mk, "batch", "seq", None, None)
+    mv = shard(mv, "batch", "seq", None, None)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    out = blockwise_attention(q, _repeat_kv(mk, cfg.n_heads),
+                              _repeat_kv(mv, cfg.n_heads), scale=scale,
+                              causal=True, q_offset=starts, kv_len=kv_len)
+    out = shard(out, "batch", "seq", "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(cdt(cfg)),
+                   p["wo"].astype(cdt(cfg)))
+    y = shard(y, "batch", "seq", None)
+    return y, (mk, mv)
 
 
 # --------------------------------------------------------------- decode ----

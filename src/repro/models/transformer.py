@@ -51,6 +51,15 @@ class Model:
     # families whose state does not page (SSM/xLSTM/SWA/audio/vlm) — the
     # engine keeps the contiguous slot path for them.
     decode_paged: Optional[Callable] = None
+    # tail-only prefill for page-level prefix sharing:
+    # prefill_shared(params, tail_tokens (B,Tb), lengths (B,), starts (B,),
+    # view_cache) -> (last_logits (B,V), merged_view_cache). ``view_cache``
+    # is the rows' paged KV gathered into a contiguous view (shared prefix
+    # already resident); only positions [starts, lengths) are computed.
+    # None when tail-only compute could diverge from a full prefill: MLA
+    # (latents recompress), MoE (capacity dropping is sequence-dependent),
+    # or sliding-window ring buffers (not paged anyway).
+    prefill_shared: Optional[Callable] = None
 
 
 # ---------------------------------------------------------- block pieces ---
@@ -89,6 +98,21 @@ def dense_block_prefill(p, x, cfg, *, positions, kv_len, window,
     else:
         m, aux = apply_mlp(p["mlp"], h, cfg), jnp.float32(0.0)
     return x + m, aux, kv
+
+
+def dense_block_prefill_shared(p, x, cfg, *, positions, starts, kv_len,
+                               view_kv):
+    """``dense_block_prefill`` over tail tokens only: attention merges the
+    freshly computed tail KV into the row's gathered page view at each
+    row's offset. Returns (x, merged narrow kv) — the merged view is the
+    layer's new cache content. Non-MoE, non-MLA only (see Model)."""
+    h = apply_norm(p["ln1"], x, cfg)
+    a, kv = attn.attend_prefill_shared(p["attn"], h, cfg, positions=positions,
+                                       starts=starts, kv_len=kv_len,
+                                       view_k=view_kv[0], view_v=view_kv[1])
+    x = x + a
+    h = apply_norm(p["ln2"], x, cfg)
+    return x + apply_mlp(p["mlp"], h, cfg), kv
 
 
 def dense_block_decode(p, x, cfg, *, lengths, window, cache_kv):
@@ -276,6 +300,42 @@ def build_decoder(cfg) -> Model:
             new_cache["dense0"] = new_dense0
         return logits, new_cache
 
+    def prefill_shared(params, tokens, lengths, starts, view, extra=None):
+        """Tail-only prefill: ``tokens`` (B,Tb) holds prompt[starts:] per
+        row, ``view`` is the row's paged KV gathered contiguous (prefix
+        positions already populated). Logits come from logical position
+        ``lengths - 1`` = tail index ``lengths - starts - 1``."""
+        B, Tb = tokens.shape
+        x = embed(params["embed"], tokens, cfg)
+        positions = starts[:, None] + jnp.arange(Tb, dtype=jnp.int32)[None, :]
+
+        new_dense0 = []
+        for blk, vkv in zip(params.get("dense0", []),
+                            view.get("dense0", [])):
+            x, kv = dense_block_prefill_shared(
+                blk, x, cfg, positions=positions, starts=starts,
+                kv_len=lengths, view_kv=vkv)
+            new_dense0.append(kv)
+
+        def body(x, xs):
+            layer_params, vkv = xs
+            x, kv = dense_block_prefill_shared(
+                layer_params, x, cfg, positions=positions, starts=starts,
+                kv_len=lengths, view_kv=vkv)
+            return x, kv
+
+        x, layers_kv = layer_scan(body, x, (params["layers"],
+                                            view["layers"]))
+        x = apply_norm(params["final_norm"], x, cfg)
+        last = jnp.take_along_axis(
+            x, jnp.maximum(lengths - starts - 1, 0)[:, None, None],
+            axis=1)[:, 0]
+        logits = unembed(params["embed"], last[:, None], cfg)[:, 0]
+        new_view = {"layers": layers_kv}
+        if new_dense0:
+            new_view["dense0"] = new_dense0
+        return logits, new_view
+
     def decode_step(params, tokens, lengths, cache, extra=None):
         B = tokens.shape[0]
         x = embed(params["embed"], tokens, cfg)
@@ -335,7 +395,9 @@ def build_decoder(cfg) -> Model:
             new_pages["dense0"] = new_dense0
         return logits, new_pages
 
+    shareable = not (window or cfg.moe.enabled or cfg.attention == "mla")
     return Model(cfg=cfg, init=init, forward_hidden=forward_hidden,
                  forward=forward, init_cache=init_cache, prefill=prefill,
                  decode_step=decode_step,
-                 decode_paged=None if window else decode_paged)
+                 decode_paged=None if window else decode_paged,
+                 prefill_shared=prefill_shared if shareable else None)

@@ -124,6 +124,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.layers import cdt
 from repro.models.transformer import Model
 from repro.serving import kvcache
 from repro.serving import paged as paging
@@ -155,7 +156,8 @@ class InferenceEngine:
                  admission: str = "continuous",
                  paged: bool = False,
                  page_size: int = 64,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 prefix_sharing: bool = True):
         if admission not in ("continuous", "drain"):
             raise ValueError(f"admission must be 'continuous' or 'drain', "
                              f"got {admission!r}")
@@ -233,6 +235,40 @@ class InferenceEngine:
         self._cache_dtype = jax.tree_util.tree_leaves(self.cache)[0].dtype
         self._axes = kvcache.batch_axes(model.init_cache, cache_len,
                                         cache_dtype)
+
+        # ---- page-level prefix-sharing resolution ----------------------
+        # prefix_sharing=True is likewise a REQUEST, resolved only on the
+        # paged path: sharing is a page-table aliasing trick, so it needs
+        # the table, a model whose tail-only prefill is exact
+        # (non-MoE/MLA/SWA — see Model.prefill_shared), a cache dtype that
+        # doesn't round the compute dtype (gathered prefix KV must be
+        # bitwise what a full prefill would have produced), and a page
+        # size dividing the 1024-token blockwise-attention chunk (shared
+        # and full prefills then pad to identical chunk boundaries).
+        self._prefix_cache: Optional[paging.PrefixCache] = None
+        self.prefix_fallback: Optional[str] = None
+        if paged and prefix_sharing:
+            if not self._paged:
+                self.prefix_fallback = "engine is not paged: " + (
+                    self.paged_fallback or "")
+            elif getattr(model, "prefill_shared", None) is None:
+                self.prefix_fallback = (
+                    "model has no shared-prefix prefill (MoE capacity "
+                    "dropping and MLA recompression are "
+                    "sequence-dependent; SWA does not page)")
+            elif (np.dtype(self._cache_dtype)
+                  != np.dtype(jax.dtypes.canonicalize_dtype(cdt(self.cfg)))):
+                self.prefix_fallback = (
+                    "cache dtype narrows the compute dtype — shared prefix "
+                    "KV would round where a full prefill would not")
+            elif 1024 % self.page_size:
+                self.prefix_fallback = (
+                    f"page_size {self.page_size} does not divide the "
+                    f"1024-token attention chunk")
+            else:
+                self._prefix_cache = paging.PrefixCache(self.page_size)
+        elif paged:
+            self.prefix_fallback = "disabled (prefix_sharing=False)"
         # length-bounded decode: megasteps run on a bucketed cache PREFIX
         # sized from host-tracked lengths, so per-token work scales with
         # the live context, not allocated capacity. Only decoder-only
@@ -303,6 +339,14 @@ class InferenceEngine:
                                         donate_argnums=pre_donate)
             self._DEVICE_STATE_FIELDS = (
                 InferenceEngine._DEVICE_STATE_FIELDS + ("page_table",))
+            if self._prefix_cache is not None:
+                self._shared_prefill_jit = jax.jit(
+                    self._shared_prefill_impl,
+                    donate_argnums=(tuple(range(12, 22)) if donate_cache
+                                    else ()))
+                self._cow_jit = jax.jit(
+                    self._copy_pages_impl,
+                    donate_argnums=(0, 1) if donate_cache else ())
         else:
             self._mega_donate = (1, 2, 3, 5, 6, 9) if donate_cache else ()
             pre_donate = (8, 9, 10, 11, 12, 13, 14, 15, 16) if donate_cache \
@@ -466,6 +510,73 @@ class InferenceEngine:
         stop_table = scat(stop_table, wave_stops)
         return (toks, row_active, page_table, cache, lengths, last_tokens,
                 temps, active, gen_counts, max_news, stop_table, rng)
+
+    def _shared_prefill_impl(self, params, tokens, lens, starts, slot_ids,
+                             valid, wave_temps, wave_max_new, wave_stops,
+                             start_pages, pt_src, pt_dst, page_table, cache,
+                             lengths, last_tokens, temps, active, gen_counts,
+                             max_news, stop_table, rng):
+        """Prefix-sharing twin of ``_paged_prefill_impl``: ``tokens`` holds
+        only each row's unshared TAIL (prompt[starts:]), bucketed on tail
+        length. The row's full page view is gathered through ``pt_src``
+        (shared prefix pages resident, private columns don't matter yet),
+        the model computes KV for the tail only and merges it into the
+        view at each row's offset, and the merged view scatters back
+        through ``pt_dst`` restricted to columns >= ``start_pages`` — so
+        shared pages are READ, never written. When a hit ends mid-page the
+        boundary column differs between the two tables (src = the shared
+        original, dst = a fresh private page): the copy-on-write copy is
+        the scatter itself, fused into this dispatch. Cold rows ride the
+        same executable with starts == 0 and pt_src == pt_dst, computing
+        exactly what ``_paged_prefill_impl`` would — one executable per
+        TAIL bucket covers mixed hit/cold waves."""
+        rng, k = jax.random.split(rng)
+        view = paging.gather_view(cache, pt_src, self._axes)
+        logits, merged = self.model.prefill_shared(params, tokens, lens,
+                                                   starts, view,
+                                                   extra=self.extra)
+        toks = sample(logits, k, wave_temps, vocab_size=self.cfg.vocab_size,
+                      active=valid)
+        cols = jnp.arange(self.max_pages, dtype=jnp.int32)[None, :]
+        dest = jnp.where(cols >= start_pages[:, None], pt_dst, self.trash)
+        cache = paging.scatter_view(cache, merged, dest, self._axes,
+                                    valid=valid, trash=self.trash)
+        page_table = page_table.at[slot_ids].set(
+            jnp.where(valid[:, None], pt_dst, page_table[slot_ids]))
+        stopped = jnp.any(toks[:, None] == wave_stops, axis=1)
+        full = wave_max_new <= 1
+        over = lens >= self.cache_len - 1
+        row_active = valid & ~(stopped | full | over)
+
+        def scat(dst, src):
+            keep = valid.reshape((-1,) + (1,) * (src.ndim - 1))
+            return dst.at[slot_ids].set(
+                jnp.where(keep, src.astype(dst.dtype), dst[slot_ids]))
+
+        lengths = scat(lengths, lens)
+        last_tokens = scat(last_tokens, toks)
+        temps = scat(temps, wave_temps)
+        active = scat(active, row_active)
+        gen_counts = scat(gen_counts, jnp.where(valid, 1, 0))
+        max_news = scat(max_news, wave_max_new)
+        stop_table = scat(stop_table, wave_stops)
+        return (toks, row_active, page_table, cache, lengths, last_tokens,
+                temps, active, gen_counts, max_news, stop_table, rng)
+
+    def _copy_pages_impl(self, page_table, cache, src, dst, rows, cols,
+                         valid):
+        """Device half of a decode-append copy-on-write: copy whole pages
+        ``src[i] -> dst[i]`` in every cache leaf and repoint
+        ``page_table[rows[i], cols[i]]`` at ``dst[i]`` — one dispatch for
+        up to ``slots`` copies. Padding entries aim src and dst at TRASH
+        (a value-preserving self-copy) and rewrite their table cell with
+        its current value; the host guarantees (rows, cols) pairs are
+        distinct so the scatter has no write races."""
+        cache = paging.copy_pages(cache, src, dst, self._axes)
+        cur = page_table[rows, cols]
+        page_table = page_table.at[rows, cols].set(
+            jnp.where(valid, dst, cur))
+        return page_table, cache
 
     def _paged_megastep_impl(self, params, page_table, cache, lengths,
                              last_tokens, temps, active, gen_counts,
@@ -660,6 +771,40 @@ class InferenceEngine:
             key, self._prefill_jit, *head,
             st[0], st[1], st[2], st[3], st[4], st[5], st[6], st[7], st[8])
 
+    def _shared_prefill_exe(self, bucket: int):
+        key = ("prefill_shared", bucket)
+        exe = self._exe.get(key)
+        if exe is not None:
+            return exe
+        st = self._state_sds()
+        params = jax.tree_util.tree_map(self._sds, self.params)
+        i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+        head = (params,
+                i32(self.slots, bucket), i32(self.slots), i32(self.slots),
+                i32(self.slots),
+                jax.ShapeDtypeStruct((self.slots,), jnp.bool_),
+                jax.ShapeDtypeStruct((self.slots,), jnp.float32),
+                i32(self.slots), i32(self.slots, self.max_stop_tokens),
+                i32(self.slots),
+                i32(self.slots, self.max_pages),
+                i32(self.slots, self.max_pages),
+                i32(self.slots, self.max_pages))
+        return self._get_exe(
+            key, self._shared_prefill_jit, *head,
+            st[0], st[1], st[2], st[3], st[4], st[5], st[6], st[7], st[8])
+
+    def _cow_exe(self):
+        key = ("cowcopy",)
+        exe = self._exe.get(key)
+        if exe is not None:
+            return exe
+        cache_sds = jax.tree_util.tree_map(self._sds, self.cache)
+        i32v = jax.ShapeDtypeStruct((self.slots,), jnp.int32)
+        pt = jax.ShapeDtypeStruct((self.slots, self.max_pages), jnp.int32)
+        return self._get_exe(
+            key, self._cow_jit, pt, cache_sds, i32v, i32v, i32v, i32v,
+            jax.ShapeDtypeStruct((self.slots,), jnp.bool_))
+
     # -------------------------------------------- PCM tier offload/restore --
     _DEVICE_STATE_FIELDS = ("params", "cache", "lengths", "last_tokens",
                             "temps", "active_mask", "gen_counts", "max_news",
@@ -698,6 +843,17 @@ class InferenceEngine:
         host = jax.device_get(state)
         if self._paged:
             host["_paged_live_ids"] = live
+            # sharing structure rides along for integrity checking: the
+            # refcount of each live page at offload time (allocator and
+            # prefix cache stay attached to this object, so restore only
+            # validates — it does not rebuild)
+            host["_paged_refcounts"] = np.array(
+                [self._alloc.refcount(int(p)) for p in live], np.int32)
+            # per-leaf page axis of the gathered cache (pytree of ints
+            # mirroring it): the spill path chunks each leaf along THIS
+            # axis, so every on-disk chunk boundary is a page boundary
+            host["_paged_page_axes"] = jax.tree_util.tree_map(
+                lambda a: np.int32(a), self._axes)
         for name in self._DEVICE_STATE_FIELDS:
             setattr(self, name, None)
         return host
@@ -719,6 +875,11 @@ class InferenceEngine:
                 raise ValueError("paged snapshot is missing the live-page "
                                  "index (_paged_live_ids)")
             live = np.asarray(host_state["_paged_live_ids"], np.int32)
+            refs = host_state.get("_paged_refcounts")
+            if refs is not None and len(refs) != live.size:
+                raise ValueError(
+                    f"paged snapshot refcount vector ({len(refs)}) does not "
+                    f"match its live-page index ({live.size})")
             device = jax.device_put({n: host_state[n]
                                      for n in self._DEVICE_STATE_FIELDS
                                      if n != "cache"})
@@ -800,6 +961,11 @@ class InferenceEngine:
         if self._paged:
             clone._alloc = paging.PageAllocator(self.num_pages,
                                                 self.page_size)
+            if self._prefix_cache is not None:
+                # the prefix trie indexes THIS engine's pool pages — a
+                # receiver starts with an empty pool, so it starts with an
+                # empty cache and re-earns its prefixes
+                clone._prefix_cache = paging.PrefixCache(self.page_size)
         for name in self._DEVICE_STATE_FIELDS:
             setattr(clone, name, None)
         return clone
@@ -816,6 +982,10 @@ class InferenceEngine:
         if self._paged:
             for npb in self._page_buckets:
                 self._paged_megastep_exe(npb)
+            if self._prefix_cache is not None:
+                for b in self.prefill_buckets:
+                    self._shared_prefill_exe(b)
+                self._cow_exe()
         else:
             reachable = (self.decode_buckets if self.megastep >= 4
                          else (self.cache_len,))
@@ -891,24 +1061,117 @@ class InferenceEngine:
         self.run_to_completion()
         return [r.generated for r in reqs]
 
+    def cancel(self, req: Request) -> bool:
+        """Withdraw a request. Queued requests are removed outright;
+        running ones are torn down — slot freed, page reservation released
+        (shared prefix pages survive via their cache refcount), device row
+        deactivated in one host roundtrip — without disturbing other
+        slots. Returns False when the request is already finished or
+        unknown to this engine. This is the shed/abandon path: a caller
+        that admits a request and then drops it MUST cancel it, or its
+        slot and page reservation leak until engine teardown."""
+        if req.done:
+            return False
+        try:
+            self.queue.remove(req)
+            req.state = RequestState.CANCELLED
+            req.finished_time = time.monotonic()
+            return True
+        except ValueError:
+            pass
+        s = req.slot
+        if s is None or self.active.get(s) is not req:
+            return False
+        self._require_resident()
+        del self.active[s]
+        self.free_slots.append(s)
+        if self._paged:
+            self._alloc.release(s)
+        self._host_lengths[s] = 0
+        active = np.asarray(self.active_mask).copy()
+        lengths = np.asarray(self.lengths).copy()
+        active[s] = False
+        lengths[s] = 0
+        self.active_mask = jnp.asarray(active)
+        self.lengths = jnp.asarray(lengths)
+        req.state = RequestState.CANCELLED
+        req.finished_time = time.monotonic()
+        return True
+
+    def drop_prefix_cache(self) -> int:
+        """Evict every reclaimable prefix-cache page; return count freed.
+
+        Live reservations are untouched: a page some active slot still
+        maps (refcount > 1) is skipped and stays cached. On an idle
+        engine this empties the cache entirely. Use under memory
+        pressure or before measuring idle pool occupancy."""
+        if self._prefix_cache is None:
+            return 0
+        return self._prefix_cache.evict(self._alloc.num_pages, self._alloc)
+
     # ------------------------------------------------------------ internal --
+    def _ensure_free_pages(self, n: int) -> bool:
+        """Free-list admission with prefix-cache pressure relief: when a
+        reservation doesn't fit, evict LRU cache-only prefix pages
+        (refcount 1 — never pages a live slot maps) until it does or
+        nothing reclaimable remains. Live reservations always win over
+        cached prefixes."""
+        if self._alloc.can_reserve(n):
+            return True
+        if self._prefix_cache is not None:
+            self._prefix_cache.evict(n - self._alloc.free_pages, self._alloc)
+        return self._alloc.can_reserve(n)
+
     def _admit_wave(self) -> List[Request]:
+        sharing = self._paged and self._prefix_cache is not None
+        wave_starts: List[int] = []
+        wave_pins: List[int] = []
         if self._paged:
             # admission-time reservation walk: claim head-of-queue requests
             # while a slot AND their whole-lifetime page reservation fit.
             # The walk stops at the first request that doesn't fit (no
             # queue-order bypass): it re-tries the moment a finish releases
             # pages, so head-of-line wait is bounded by running decodes.
+            # A prefix-cache hit reserves only the UNSHARED pages — its
+            # table row aliases the cached prefix pages (refcount++).
             wave, wave_slots = [], []
             while self.queue and self.free_slots:
                 r = self.queue[0]
-                need = self._alloc.pages_needed(
+                n_total = self._alloc.pages_needed(
                     min(len(r.prompt) + r.max_new_tokens, self.cache_len))
-                if not self._alloc.can_reserve(need):
-                    break
-                self.queue.popleft()
-                s = self.free_slots.popleft()
-                self._alloc.reserve(s, need)
+                hit = (self._prefix_cache.match(r.prompt)
+                       if sharing and len(r.prompt) > 1 else None)
+                if hit is not None:
+                    start, shared = hit
+                    n_keep = start // self.page_size
+                    if not self._ensure_free_pages(n_total - n_keep):
+                        break
+                    self.queue.popleft()
+                    s = self.free_slots.popleft()
+                    self._alloc.reserve_shared(s, shared[:n_keep],
+                                               n_total - n_keep)
+                    pin = -1
+                    if start % self.page_size:
+                        # partially shared boundary page: the COW copy is
+                        # fused into the prefill dispatch (the gather reads
+                        # the shared original through pt_src, the scatter
+                        # fills the row's fresh private page through
+                        # pt_dst). Pin the original so cache eviction for a
+                        # later request in this same wave can't recycle it
+                        # before the gather runs.
+                        pin = shared[n_keep]
+                        self._alloc.incref(pin)
+                    r.prefix_tokens = start
+                    wave_starts.append(start)
+                    wave_pins.append(pin)
+                else:
+                    if not self._ensure_free_pages(n_total):
+                        break
+                    self.queue.popleft()
+                    s = self.free_slots.popleft()
+                    self._alloc.reserve(s, n_total)
+                    wave_starts.append(0)
+                    wave_pins.append(-1)
                 wave.append(r)
                 wave_slots.append(s)
             if not wave:
@@ -918,6 +1181,8 @@ class InferenceEngine:
             n = min(len(self.queue), len(self.free_slots))
             wave = [self.queue.popleft() for _ in range(n)]
             wave_slots = [self.free_slots.popleft() for _ in range(n)]
+            wave_starts = [0] * n
+            wave_pins = [-1] * n
         # pad the wave to the full slot count with the remaining slot ids
         # (a permutation): ONE executable per bucket, always AOT-warmable.
         taken = set(wave_slots)
@@ -927,48 +1192,122 @@ class InferenceEngine:
         valid = np.zeros((self.slots,), bool)
         valid[:n] = True
 
-        bucket = _bucket(max(len(r.prompt) for r in wave),
+        # a wave with any prefix hit routes through the shared executable,
+        # bucketed on TAIL length (cold rows ride along with start 0 —
+        # bit-identical to the classic path); pure-cold waves keep the
+        # classic executable
+        shared_wave = any(wave_starts)
+        bucket = _bucket(max(len(r.prompt) - st
+                             for r, st in zip(wave, wave_starts)),
                          self.prefill_buckets)
         toks = np.zeros((self.slots, bucket), np.int32)
         lens = np.zeros((self.slots,), np.int32)
+        starts_np = np.zeros((self.slots,), np.int32)
         temps = np.zeros((self.slots,), np.float32)
         max_new = np.zeros((self.slots,), np.int32)
         stops = np.full((self.slots, self.max_stop_tokens), NO_TOKEN,
                         np.int32)
         for i, r in enumerate(wave):
-            toks[i, :len(r.prompt)] = r.prompt
+            st = wave_starts[i]
+            tail = r.prompt[st:]
+            toks[i, :len(tail)] = tail
             lens[i] = len(r.prompt)
+            starts_np[i] = st
             temps[i] = r.temperature
             max_new[i] = r.max_new_tokens
             stops[i, :len(r.stop_tokens)] = r.stop_tokens
             r.state = RequestState.PREFILLING
             r.slot = int(slot_ids[i])
 
-        exe = self._prefill_exe(bucket)
-        if self._paged:
-            pt_rows = np.full((self.slots, self.max_pages), self.trash,
-                              np.int32)
-            for i, s in enumerate(wave_slots):
-                ids = self._alloc.owned(s)
-                pt_rows[i, :len(ids)] = ids
-            (first, row_active, self.page_table, self.cache, self.lengths,
-             self.last_tokens, self.temps, self.active_mask, self.gen_counts,
-             self.max_news, self.stop_table, self._rng) = exe(
-                self.params, jnp.asarray(toks), jnp.asarray(lens),
-                jnp.asarray(slot_ids), jnp.asarray(valid),
-                jnp.asarray(temps), jnp.asarray(max_new), jnp.asarray(stops),
-                jnp.asarray(pt_rows), self.page_table, self.cache,
-                self.lengths, self.last_tokens, self.temps, self.active_mask,
-                self.gen_counts, self.max_news, self.stop_table, self._rng)
-        else:
-            (first, row_active, self.cache, self.lengths, self.last_tokens,
-             self.temps, self.active_mask, self.gen_counts, self.max_news,
-             self.stop_table, self._rng) = exe(
-                self.params, jnp.asarray(toks), jnp.asarray(lens),
-                jnp.asarray(slot_ids), jnp.asarray(valid), jnp.asarray(temps),
-                jnp.asarray(max_new), jnp.asarray(stops), self.cache,
-                self.lengths, self.last_tokens, self.temps, self.active_mask,
-                self.gen_counts, self.max_news, self.stop_table, self._rng)
+        try:
+            if self._paged:
+                pt_dst = np.full((self.slots, self.max_pages), self.trash,
+                                 np.int32)
+                for i, s in enumerate(wave_slots):
+                    ids = self._alloc.owned(s)
+                    pt_dst[i, :len(ids)] = ids
+                if shared_wave:
+                    pt_src = pt_dst.copy()
+                    start_pages = np.zeros((self.slots,), np.int32)
+                    for i in range(n):
+                        start_pages[i] = wave_starts[i] // self.page_size
+                        if wave_pins[i] >= 0:
+                            pt_src[i, start_pages[i]] = wave_pins[i]
+                    exe = self._shared_prefill_exe(bucket)
+                    (first, row_active, self.page_table, self.cache,
+                     self.lengths, self.last_tokens, self.temps,
+                     self.active_mask, self.gen_counts, self.max_news,
+                     self.stop_table, self._rng) = exe(
+                        self.params, jnp.asarray(toks), jnp.asarray(lens),
+                        jnp.asarray(starts_np), jnp.asarray(slot_ids),
+                        jnp.asarray(valid), jnp.asarray(temps),
+                        jnp.asarray(max_new), jnp.asarray(stops),
+                        jnp.asarray(start_pages), jnp.asarray(pt_src),
+                        jnp.asarray(pt_dst), self.page_table, self.cache,
+                        self.lengths, self.last_tokens, self.temps,
+                        self.active_mask, self.gen_counts, self.max_news,
+                        self.stop_table, self._rng)
+                else:
+                    exe = self._prefill_exe(bucket)
+                    (first, row_active, self.page_table, self.cache,
+                     self.lengths, self.last_tokens, self.temps,
+                     self.active_mask, self.gen_counts, self.max_news,
+                     self.stop_table, self._rng) = exe(
+                        self.params, jnp.asarray(toks), jnp.asarray(lens),
+                        jnp.asarray(slot_ids), jnp.asarray(valid),
+                        jnp.asarray(temps), jnp.asarray(max_new),
+                        jnp.asarray(stops), jnp.asarray(pt_dst),
+                        self.page_table, self.cache, self.lengths,
+                        self.last_tokens, self.temps, self.active_mask,
+                        self.gen_counts, self.max_news, self.stop_table,
+                        self._rng)
+            else:
+                exe = self._prefill_exe(bucket)
+                (first, row_active, self.cache, self.lengths,
+                 self.last_tokens, self.temps, self.active_mask,
+                 self.gen_counts, self.max_news, self.stop_table,
+                 self._rng) = exe(
+                    self.params, jnp.asarray(toks), jnp.asarray(lens),
+                    jnp.asarray(slot_ids), jnp.asarray(valid),
+                    jnp.asarray(temps), jnp.asarray(max_new),
+                    jnp.asarray(stops), self.cache, self.lengths,
+                    self.last_tokens, self.temps, self.active_mask,
+                    self.gen_counts, self.max_news, self.stop_table,
+                    self._rng)
+        except BaseException:
+            # reservation-leak fix: an admission that fails to dispatch
+            # must hand back everything it claimed — pages (including
+            # shared increfs and COW pins), slots, and queue positions —
+            # or the pool leaks until restart
+            for pin in wave_pins:
+                if pin >= 0:
+                    self._alloc.decref(pin)
+            for r, s in zip(reversed(wave), reversed(wave_slots)):
+                if self._paged:
+                    self._alloc.release(s)
+                self.free_slots.appendleft(s)
+                r.state = RequestState.QUEUED
+                r.slot = None
+                r.prefix_tokens = 0
+                self.queue.appendleft(r)
+            raise
+
+        if sharing:
+            # the gather pin is only needed until the dispatch is ordered
+            # against later cache writes (XLA sequences them through the
+            # donated buffer)
+            for pin in wave_pins:
+                if pin >= 0:
+                    self._alloc.decref(pin)
+            # record the freshly prefilled prompts: full chunks + partial
+            # tail chunk map to the slot's own pages (cache takes a
+            # reference, so the prefix outlives the request)
+            for r, s in zip(wave, wave_slots):
+                self._prefix_cache.insert(r.prompt, self._alloc.owned(s),
+                                          self._alloc)
+            self.stats.prefix_hits += sum(1 for st in wave_starts if st)
+            self.stats.prefix_tokens_reused += sum(wave_starts)
+            self.stats.cow_copies += sum(1 for p in wave_pins if p >= 0)
 
         # one host sync per wave: the first token + immediately-done flags
         first_np, row_active_np = jax.device_get((first, row_active))
@@ -986,12 +1325,68 @@ class InferenceEngine:
                 self.active[r.slot] = r
             else:
                 done.append(self._finish(r))
-        self.stats.prefill_tokens += int(lens.sum())
+        # tail tokens are what prefill actually computed — the prefix-hit
+        # savings show up here (starts are all zero without sharing)
+        self.stats.prefill_tokens += int(lens.sum()) - int(starts_np.sum())
         self.stats.prefill_batches += 1
         return done
 
+    def _decode_cow(self):
+        """Copy-on-write fence ahead of a decode megastep: any active slot
+        whose next-K token appends would land in a page the prefix cache
+        also holds (refcount > 1 — its prompt's partial tail page) first
+        gets a private copy — page copy + table repoint fused into one
+        dispatch for up to ``slots`` copies. When the pool has no page to
+        copy into, the cache's claim on the page is revoked instead
+        (un-share): correctness never depends on spare capacity. Shared
+        FULL-prefix pages never reach this path — a prefix hit only maps
+        them at columns below its first private page, and appends always
+        land at or above it."""
+        entries = []
+        K = self.megastep
+        for s in self.active:
+            owned = self._alloc.owned(s)
+            length = int(self._host_lengths[s])
+            lo = length // self.page_size
+            hi = min((length + K - 1) // self.page_size + 1, len(owned))
+            for col in range(lo, hi):
+                if self._alloc.refcount(owned[col]) <= 1:
+                    continue
+                if self._ensure_free_pages(1):
+                    src, dst = self._alloc.cow(s, col)
+                    entries.append((s, col, src, dst))
+                else:
+                    page = owned[col]
+                    self._prefix_cache.forget_page(page, self._alloc)
+                    if self._alloc.refcount(page) > 1:
+                        raise RuntimeError(
+                            f"page {page} is shared (refcount "
+                            f"{self._alloc.refcount(page)}) in slot {s}'s "
+                            f"append range but is not a cache partial — "
+                            f"cannot un-share and no free page to copy into")
+        if not entries:
+            return
+        exe = self._cow_exe()
+        for i in range(0, len(entries), self.slots):
+            chunk = entries[i:i + self.slots]
+            # pads replicate the chunk's first entry: duplicate scatter
+            # indices carry identical values, so the write stays
+            # deterministic and the repeated page copy is a no-op
+            chunk = chunk + [chunk[0]] * (self.slots - len(chunk))
+            rows = np.array([e[0] for e in chunk], np.int32)
+            cols = np.array([e[1] for e in chunk], np.int32)
+            src = np.array([e[2] for e in chunk], np.int32)
+            dst = np.array([e[3] for e in chunk], np.int32)
+            self.page_table, self.cache = exe(
+                self.page_table, self.cache, jnp.asarray(src),
+                jnp.asarray(dst), jnp.asarray(rows), jnp.asarray(cols),
+                jnp.ones((self.slots,), bool))
+        self.stats.cow_copies += len(entries)
+
     def _megastep_wave(self) -> List[Request]:
         t0 = time.monotonic()
+        if self._prefix_cache is not None:
+            self._decode_cow()
         # a drain engine never admits mid-batch, so freeing a slot early
         # cannot help anyone — the loop runs its full K
         has_queue = jnp.asarray(bool(self.queue)
@@ -1102,6 +1497,9 @@ class InferenceEngine:
             "live_pages": (self._alloc.live_pages if self._paged else 0),
             "free_pages": (self._alloc.free_pages if self._paged else 0),
             "paged_fallback": self.paged_fallback,
+            "prefix_fallback": self.prefix_fallback,
+            "prefix_cache": (self._prefix_cache.stats()
+                            if self._prefix_cache is not None else None),
             "compile_seconds": self.compile_seconds,
             "stats": self.stats.as_dict(),
         }

@@ -54,7 +54,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.library import load_variable_from_context
 from repro.serving.request import Request
-from repro.serving.session import Session, SLOClass, TokenStream, Turn
+from repro.serving.session import (Session, SLOClass, StreamError,
+                                   TokenStream, Turn)
 
 _session_ids = itertools.count()
 
@@ -281,6 +282,22 @@ class AdmissionController:
                 return turn
         return None
 
+    def cancel_session(self, session_id: str) -> List[Turn]:
+        """Withdraw every admitted-but-unclaimed turn of one session from
+        the queues (session close / abandon). Claimed turns are untouched
+        — they are already in an engine and finish normally. Returns the
+        withdrawn turns so the caller can finish their streams; bucket
+        tokens are NOT refunded (the admission decision was made)."""
+        with self._lock:
+            out: List[Turn] = []
+            for st in self._tenants.values():
+                for dq in (st.interactive, st.batch):
+                    mine = [t for t in dq if t.session_id == session_id]
+                    for t in mine:
+                        dq.remove(t)
+                        out.append(t)
+            return out
+
     def pending_for(self, sel: Selector) -> int:
         with self._lock:
             return sum(
@@ -386,10 +403,17 @@ class SessionRouter:
         self.pumps_submitted = 0
         self.pump_errors = 0
 
-    def lane_for(self, session_id: str) -> int:
+    def lane_for(self, session_id: str,
+                 prefix_key: Optional[str] = None) -> int:
         """Sticky: stable across the session's lifetime and across runs
-        (crc32, not the salted builtin hash)."""
-        return zlib.crc32(session_id.encode()) % self.lanes
+        (crc32, not the salted builtin hash). A declared ``prefix_key``
+        REPLACES the session id in the hash: every session sharing a
+        prompt template lands on the same lane — hence the same pump,
+        engine and page pool — so the template's prefix pages are prefilled
+        once and copy-on-write-shared by all of them, instead of being
+        re-prefilled per lane."""
+        key = prefix_key if prefix_key is not None else session_id
+        return zlib.crc32(key.encode()) % self.lanes
 
     # caller holds the front door lock for all four methods below; the
     # actual backend.submit happens OUTSIDE that lock (see
@@ -454,6 +478,12 @@ class FrontDoor:
         self._recipes: Dict[str, Any] = {}       # ctx_key -> recipe
         self._sessions: Dict[str, Session] = {}
         self.turns_completed = 0
+        self.turns_cancelled = 0
+        # page-level prefix sharing, aggregated from completed turns'
+        # Requests (live backend only — the simulator models placement and
+        # timing, not KV reuse)
+        self.prefix_hits = 0
+        self.prefix_tokens_reused = 0
 
     def _now(self) -> float:
         return self.backend.now
@@ -465,23 +495,43 @@ class FrontDoor:
     # ------------------------------------------------------------ sessions --
     def open_session(self, context, tenant: str = "default",
                      slo: SLOClass = SLOClass.BATCH,
-                     session_id: Optional[str] = None) -> Session:
+                     session_id: Optional[str] = None,
+                     prefix_key: Optional[str] = None) -> Session:
         """Open a streaming session bound to one context. ``context`` is a
         ContextHandle or ContextRecipe whose built value exposes
-        ``engine_var`` (an InferenceEngine)."""
+        ``engine_var`` (an InferenceEngine). ``prefix_key`` declares the
+        session's shared prompt template (any stable string — e.g. a hash
+        of the template tokens): sessions sharing it are routed to the
+        SAME lane so one engine's page-level prefix cache serves them all
+        (see ``SessionRouter.lane_for``)."""
         recipe = getattr(context, "recipe", context)
         if session_id is None:
             session_id = f"{tenant}-s{next(_session_ids)}"
         with self._lock:
             self._recipes.setdefault(recipe.key(), recipe)
-            lane = self.router.lane_for(session_id)
-            sess = Session(self, session_id, tenant, slo, recipe, lane)
+            lane = self.router.lane_for(session_id, prefix_key)
+            sess = Session(self, session_id, tenant, slo, recipe, lane,
+                           prefix_key=prefix_key)
             self._sessions[session_id] = sess
         return sess
 
-    def _session_closed(self, session: Session):
+    def _session_closed(self, session: Session,
+                        cancel_pending: bool = False):
+        cancelled: List[Turn] = []
         with self._lock:
             self._sessions.pop(session.session_id, None)
+            if cancel_pending:
+                cancelled = self.admission.cancel_session(
+                    session.session_id)
+                self.turns_cancelled += len(cancelled)
+        # finish the withdrawn streams outside the lock (consumers may be
+        # blocked on them and their wakeup path takes stream locks)
+        for turn in cancelled:
+            if turn.stream is not None:
+                turn.stream.finish(error=StreamError(
+                    f"turn {turn.turn_id}: session "
+                    f"{session.session_id} closed before the turn was "
+                    f"claimed"))
 
     # --------------------------------------------------------------- turns --
     def submit_turn(self, session: Session, prompt,
@@ -528,6 +578,9 @@ class FrontDoor:
         turn.stream.finish(request=request)
         with self._lock:
             self.turns_completed += 1
+            if request.prefix_tokens:
+                self.prefix_hits += 1
+                self.prefix_tokens_reused += request.prefix_tokens
 
     def _spawn_pump(self, ctx_key: str, lane: int, priority: int):
         """Submit the lane's serving pump. Called WITHOUT the front-door
@@ -602,4 +655,7 @@ class FrontDoor:
                 "router": self.router.stats(),
                 "sessions_open": len(self._sessions),
                 "turns_completed": self.turns_completed,
+                "turns_cancelled": self.turns_cancelled,
+                "prefix": {"hits": self.prefix_hits,
+                           "tokens_reused": self.prefix_tokens_reused},
             }

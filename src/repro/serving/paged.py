@@ -24,6 +24,26 @@ table row is redirected to TRASH before any scatter, and decode writes by
 inactive slots target TRASH — pages owned by live slots are provably never
 touched by anyone else (see ``test_paged_free_pages_untouched``).
 
+**Prefix sharing (copy-on-write).**  Because every KV access already
+indirects through the table, a page can back MORE THAN ONE slot: pages
+carry refcounts (``PageAllocator``) and a host-side radix tree
+(:class:`PrefixCache`) maps token-id chunks at page granularity to the
+pages that hold their KV.  The shared-page lifecycle::
+
+    hit    admission maps a hitting slot's table columns onto the cached
+           pages (refcount++) and prefills ONLY the unshared tail — the
+           page table aliases, the device math never changes;
+    COW    the first write into a shared page copies it to a fresh page
+           first: a partial-page boundary (the hit ends mid-page) is
+           copied inside the prefill dispatch itself (gather reads the
+           shared page, the scatter lands in the fresh one), and a decode
+           append into a cache-held partial page copies it in an
+           AOT-warmed page-copy dispatch before the megastep — shared
+           pages are only ever READ through a non-owner's table;
+    evict  pages whose only reference is the cache (refcount 1, LRU'd
+           behind live reservations) are reclaimed on demand when an
+           admission needs more free pages than the free list holds.
+
 Physical page buffers are built by the model's own ``init_cache`` called as
 ``init_cache(num_pages + 1, page_size, dtype)``: a cache leaf
 ``(..., B, S, tail)`` becomes ``(..., NP+1, P, tail)`` with the page axis
@@ -34,16 +54,16 @@ MLA latents); SSM/xLSTM state matrices and SWA ring buffers keep the
 contiguous slot path.
 
 Byte accounting: ``capacity_bytes`` is the allocated buffer (what HBM
-pays), ``live_bytes`` is pages actually owned by slots (what a snapshot or
+pays), ``live_bytes`` is pages actually referenced (what a snapshot or
 peer transfer ships) — ``gather_live``/``scatter_live`` serialize only the
-live set, so every rung of the PEER/POOL/DISK/FS fetch ladder shrinks with
-actual context.
+live set, each shared page ONCE, so every rung of the PEER/POOL/DISK/FS
+fetch ladder shrinks with actual context.
 """
 
 from __future__ import annotations
 
 import collections
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,11 +76,20 @@ def pages_for(tokens: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """Host-side free-list allocator for the shared page pool.
+    """Host-side refcounted allocator for the shared page pool.
 
     Reservation happens at admission time for a request's whole lifetime
     (prompt + max_new, capped at cache_len), so decode never allocates on
     device and a megastep can never run out of pages mid-flight.
+
+    Refcounts make pages shareable: a prefix-cache hit maps a slot onto
+    already-live pages (``reserve_shared`` increfs them), the PrefixCache
+    itself holds one reference per cached page (``incref``/``decref``),
+    and ``release`` decrefs a slot's whole mapping — a page returns to the
+    free list exactly when its last reference drops.  Invariant (see
+    ``check``): a page is on the free list iff its refcount is zero, and
+    every refcount equals the number of slot mappings plus cache holds
+    naming it.
     """
 
     def __init__(self, num_pages: int, page_size: int):
@@ -69,6 +98,7 @@ class PageAllocator:
                              f"{page_size} tokens")
         self.num_pages = num_pages
         self.page_size = page_size
+        self._refs = np.zeros((num_pages,), np.int32)
         self._free: collections.deque = collections.deque(range(num_pages))
         self._owned: Dict[int, List[int]] = {}     # slot -> page ids
 
@@ -90,34 +120,284 @@ class PageAllocator:
     def owned(self, slot: int) -> List[int]:
         return list(self._owned.get(slot, ()))
 
+    def refcount(self, page: int) -> int:
+        return int(self._refs[page])
+
     def live_ids(self) -> List[int]:
-        """Every page owned by some slot, ascending (snapshot order)."""
-        out: List[int] = []
-        for ids in self._owned.values():
-            out.extend(ids)
-        return sorted(out)
+        """Every referenced page, ascending, each exactly ONCE (snapshot
+        order) — shared pages appear in several slot mappings but
+        serialize a single time."""
+        return [int(p) for p in np.nonzero(self._refs > 0)[0]]
+
+    # ----------------------------------------------------------- refcounts --
+    def incref(self, page: int) -> None:
+        if self._refs[page] <= 0:
+            raise RuntimeError(f"incref of free page {page}")
+        self._refs[page] += 1
+
+    def decref(self, page: int) -> None:
+        if self._refs[page] <= 0:
+            raise RuntimeError(f"decref of free page {page}")
+        self._refs[page] -= 1
+        if self._refs[page] == 0:
+            self._free.append(int(page))
 
     # ----------------------------------------------------------- lifecycle --
-    def reserve(self, slot: int, n: int) -> List[int]:
-        if slot in self._owned:
-            raise RuntimeError(f"slot {slot} already holds pages")
+    def _take(self, n: int) -> List[int]:
         if n > len(self._free):
             raise RuntimeError(f"pool exhausted: need {n}, "
                                f"free {len(self._free)}")
         ids = [self._free.popleft() for _ in range(n)]
+        for p in ids:
+            self._refs[p] = 1
+        return ids
+
+    def reserve(self, slot: int, n: int) -> List[int]:
+        if slot in self._owned:
+            raise RuntimeError(f"slot {slot} already holds pages")
+        ids = self._take(n)
         self._owned[slot] = ids
         return ids
+
+    def reserve_shared(self, slot: int, shared_ids: List[int],
+                       n_new: int) -> List[int]:
+        """Map ``slot`` onto already-live ``shared_ids`` (refcount++) plus
+        ``n_new`` fresh private pages. Returns the fresh ids; the slot's
+        mapping is ``shared_ids + fresh`` in table-column order."""
+        if slot in self._owned:
+            raise RuntimeError(f"slot {slot} already holds pages")
+        fresh = self._take(n_new)
+        for p in shared_ids:
+            self.incref(p)
+        self._owned[slot] = list(shared_ids) + fresh
+        return fresh
+
+    def cow(self, slot: int, col: int) -> Tuple[int, int]:
+        """Copy-on-write bookkeeping for one table column: allocate a
+        fresh page, swap it into the slot's mapping at ``col`` and drop
+        the slot's reference on the shared original. Returns
+        ``(src, dst)`` — the caller performs the device-side page copy."""
+        ids = self._owned[slot]
+        src = ids[col]
+        dst = self._take(1)[0]
+        ids[col] = dst
+        self.decref(src)
+        return src, dst
 
     def release(self, slot: int) -> int:
         ids = self._owned.pop(slot, None)
         if ids is None:
             return 0
-        self._free.extend(ids)
+        for p in ids:
+            self.decref(p)
         return len(ids)
 
     def reset(self) -> None:
+        self._refs[:] = 0
         self._free = collections.deque(range(self.num_pages))
         self._owned = {}
+
+    def check(self, cache_holds: Optional[Set[int]] = None) -> None:
+        """Assert the refcount invariant: free + referenced == pool, the
+        free list is exactly the zero-ref set, and every refcount equals
+        slot mappings + cache holds naming the page. Raises AssertionError
+        with the first violation (test/debug surface)."""
+        counts = collections.Counter()
+        for ids in self._owned.values():
+            counts.update(ids)
+        for p in (cache_holds or ()):
+            counts[p] += 1
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list holds duplicates"
+        for p in range(self.num_pages):
+            assert int(self._refs[p]) == counts.get(p, 0), (
+                f"page {p}: refcount {int(self._refs[p])} != "
+                f"{counts.get(p, 0)} references")
+            assert (p in free) == (self._refs[p] == 0), (
+                f"page {p}: free-list membership disagrees with refcount "
+                f"{int(self._refs[p])}")
+        assert len(free) + int(np.sum(self._refs > 0)) == self.num_pages
+
+
+# ------------------------------------------------------------ prefix cache --
+def _lcp(a, b) -> int:
+    n = min(len(a), len(b))
+    i = 0
+    while i < n and a[i] == b[i]:
+        i += 1
+    return i
+
+
+class _PrefixNode:
+    __slots__ = ("children", "partials", "page", "last_used")
+
+    def __init__(self, page: int = -1):
+        self.children: Dict[Tuple[int, ...], "_PrefixNode"] = {}
+        self.partials: Dict[Tuple[int, ...], List[int]] = {}  # [page, used]
+        self.page = page
+        self.last_used = 0
+
+
+class PrefixCache:
+    """Host-side radix tree over token-id chunks at page granularity.
+
+    Each full ``page_size``-token chunk of a completed prompt becomes a
+    node holding the pool page with that chunk's KV; a trailing partial
+    chunk becomes a ``partials`` entry on its parent.  ``match`` walks the
+    tree chunk-by-chunk and finishes with a longest-common-prefix probe of
+    the terminal node's children/partials, so hits land on ANY shared
+    page-aligned prefix plus up to one partially shared page (the COW
+    boundary).  The cache holds one allocator reference per cached page;
+    ``evict`` reclaims LRU leaf pages whose ONLY reference is the cache —
+    live reservations are never evicted from under a slot.
+    """
+
+    def __init__(self, page_size: int):
+        self.page_size = int(page_size)
+        self.root = _PrefixNode()
+        self._holds: Set[int] = set()
+        self._clock = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------- queries --
+    def pages(self) -> Set[int]:
+        """Pages the cache currently holds a reference on."""
+        return set(self._holds)
+
+    def match(self, prompt) -> Optional[Tuple[int, List[int]]]:
+        """Longest shared prefix of ``prompt``: ``(start, shared_pages)``
+        where the first ``start`` tokens' KV lives in ``shared_pages``
+        (``ceil(start / P)`` of them, table-column order), or None.
+        ``start`` is capped at ``len(prompt) - 1`` — at least one tail
+        token is always computed, so every admission yields a logit."""
+        P = self.page_size
+        self._clock += 1
+        node = self.root
+        pages: List[int] = []
+        i = 0
+        while i + P <= len(prompt):
+            child = node.children.get(tuple(prompt[i:i + P]))
+            if child is None:
+                break
+            child.last_used = self._clock
+            pages.append(child.page)
+            node = child
+            i += P
+        rem = tuple(prompt[i:])
+        best_len, best_page, best_ent = 0, -1, None
+        for key, child in node.children.items():
+            l = _lcp(key, rem)
+            if l > best_len:
+                best_len, best_page, best_ent = l, child.page, child
+        for key, ent in node.partials.items():
+            l = _lcp(key, rem)
+            if l > best_len:
+                best_len, best_page, best_ent = l, ent[0], ent
+        if best_len:
+            pages.append(best_page)
+            i += best_len
+            if isinstance(best_ent, _PrefixNode):
+                best_ent.last_used = self._clock
+            else:
+                best_ent[1] = self._clock
+        start = min(i, len(prompt) - 1)
+        if start <= 0:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return start, pages[:pages_for(start, P)]
+
+    # ------------------------------------------------------------- updates --
+    def insert(self, prompt, owned_pages: List[int],
+               alloc: PageAllocator) -> int:
+        """Record a freshly prefilled prompt: chunk ``j`` maps to
+        ``owned_pages[j]`` (the slot's table column ``j``). New entries
+        take one allocator reference; chunks already cached just touch.
+        Returns how many new pages the cache now holds."""
+        P = self.page_size
+        self._clock += 1
+        node = self.root
+        added = 0
+        n_full = len(prompt) // P
+        for j in range(min(n_full, len(owned_pages))):
+            key = tuple(prompt[j * P:(j + 1) * P])
+            child = node.children.get(key)
+            if child is None:
+                child = _PrefixNode(page=owned_pages[j])
+                node.children[key] = child
+                alloc.incref(child.page)
+                self._holds.add(child.page)
+                added += 1
+            child.last_used = self._clock
+            node = child
+        rem = tuple(prompt[n_full * P:])
+        if rem and n_full < len(owned_pages):
+            ent = node.partials.get(rem)
+            if ent is None:
+                node.partials[rem] = [owned_pages[n_full], self._clock]
+                alloc.incref(owned_pages[n_full])
+                self._holds.add(owned_pages[n_full])
+                added += 1
+            else:
+                ent[1] = self._clock
+        return added
+
+    def _leaves(self, node, acc):
+        for key, child in node.children.items():
+            if not child.children and not child.partials:
+                acc.append((child.last_used, node, ("c", key), child.page))
+            else:
+                self._leaves(child, acc)
+        for key, ent in node.partials.items():
+            acc.append((ent[1], node, ("p", key), ent[0]))
+
+    def evict(self, n: int, alloc: PageAllocator) -> int:
+        """Reclaim up to ``n`` pages, LRU leaf entries first, touching
+        ONLY pages whose sole reference is the cache (refcount 1) — a page
+        still mapped by a live slot is never pulled out from under it.
+        Evicting a leaf can expose its parent as the next candidate, so
+        the scan repeats until satisfied or nothing reclaimable remains."""
+        freed = 0
+        while freed < n:
+            acc: List = []
+            self._leaves(self.root, acc)
+            cands = [c for c in acc if alloc.refcount(c[3]) == 1]
+            if not cands:
+                break
+            _, parent, (kind, key), page = min(cands, key=lambda c: c[0])
+            if kind == "c":
+                del parent.children[key]
+            else:
+                del parent.partials[key]
+            self._holds.discard(page)
+            alloc.decref(page)
+            self.evictions += 1
+            freed += 1
+        return freed
+
+    def forget_page(self, page: int, alloc: PageAllocator) -> bool:
+        """Drop the cache's reference on one PARTIAL entry's page (the
+        no-free-pages fallback for a decode-append COW: un-sharing the
+        page makes the copy unnecessary). Full-chunk pages are never
+        decode-written, so only partials are searched."""
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            for key, ent in list(node.partials.items()):
+                if ent[0] == page:
+                    del node.partials[key]
+                    self._holds.discard(page)
+                    alloc.decref(page)
+                    return True
+            stack.extend(node.children.values())
+        return False
+
+    def stats(self) -> Dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "held_pages": len(self._holds)}
 
 
 # ----------------------------------------------------------- pytree helpers --
@@ -170,12 +450,26 @@ def scatter_view(pages: Any, view: Any, pt: jax.Array, axes: Any,
     return jax.tree_util.tree_map(s, pages, view, axes)
 
 
+def copy_pages(pages: Any, src: jax.Array, dst: jax.Array, axes: Any) -> Any:
+    """Copy whole pages ``src[i] -> dst[i]`` in every leaf (the device
+    half of copy-on-write). Entries the caller wants inert should aim both
+    src and dst at the TRASH page."""
+
+    def c(leaf, ab):
+        m = jnp.moveaxis(leaf, ab, 0)
+        return jnp.moveaxis(m.at[dst].set(m[src]), 0, ab)
+
+    return jax.tree_util.tree_map(c, pages, axes)
+
+
 def gather_live(pages: Any, live_ids: jax.Array, axes: Any) -> Any:
     """Only the live pages of every leaf: ``(..., n_live, P, tail)``.
 
-    This is what snapshots/templates serialize — ``nbytes`` of the result
-    scales with actual context, so SnapshotPool occupancy, TransferPlanner
-    predictions and peer transfers all shrink proportionally."""
+    This is what snapshots/templates serialize — each referenced page
+    exactly once (shared pages dedup through ``PageAllocator.live_ids``),
+    so ``nbytes`` of the result scales with actual context and SnapshotPool
+    occupancy, TransferPlanner predictions and peer transfers all shrink
+    proportionally."""
 
     def g(leaf, ab):
         m = jnp.moveaxis(leaf, ab, 0)
@@ -187,7 +481,8 @@ def gather_live(pages: Any, live_ids: jax.Array, axes: Any) -> Any:
 def scatter_live(pages: Any, live_ids: jax.Array, live: Any,
                  axes: Any) -> Any:
     """Inverse of ``gather_live``: place snapshotted live pages back into a
-    (zero-initialized) full pool."""
+    (zero-initialized) full pool. Page tables restored alongside re-link
+    every slot — shared pages come back aliased exactly as serialized."""
 
     def s(leaf, lv, ab):
         m = jnp.moveaxis(leaf, ab, 0)

@@ -42,6 +42,11 @@ class Request:
     # (never preempts running decodes) — the front door maps
     # SLOClass.INTERACTIVE here
     priority: int = 0
+    # prompt tokens whose KV came from the shared prefix cache (page-level
+    # prefix sharing): set at admission, 0 on a miss — the per-request
+    # half of EngineStats.prefix_tokens_reused, surfaced so routing and
+    # shed decisions are debuggable
+    prefix_tokens: int = 0
 
     @property
     def done(self) -> bool:
@@ -103,6 +108,14 @@ class EngineStats:
     decode_path: str = "full"
     # page-pool occupancy as of the most recent megastep (paged path only)
     live_pages: int = 0
+    # page-level prefix sharing: admissions that hit the prefix cache,
+    # prompt tokens whose prefill was skipped because their KV pages were
+    # already resident, and copy-on-write page copies performed (both the
+    # partial-boundary copy fused into a shared prefill dispatch and the
+    # decode-append copy before a megastep)
+    prefix_hits: int = 0
+    prefix_tokens_reused: int = 0
+    cow_copies: int = 0
 
     @property
     def decode_tokens_per_second(self) -> float:
@@ -116,4 +129,7 @@ class EngineStats:
                     megasteps=self.megasteps, compiles=self.compiles,
                     decode_seconds=self.decode_seconds,
                     decode_path=self.decode_path,
-                    live_pages=self.live_pages)
+                    live_pages=self.live_pages,
+                    prefix_hits=self.prefix_hits,
+                    prefix_tokens_reused=self.prefix_tokens_reused,
+                    cow_copies=self.cow_copies)

@@ -259,13 +259,18 @@ class Session:
     """
 
     def __init__(self, frontdoor, session_id: str, tenant: str,
-                 slo: SLOClass, recipe, lane: int):
+                 slo: SLOClass, recipe, lane: int,
+                 prefix_key: Optional[str] = None):
         self._frontdoor = frontdoor
         self.session_id = session_id
         self.tenant = tenant
         self.slo = slo
         self.recipe = recipe
         self.lane = lane
+        # declared shared-prompt template (see FrontDoor.open_session):
+        # sessions with the same key are laned together so ONE engine's
+        # prefix cache serves all of them
+        self.prefix_key = prefix_key
         self.closed = False
         self.turns: List[Turn] = []
 
@@ -282,9 +287,16 @@ class Session:
     # alias: "stream me this prompt"
     stream = submit
 
-    def close(self):
+    def close(self, cancel_pending: bool = False):
+        """Refuse new turns; already-submitted streams keep flowing to
+        completion (the ephemeral `client.stream()` pattern: submit, close,
+        then iterate). With ``cancel_pending=True`` — an abandoning caller
+        — the session's admitted-but-UNCLAIMED turns are withdrawn instead
+        (their streams finish with a StreamError; no request ever reached
+        an engine, so nothing leaks and no admission-queue depth stays
+        consumed); claimed in-flight streams still finish either way."""
         self.closed = True
-        self._frontdoor._session_closed(self)
+        self._frontdoor._session_closed(self, cancel_pending)
 
     def __enter__(self) -> "Session":
         return self

@@ -590,12 +590,15 @@ class TestPagedEngineUnderPCM:
         assert sorted(r.generated for r in reqs) == want
         assert eng2.stats.compiles == compiles_before   # ZERO compiles
 
-        # all pages released at completion: a second demote isolates the
-        # live-page contribution of the mid-stream snapshot exactly
+        # all pages released at completion (the prefix cache keeps holds
+        # past request finish by design — drop it so a second demote
+        # isolates the live-page contribution of the mid-stream snapshot)
+        eng2.drop_prefix_cache()
         assert eng2._alloc.live_pages == 0
         lib.demote(rec.key())
         nbytes_idle = pool.stats()["host_used_bytes"]
         delta = nbytes_mid - nbytes_idle
-        # delta = live pages + their int32 ids; never the full pool
+        # delta = live pages + their int32 ids + int32 refcounts; never
+        # the full pool
         assert live_b <= delta <= live_b + 8 * live1
         assert nbytes_mid < nbytes_idle + cap_b

@@ -352,6 +352,11 @@ def _paged_engine(model, params, **kw):
     kw.setdefault("megastep", 4)
     kw.setdefault("paged", True)
     kw.setdefault("page_size", 8)
+    # These tests measure UNSHARED paged semantics (every page returns to
+    # the free list at completion, only slot-owned pages ever written);
+    # the prefix cache deliberately retains pages past request finish, so
+    # sharing is off here — prefix-sharing coverage lives in test_prefix.py.
+    kw.setdefault("prefix_sharing", False)
     return InferenceEngine(model, params, **kw)
 
 
