@@ -41,15 +41,68 @@ page pool vs the unshared paged engine (>= 1.5x), greedy bit-identical,
 zero warm compiles; writes ``BENCH_prefix.json`` and runs in CI as the
 ``prefix-smoke`` job under a hard timeout.
 
+The ``transfer`` section (``--only transfer``) benchmarks streamed
+context movement: chunk-pipelined multi-source-striped joiner bootstrap
+vs the monolithic single-donor transfer (modeled, paper-scale), the same
+storm live (greedy parity, zero joiner builds/compiles, live-vs-sim
+FetchSource parity), streamed-vs-whole DISK restore, and donor decode
+throughput under a rate-budgeted export; writes ``BENCH_transfer.json``
+and runs in CI as the ``transfer-smoke`` job under a hard timeout.
+
+Every section also refreshes ``BENCH_index.json``: a consolidated map of
+each ``BENCH_*.json`` file's headline ratios (any numeric leaf whose key
+mentions speedup/ratio/improvement/multiplier), so the perf trajectory
+across all subsystems is one file.
+
   PYTHONPATH=src python -m benchmarks.run [--quick/--full] [--only SECTION]
 """
 
 from __future__ import annotations
 
 import argparse
+import glob
 import json
+import os
 import sys
 import time
+
+
+def _headline_ratios(node, prefix=""):
+    """Walk a benchmark record and pull out its headline numeric leaves:
+    keys mentioning speedup/ratio/improvement/multiplier."""
+    out = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            path = f"{prefix}.{k}" if prefix else str(k)
+            if isinstance(v, (dict, list)):
+                out.update(_headline_ratios(v, path))
+            elif isinstance(v, (int, float)) and not isinstance(v, bool) \
+                    and any(tag in str(k).lower() for tag in
+                            ("speedup", "ratio", "improvement",
+                             "multiplier")):
+                out[path] = v
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            out.update(_headline_ratios(v, f"{prefix}[{i}]"))
+    return out
+
+
+def write_bench_index(path: str = "BENCH_index.json") -> dict:
+    """Consolidate every BENCH_*.json in the working directory into one
+    index of headline ratios."""
+    index = {}
+    for bench in sorted(glob.glob("BENCH_*.json")):
+        if os.path.basename(bench) == os.path.basename(path):
+            continue
+        try:
+            with open(bench) as f:
+                record = json.load(f)
+        except (OSError, ValueError):
+            continue
+        index[os.path.basename(bench)] = _headline_ratios(record)
+    with open(path, "w") as f:
+        json.dump(index, f, indent=2, sort_keys=True)
+    return index
 
 
 def main() -> None:
@@ -60,7 +113,8 @@ def main() -> None:
                     help="smoke-sized runs (CI)")
     ap.add_argument("--only", default=None,
                     choices=("paper", "micro", "roofline", "serving", "pcm",
-                             "cluster", "frontdoor", "paged", "prefix"))
+                             "cluster", "frontdoor", "paged", "prefix",
+                             "transfer"))
     ap.add_argument("--json-out", default="BENCH_serving.json",
                     help="where the serving section writes its JSON record")
     ap.add_argument("--pcm-json-out", default="BENCH_pcm.json",
@@ -73,6 +127,8 @@ def main() -> None:
                     help="where the paged section writes its JSON record")
     ap.add_argument("--prefix-json-out", default="BENCH_prefix.json",
                     help="where the prefix section writes its JSON record")
+    ap.add_argument("--transfer-json-out", default="BENCH_transfer.json",
+                    help="where the transfer section writes its JSON record")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -121,6 +177,24 @@ def main() -> None:
               f"x{cap['session_multiplier']:.1f} concurrent sessions at "
               f"{cap['num_pages']} pages, {pre['cow_copies']} COW copies)",
               file=sys.stderr)
+    if args.only == "transfer":
+        # streamed context movement: striped-vs-monolithic joiner storms
+        # (modeled + live), streamed-vs-whole DISK restore, donor decode
+        # under budgeted export — run only on request
+        from benchmarks import transfer_bench
+        record = transfer_bench.bench_transfer(quick=args.quick,
+                                               strict=True)
+        with open(args.transfer_json_out, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        sm, disk = record["storm_model"], record["disk_restore"]
+        donor, live = record["donor_serving"], record["storm_live"]
+        print(f"# wrote {args.transfer_json_out} (streamed+striped "
+              f"bootstrap x{sm['speedup_streamed_vs_monolithic']:.2f} vs "
+              f"monolithic at {sm['n_joiners']} joiners, streamed DISK "
+              f"restore x{disk['speedup_streamed_vs_whole']:.2f}, donor "
+              f"decode x{donor['tokens_per_second_ratio']:.2f} of baseline "
+              f"during export, live sources {set(live['live_fetch_sources'])}"
+              ")", file=sys.stderr)
     if args.only == "cluster":
         # join-storm + elastic-trace benchmark: live workers with real
         # engines — run only on request (not in the default sweep)
@@ -166,6 +240,10 @@ def main() -> None:
     if args.only in (None, "roofline"):
         from benchmarks import roofline_report
         roofline_report.run_all()
+    index = write_bench_index()
+    print(f"# wrote BENCH_index.json ({len(index)} benchmark files, "
+          f"{sum(len(v) for v in index.values())} headline ratios)",
+          file=sys.stderr)
     print(f"# total_wall_seconds,{time.time() - t0:.1f},", file=sys.stderr)
 
 

@@ -214,6 +214,31 @@ def main():
           f"{st['builder_calls']}x total — cold build took "
           f"{st['context_build_seconds']:.1f}s)")
 
+    # streamed restores: a cold joiner bootstraps the same context by
+    # striping verified chunks from warm donors (and the node snapshot
+    # pool) instead of waiting on one monolithic export — and each donor
+    # ships only a budgeted few chunks per mailbox turn, so its own
+    # decode never stalls behind a big device_get
+    print("== streamed restores: striped peer bootstrap ==")
+    joiner = client.backend.add_worker()
+    deadline = time.monotonic() + 120
+    while not client.backend.fetch_history():       # keep demand pending
+        batch = client.map(infer_model, claims[:6], batch_size=2,
+                           context=ctx)
+        for fut in batch.as_completed(timeout=600):
+            assert fut.result() is not None
+        if time.monotonic() > deadline:
+            break
+    st = client.stats()
+    stripes = st["striping"]
+    hist = client.backend.fetch_history()
+    how = hist[-1].source.value if hist else "warm"
+    print(f"worker {joiner} joined cold and fetched the context via "
+          f"{how}: {stripes['stripes']} stripe(s), {stripes['chunks']} "
+          f"verified chunks, {stripes['lane_failures']} lane failures, "
+          f"{stripes['degrades']} degrades — builder still ran "
+          f"{st['builder_calls']}x total, serving never paused")
+
     # streaming sessions: the front door over the same live pool. An
     # interactive tenant streams token-by-token; a rate-limited tenant
     # hits explicit backpressure instead of degrading everyone else.

@@ -99,8 +99,20 @@ class SpillStore:
                               extra_meta={"key": key, **(meta or {})},
                               chunk_rows=chunk_rows)
 
+    def path(self, key: str) -> str:
+        """On-disk directory of one spill — the handle streamed restores
+        hand to ``io.iter_entries`` for per-entry verified reads (no
+        whole-file sha pass, no full host materialization)."""
+        return self._path(key)
+
     def load(self, key: str, like: Any = None) -> Tuple[Any, Dict]:
         return io.load_pytree(self._path(key), like=like)
+
+    def iter_entries(self, key: str, keys=None):
+        """Streaming per-leaf read of one spill (see ``io.iter_entries``):
+        each entry verified against its own manifest digest as it is
+        yielded."""
+        return io.iter_entries(self._path(key), keys=keys)
 
     def has(self, key: str) -> bool:
         return io.is_valid(self._path(key))

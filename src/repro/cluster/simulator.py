@@ -15,6 +15,14 @@ worker's device-resident contexts survive as modeled HOST_RAM snapshots
 can take the POOL/DISK rung — restore cost, not a cold rebuild — exactly
 as the live PCMManager does. Pool snapshots are single-owner: a promotion
 (fetch or on-path start) consumes the entry.
+
+Streamed context movement needs NO special-casing here: the shared
+scheduler/planner already price a PEER rung as a chunk-pipelined, striped
+transfer (``TransferPlanner.peer_plan(width=...)`` commits one flow per
+stripe lane and ``plan.seconds`` is the slowest lane's fill+bottleneck
+time), so ``modeled_fetch_seconds`` consuming ``plan.seconds`` keeps the
+modeled duration — and every FetchSource decision — in lockstep with the
+live streamed runtime.
 """
 
 from __future__ import annotations
@@ -164,8 +172,12 @@ def modeled_fetch_seconds(a: Action, profile: DeviceProfile,
     ClusterSimulator and SimulatorBackend and keyed by the action's
     FetchSource: POOL/DISK are snapshot promotions (the plan's restore
     seconds — no network, no framework warm-up: the node process never
-    died), PEER/FS are transfers followed by the disk->HBM load, and BUILD
-    (no plan) pays the load path alone. Updates transfer stats."""
+    died), PEER uses the scheduler's committed prediction
+    (``a.eta_seconds``, the chunk-pipelined d2h/wire/restore composition
+    that scored the rung — no warm-up, no disk pass: the template ships
+    host-to-host and restores straight to HBM), FS is the transfer
+    followed by the full disk->HBM cold load, and BUILD (no plan) pays
+    the load path alone. Updates transfer stats."""
     if a.plan is not None and a.plan.fetch_source in (FetchSource.POOL,
                                                       FetchSource.DISK):
         stats["pool"] = stats.get("pool", 0) + 1
@@ -173,6 +185,8 @@ def modeled_fetch_seconds(a: Action, profile: DeviceProfile,
     if a.plan is None:                      # BUILD: nothing to transfer
         return load_seconds(profile, a.recipe, cost, from_disk=False)
     stats["p2p" if a.plan.p2p else "fs"] += 1
+    if a.plan.p2p and a.eta_seconds > 0:
+        return a.eta_seconds
     return a.plan.seconds + load_seconds(profile, a.recipe, cost,
                                          from_disk=True)
 

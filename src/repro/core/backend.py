@@ -124,7 +124,8 @@ class SimulatorBackend:
                  straggler_factor: float = 0.0,
                  reconcile_every: float = 15.0,
                  p2p: bool = True,
-                 donor_wait: bool = False):
+                 donor_wait: bool = False,
+                 stripe_width: Optional[int] = None):
         # cluster imports stay local: core does not depend on cluster at
         # module load, so the live path never pays for the simulator
         from repro.cluster.devices import PROFILES, CostModel
@@ -135,10 +136,12 @@ class SimulatorBackend:
         self.cost = cost or CostModel()
         self.loop = EventLoop()
         self.planner = planner or TransferPlanner()
+        stripe_kw = {} if stripe_width is None else \
+            {"stripe_width": stripe_width}
         self.scheduler = ContextAwareScheduler(
             mode=mode, planner=self.planner,
             straggler_factor=straggler_factor,
-            p2p=p2p, donor_wait=donor_wait)
+            p2p=p2p, donor_wait=donor_wait, **stripe_kw)
         # modeled node snapshot pool (shared with ClusterSimulator):
         # preempting a worker in full-context mode "demotes" its
         # device-resident contexts here (mirroring the live runtime's

@@ -116,6 +116,9 @@ class Context:
     last_used: float = field(default_factory=time.monotonic)
     restored: bool = False         # promoted from a snapshot, not built
     restore_seconds: float = 0.0   # real promotion cost when restored
+    # per-stage (disk/h2d) split of a streamed restore, {stage: [bytes,
+    # seconds]} — feeds TransferPlanner.observe_stage calibration
+    stage_seconds: Dict[str, list] = field(default_factory=dict)
 
     @property
     def key(self) -> str:
@@ -244,7 +247,7 @@ class ContextSnapshot:
         return 1 if self.spilled else 2
 
     # ----------------------------------------------------------- spilling --
-    def spill(self, spill_store) -> str:
+    def spill(self, spill_store, chunk_bytes: int = 64 << 20) -> str:
         """Write the host arrays to local disk (atomic npz + manifest via
         ``repro.checkpoint.io``) and release the host RAM copy. A shape/
         dtype skeleton stays in RAM so ``unspill`` can rebuild the exact
@@ -265,7 +268,7 @@ class ContextSnapshot:
         # cache) in whole-page groups, so every chunk boundary is a page
         # boundary — integrity (per-chunk sha256) and partial reads
         # (io.load_chunks) address whole pages, never splitting one
-        from repro.checkpoint.io import _flatten
+        from repro.checkpoint.io import _flatten, plan_chunk_rows
         chunk_rows: dict = {}
         for name, comp in self.host_state.items():
             if not (isinstance(comp, dict) and "_paged_live_ids" in comp):
@@ -276,6 +279,15 @@ class ContextSnapshot:
                 continue
             for key, ax in _flatten({"cache": axes}).items():
                 chunk_rows[f"{name}/{key}"] = {"rows": 8, "axis": int(ax)}
+        # every remaining large leaf (the weights) chunks too — per-chunk
+        # sha256, so a streamed restore verifies entry-by-entry instead of
+        # re-hashing the whole payload file, and a corrupt chunk is
+        # addressable without discarding the rest
+        for key, spec in plan_chunk_rows(self.host_state,
+                                         chunk_bytes).items():
+            if not any(key == p or key.startswith(p + "/")
+                       for p in chunk_rows):
+                chunk_rows[key] = spec
         spill_store.save(self.spill_key, self.host_state,
                          meta={"context_key": self.key,
                                "recipe": self.recipe.name},
@@ -379,6 +391,47 @@ def export_context(ctx: Context) -> ContextSnapshot:
                            demote_seconds=time.monotonic() - t0)
 
 
+def stripe_export_state(ctx: Context) -> Dict[str, Any]:
+    """Device halves of every exportable component that supports the split
+    export hooks — DEVICE references, no ``device_get``. This is the tree
+    a streamed (chunked) export plans over: params never mutate during
+    serving, so per-chunk ``device_get``s interleaved with decode work
+    read a coherent payload."""
+    device: Dict[str, Any] = {}
+    for i, comp in enumerate(_exportable(ctx.value)):
+        fn = getattr(comp, "export_template_device", None)
+        if callable(fn):
+            device[f"c{i}"] = fn()
+    return device
+
+
+def stripe_export_template(ctx: Context):
+    """Metadata half of a streamed export: the structural clone (shares
+    the donor's AOT executables in-process) plus each component's
+    synthesized host half. Components lacking the split hooks ship their
+    WHOLE template in the host half (monolithic for that component only —
+    one ``device_get``), so streamed transfers degrade gracefully to
+    :func:`export_context` semantics. Returns ``(clone, host_halves,
+    host_nbytes)``; add the device-half plan's total for the full template
+    size. Raises :class:`PeerExportError` exactly where
+    :func:`export_context` would."""
+    value = ctx.value
+    if isinstance(value, dict):
+        clone = {k: _clone_item(v) for k, v in value.items()}
+    elif isinstance(value, (list, tuple)):
+        clone = type(value)(_clone_item(v) for v in value)
+    else:
+        clone = _clone_item(value)
+    host_halves: Dict[str, Any] = {}
+    for i, comp in enumerate(_exportable(value)):
+        if callable(getattr(comp, "export_template_device", None)) and \
+                callable(getattr(comp, "export_template_host", None)):
+            host_halves[f"c{i}"] = comp.export_template_host()
+        else:
+            host_halves[f"c{i}"] = comp.export_template()
+    return clone, host_halves, _tree_nbytes(host_halves)
+
+
 def snapshot_context(ctx: Context) -> ContextSnapshot:
     """Demote DEVICE -> HOST_RAM: pull every offloadable component's device
     state to host numpy (one ``jax.device_get`` per component) and detach
@@ -398,22 +451,118 @@ def snapshot_context(ctx: Context) -> ContextSnapshot:
                            demote_seconds=time.monotonic() - t0)
 
 
+def _streamed_unspill(snap: ContextSnapshot, spill_store,
+                      stage_seconds: Dict[str, list]):
+    """LOCAL_DISK -> DEVICE without materializing the whole host snapshot:
+    a reader thread does pure disk IO (raw npz chunks, no hashing — the
+    whole-file sha pass is skipped entirely) while this thread verifies
+    each chunk's manifest digest, concatenates completed leaves and
+    ``device_put``s them, so verify/assembly/h2d of chunk *i* overlap the
+    disk read of chunk *i+1* (double-buffered promotion with the compute
+    half off the IO thread). Small metadata leaves stay host numpy;
+    ``jax.device_put`` of an already-device array is pass-through, so
+    ``restore_device_state`` downstream is unchanged. Consumes the spill
+    like ``unspill``. Corrupt chunks raise ``ChunkCorruptionError`` from
+    this thread, naming the entry."""
+    import queue as _queue
+    import threading
+
+    import jax
+    import numpy as np
+    from repro.checkpoint import io as ckio
+    directory = spill_store.path(snap.spill_key)
+    fifo: _queue.Queue = _queue.Queue(maxsize=4)
+    fail: list = []
+
+    def _reader():
+        t0 = time.monotonic()
+        nbytes = 0
+        try:
+            for item in ckio.iter_raw_chunks(directory):
+                nbytes += int(item[4].nbytes)
+                fifo.put(item)
+        except BaseException as exc:            # surface on the main thread
+            fail.append(exc)
+        finally:
+            stage_seconds["disk"] = [nbytes, time.monotonic() - t0]
+            fifo.put(None)
+
+    reader = threading.Thread(target=_reader, daemon=True,
+                              name="pcm-unspill-reader")
+    reader.start()
+    flat: Dict[str, Any] = {}
+    parts: list = []
+    corrupt = None
+    t_h2d = 0.0
+    h2d_bytes = 0
+    while True:
+        item = fifo.get()
+        if item is None:
+            break
+        if corrupt is not None:
+            continue              # drain so the reader can finish and exit
+        key, index, count, axis, arr, want = item
+        try:
+            ckio.verify_chunk(key, index, arr, want, where=directory)
+        except ckio.ChunkCorruptionError as exc:
+            corrupt = exc
+            continue
+        if count > 1:
+            parts.append(arr)
+            if len(parts) < count:
+                continue
+            arr = np.concatenate(parts, axis=axis)
+            parts = []
+        if arr.nbytes >= (1 << 20):
+            t0 = time.monotonic()
+            flat[key] = jax.device_put(arr)
+            t_h2d += time.monotonic() - t0
+            h2d_bytes += int(arr.nbytes)
+        else:
+            flat[key] = arr
+    reader.join()
+    stage_seconds["h2d"] = [h2d_bytes, t_h2d]
+    if corrupt is not None:
+        raise corrupt
+    if fail:
+        raise fail[0]
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(
+        snap._skeleton)[0]
+    treedef = jax.tree_util.tree_structure(snap._skeleton)
+    ordered = [flat["/".join(ckio._path_str(p) for p in path)]
+               for path, _ in leaves_with_path]
+    snap.host_state = jax.tree_util.tree_unflatten(treedef, ordered)
+    spill_store.delete(snap.spill_key)
+    snap.spill_key = ""
+    snap._skeleton = None
+    snap.spilled = False
+
+
 def restore_context(snap: ContextSnapshot, worker_id: str = "local",
-                    spill_store=None) -> Context:
+                    spill_store=None, streamed: bool = False) -> Context:
     """Promote a snapshot back to a live device-resident Context.
 
     LOCAL_DISK snapshots are unspilled to host first (requires
     ``spill_store``), then each offloadable component's state is pushed
-    back with ``jax.device_put``. No builder call, no XLA compile: the
-    executables never left the component objects. ``restore_seconds`` on
-    the returned Context records the real promotion cost."""
+    back with ``jax.device_put``. With ``streamed=True`` a spilled
+    snapshot instead streams entry-by-entry to device (per-entry digest
+    verification, read/verify of the next entry overlapping the
+    ``device_put`` of the current one — see :func:`_streamed_unspill`).
+    No builder call, no XLA compile: the executables never left the
+    component objects. ``restore_seconds`` on the returned Context records
+    the real promotion cost; ``stage_seconds`` carries the per-stage
+    (disk/h2d) split for pipeline calibration when streamed."""
     t0 = time.monotonic()
+    stage_seconds: Dict[str, list] = {}
     if snap.spilled:
         if spill_store is None:
             raise ValueError(
                 f"snapshot {snap.key} is spilled to disk; a spill store is "
                 "required to restore it")
-        snap.unspill(spill_store)
+        if streamed:
+            _streamed_unspill(snap, spill_store, stage_seconds)
+        else:
+            snap.unspill(spill_store)
     for i, comp in enumerate(_offloadable(snap.value)):
         comp.restore_device_state(snap.host_state[f"c{i}"])
     snap.host_state = {}
@@ -421,5 +570,6 @@ def restore_context(snap: ContextSnapshot, worker_id: str = "local",
                   build_seconds=snap.build_seconds,
                   aot_seconds=snap.aot_seconds)
     ctx.restore_seconds = time.monotonic() - t0
+    ctx.stage_seconds = stage_seconds
     ctx.restored = True
     return ctx

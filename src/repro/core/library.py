@@ -97,9 +97,15 @@ class InvocationRecord:
 class Library:
     """One per worker. Materializes recipes once; executes invocations."""
 
-    def __init__(self, worker_id: str = "local", snapshots=None):
+    def __init__(self, worker_id: str = "local", snapshots=None,
+                 streamed: bool = False, fetch_source_limit: int = 4096):
         self.worker_id = worker_id
         self.snapshots = snapshots     # node SnapshotPool (may be None)
+        # streamed=True: DISK promotions stream spill entries straight to
+        # device (read+verify one thread, device_put the other) instead of
+        # materializing the whole host snapshot first
+        self.streamed = streamed
+        self.fetch_source_limit = int(fetch_source_limit)
         self._contexts: Dict[str, Context] = {}
         self.pinned: Set[str] = set()
         self.records: List[InvocationRecord] = []
@@ -114,8 +120,15 @@ class Library:
         self.peer_install_seconds = 0.0
         # the ACTUAL source of every acquisition this Library performed
         # (POOL/DISK/BUILD via ensure, PEER via adopt) — the execution-side
-        # complement of the scheduler's fetch_log decisions
+        # complement of the scheduler's fetch_log decisions. Bounded: a
+        # long-lived worker trims the oldest entries past
+        # ``fetch_source_limit`` (kept a list, not a deque, so existing
+        # slicing/comparison call sites are untouched).
         self.fetch_sources: List[FetchSource] = []
+        # per-stage (disk/h2d) timings observed during streamed restores,
+        # as (stage, nbytes, seconds) — drained by the manager into
+        # TransferPlanner.observe_stage for pipeline-cost calibration
+        self.stage_observations: List[tuple] = []
 
     # ---------------------------------------------------------- contexts --
     def has(self, key: str) -> bool:
@@ -141,18 +154,22 @@ class Library:
                     from_disk = snap.spilled
                     ctx = restore_context(
                         snap, self.worker_id,
-                        spill_store=self.snapshots.spill_store())
+                        spill_store=self.snapshots.spill_store(),
+                        streamed=self.streamed)
                     self.restores += 1
                     self.restore_seconds_total += ctx.restore_seconds
                     self.snapshots.restore_seconds += ctx.restore_seconds
-                    self.fetch_sources.append(
+                    for stage, info in (ctx.stage_seconds or {}).items():
+                        self.stage_observations.append(
+                            (stage, info[0], info[1]))
+                    self._record_source(
                         FetchSource.DISK if from_disk else FetchSource.POOL)
             if ctx is None:
                 ctx = materialize(recipe, self.worker_id)
                 self.builder_calls += 1
                 self.build_seconds_total += ctx.build_seconds
                 self.aot_seconds_total += ctx.aot_seconds
-                self.fetch_sources.append(
+                self._record_source(
                     FetchSource.FS if recipe.transfer_bytes > 0
                     else FetchSource.BUILD)
             self._contexts[key] = ctx
@@ -196,7 +213,12 @@ class Library:
         self.install(ctx)
         self.peer_installs += 1
         self.peer_install_seconds += ctx.restore_seconds
-        self.fetch_sources.append(FetchSource.PEER)
+        self._record_source(FetchSource.PEER)
+
+    def _record_source(self, source: FetchSource):
+        self.fetch_sources.append(source)
+        if len(self.fetch_sources) > self.fetch_source_limit:
+            del self.fetch_sources[:-self.fetch_source_limit]
 
     def pin(self, key: str):
         self.pinned.add(key)

@@ -45,13 +45,18 @@ import traceback
 import weakref
 from typing import Any, Callable, Dict, List, Mapping, Optional
 
-from repro.core.context import (GB, ContextRecipe, export_context,
-                                restore_context)
+import numpy as np
+
+from repro.core.context import (GB, ContextRecipe, ContextSnapshot,
+                                export_context, restore_context,
+                                stripe_export_state, stripe_export_template)
 from repro.core.library import Library
 from repro.core.scheduler import (Action, ContextAwareScheduler, ContextMode,
                                   Task)
 from repro.core.store import (ContextStore, SnapshotPool, Tier,
                               TierFullError)
+from repro.core.streaming import (ChunkCorruptionError, ChunkPlan,
+                                  StripeBuffer, assign_lanes, chunk_digest)
 from repro.core.transfer import FetchSource, TransferPlan, TransferPlanner
 
 
@@ -137,6 +142,30 @@ _STOP = "stop"
 _RETIRE = "retire"
 
 
+class _StripeFetch:
+    """Bookkeeping for one in-flight striped PEER transfer: which physical
+    lanes exist (donor workers, plus an optional receiver-side pool lane),
+    which lane currently OWNS each assignment lane's refs (ownership moves
+    when a lane dies), and the receiver-side :class:`StripeBuffer` that
+    verifies and assembles the chunks."""
+
+    def __init__(self, stripe_id: int, recipe: ContextRecipe,
+                 receiver_id: str, plan: Optional[TransferPlan],
+                 donor_ids: tuple, n_pool: int):
+        self.stripe_id = stripe_id
+        self.recipe = recipe
+        self.receiver_id = receiver_id
+        self.plan = plan                  # planner TransferPlan (the flows)
+        self.donor_ids = donor_ids        # assignment lane -> donor worker
+        self.n_pool = n_pool
+        self.buffer = StripeBuffer()
+        self.failed_lanes: set = set()    # physical lanes that died
+        # assignment lane -> physical lane responsible for its refs
+        self.lane_owner: Dict[int, int] = {
+            lane: lane for lane in range(len(donor_ids))}
+        self.done = False
+
+
 def _shutdown_at_exit(mgr_ref):
     """Join every worker thread before the interpreter (and the XLA
     runtime underneath it) tears down — a thread still inside a JAX call
@@ -159,11 +188,23 @@ class LiveWorker:
                                       POOL/DISK/FS/BUILD ladder rungs)
       ("donate", recipe, rcv, plan)   export this worker's warm context as
                                       a template snapshot and ship it to
-                                      receiver ``rcv`` (PEER transfer —
-                                      the donor keeps its copy serving)
-      ("install", recipe, snap, plan) adopt a donated snapshot (restore to
-                                      device); ``snap=None`` degrades to
-                                      the normal fetch ladder
+                                      receiver ``rcv`` (monolithic PEER
+                                      transfer — the donor keeps its copy
+                                      serving)
+      ("donate_chunks", sid, recipe,  streamed PEER: export a budget of
+       rcv, spec)                     verified chunks of stripe ``sid``
+                                      this turn, then repost the
+                                      continuation to our own tail so
+                                      queued serving work interleaves
+      ("stripe_pool", sid, recipe,    serve immutable params chunks out of
+       spec)                          the node SnapshotPool as an extra
+                                      stripe lane (runs on the receiver)
+      ("install_stripe", sid)         assemble stripe ``sid``'s chunks and
+                                      promote the result (adopt)
+      ("install", recipe, snap, plan  adopt a donated snapshot (restore to
+       [, degraded_from])             device); ``snap=None`` degrades to
+                                      the normal fetch ladder (logged as a
+                                      degrade when ``degraded_from`` set)
       ("warm", recipe, event)         synchronous warm-up (event set when
                                       resident)
       ("demote", key, tier, event)    physically demote one context
@@ -181,7 +222,8 @@ class LiveWorker:
     def __init__(self, worker_id: str, manager: "PCMManager", profile=None):
         self.worker_id = worker_id
         self.profile = profile          # cluster.devices.DeviceProfile
-        self.library = Library(worker_id, snapshots=manager.snapshots)
+        self.library = Library(worker_id, snapshots=manager.snapshots,
+                               streamed=manager.streamed)
         hbm_gb = getattr(profile, "hbm_gb", None)
         self.store = ContextStore(device_bytes=int(hbm_gb * GB)) \
             if hbm_gb else ContextStore()
@@ -222,8 +264,16 @@ class LiveWorker:
                     self._handle_fetch(msg[1], msg[2])
                 elif kind == "donate":
                     self._handle_donate(msg[1], msg[2], msg[3])
+                elif kind == "donate_chunks":
+                    self._handle_donate_chunks(msg[1], msg[2], msg[3],
+                                               msg[4])
+                elif kind == "stripe_pool":
+                    self._handle_stripe_pool(msg[1], msg[2], msg[3])
+                elif kind == "install_stripe":
+                    self._handle_install_stripe(msg[1])
                 elif kind == "install":
-                    self._handle_install(msg[1], msg[2], msg[3])
+                    self._handle_install(msg[1], msg[2], msg[3],
+                                         msg[4] if len(msg) > 4 else None)
                 elif kind == "warm":
                     self._handle_warm(msg[1], msg[2], msg[3])
                 elif kind == "demote":
@@ -247,9 +297,19 @@ class LiveWorker:
             if kind == "donate":
                 # the receiver is still FETCHING on our donation: hand it
                 # a None snapshot so it degrades to pool/disk/builder
-                self._mgr._deliver_install(msg[2], msg[1], None, msg[3])
-            elif kind in ("fetch", "install"):
-                self._mgr._flow_done(msg[-1])
+                self._mgr._deliver_install(msg[2], msg[1], None, msg[3],
+                                           degraded_from=FetchSource.PEER)
+            elif kind == "donate_chunks":
+                self._mgr._stripe_lane_lost(
+                    msg[1], msg[4].get("via_lane", msg[4]["lane"]))
+            elif kind == "stripe_pool":
+                self._mgr._stripe_lane_lost(msg[1], msg[3]["lane"])
+            elif kind == "install_stripe":
+                self._mgr._stripe_failed(msg[1])
+            elif kind == "fetch":
+                self._mgr._flow_done(msg[2], failed=True)
+            elif kind == "install":
+                self._mgr._flow_done(msg[3], failed=True)
             for part in msg:
                 if isinstance(part, threading.Event):
                     part.set()
@@ -275,6 +335,7 @@ class LiveWorker:
         except BaseException as e:       # report, don't wedge the pool
             error = e
         with mgr._cond:
+            self._drain_stage_obs_locked()
             entry = mgr.scheduler.running.get(task_id)
             if not self.alive or entry is None or entry[0] != self.worker_id:
                 # preempted or cancelled while running: the scheduler has
@@ -301,7 +362,7 @@ class LiveWorker:
                       plan: Optional[TransferPlan]):
         mgr = self._mgr
         if not self.alive:
-            mgr._flow_done(plan)
+            mgr._flow_done(plan, failed=True)
             return           # preempted with the fetch still queued: the
             # scheduler already forgot this worker — don't burn a build
         key = recipe.key()
@@ -314,7 +375,8 @@ class LiveWorker:
         with mgr._cond:
             # no bandwidth calibration here: the ladder fallback may have
             # run the builder, which says nothing about a transfer rate
-            mgr._flow_done_locked(plan)
+            mgr._flow_done_locked(plan, failed=failed)
+            self._drain_stage_obs_locked()
             if not self.alive:
                 return
             # a failed build reports a non-matching key: the scheduler
@@ -340,17 +402,211 @@ class LiveWorker:
                 self.library.peer_exports += 1
             except BaseException:
                 traceback.print_exc(file=sys.stderr)
-        mgr._deliver_install(receiver_id, recipe, snap, plan)
+        mgr._deliver_install(receiver_id, recipe, snap, plan,
+                             degraded_from=None if snap is not None
+                             else FetchSource.PEER)
+
+    def _export_budget(self) -> Optional[int]:
+        """Chunks this donor may export in ONE mailbox turn, tied to its
+        queue depth: an idle donor drains its lane in one go (None = no
+        cap); a donor with queued serving work exports fewer chunks per
+        turn the deeper its mailbox, so decode latency under fanout stays
+        bounded by a few chunk ``device_get``s."""
+        depth = self.mailbox.qsize()
+        if depth <= 0:
+            return None
+        return max(1, self._mgr.export_chunk_budget // (1 + depth))
+
+    def _drain_stage_obs_locked(self):
+        """Feed per-stage (disk/h2d) timings observed by this worker's
+        streamed restores into the planner's pipeline calibration (callers
+        hold the manager lock)."""
+        obs, self.library.stage_observations = \
+            self.library.stage_observations, []
+        for stage, nbytes, seconds in obs:
+            self._mgr.planner.observe_stage(stage, nbytes, seconds)
+
+    def _handle_donate_chunks(self, stripe_id: int, recipe: ContextRecipe,
+                              receiver_id: str, spec: dict):
+        """Donor lane of a STREAMED peer transfer: recompute the
+        deterministic ChunkPlan over this context's device half (plans
+        depend on template shapes alone, so every donor and the manager
+        agree with zero coordination), export up to a budget of chunks
+        this turn — each a per-chunk ``device_get`` + sha256 — then repost
+        the continuation to our own mailbox TAIL so serving work queued
+        behind this message runs between export turns. The primary lane
+        additionally ships the template metadata (structural clone sharing
+        our AOT executables + synthesized host halves) before its first
+        chunk."""
+        mgr = self._mgr
+        key = recipe.key()
+        lane = spec["lane"]                      # assignment lane
+        via = spec.get("via_lane", lane)         # physical lane doing work
+        with mgr._lock:
+            sf = mgr._stripes.get(stripe_id)
+        if sf is None or sf.done:
+            return                               # stripe already concluded
+        if not (self.alive and self.library.has(key)):
+            mgr._stripe_lane_lost(stripe_id, via)
+            return
+        t0 = time.monotonic()
+        sent = 0
+        try:
+            ctx = self.library.context(key)
+            device = stripe_export_state(ctx)
+            plan = ChunkPlan(device, chunk_bytes=mgr.chunk_bytes)
+            if spec.get("with_template"):
+                clone, host_halves, host_nbytes = stripe_export_template(ctx)
+                self.library.peer_exports += 1
+                mgr._stripe_template(stripe_id, plan, clone, host_halves,
+                                     host_nbytes + plan.total_bytes,
+                                     ctx.build_seconds, ctx.aot_seconds)
+                spec = dict(spec, with_template=False)
+            if spec.get("ref_ids") is not None:
+                refs = [r for r in plan.refs if r.id in spec["ref_ids"]]
+            else:
+                refs = assign_lanes(plan.refs, spec["n_donor"],
+                                    spec["n_pool"])[lane]
+            cursor = spec.get("cursor", 0)
+            budget = self._export_budget()
+            stop = len(refs) if budget is None \
+                else min(len(refs), cursor + budget)
+            flat = ChunkPlan.flat_map(device)
+            while cursor < stop:
+                ref = refs[cursor]
+                # np.asarray of the device-array slice IS the per-chunk
+                # device_get — the only point this turn touches the device
+                piece = np.asarray(plan.extract(flat, ref))
+                sent += int(piece.nbytes)
+                if not mgr._stripe_deliver(stripe_id, ref, piece,
+                                           chunk_digest(piece), via):
+                    return               # lane failed or stripe concluded
+                cursor += 1
+        except BaseException:
+            traceback.print_exc(file=sys.stderr)
+            mgr._stripe_lane_lost(stripe_id, via)
+            return
+        finally:
+            elapsed = time.monotonic() - t0
+            sf.buffer.add_lane_seconds(via, elapsed)
+            if sent:
+                with mgr._lock:
+                    mgr.planner.observe_stage("d2h", sent, elapsed)
+        if cursor < len(refs):
+            self.post(("donate_chunks", stripe_id, recipe, receiver_id,
+                       dict(spec, cursor=cursor)))
+        # else: lane drained — the install fires from the last delivery
+
+    def _handle_stripe_pool(self, stripe_id: int, recipe: ContextRecipe,
+                            spec: dict):
+        """Receiver-side pool lane of a striped fetch: serve the immutable
+        ``params`` chunks straight out of the node SnapshotPool — HOST_RAM
+        slices, or per-entry verified reads of a spilled snapshot — while
+        donor lanes carry the rest. Activated only after the template
+        lands (the plan must exist). Any failure loses this lane only: its
+        refs reassign to a surviving donor lane."""
+        mgr = self._mgr
+        lane = spec["lane"]
+        with mgr._lock:
+            sf = mgr._stripes.get(stripe_id)
+        if sf is None or sf.done:
+            return
+        if not self.alive:
+            mgr._stripe_lane_lost(stripe_id, lane)
+            return
+        t0 = time.monotonic()
+        try:
+            plan = sf.buffer.plan
+            refs = sf.buffer.missing_refs(
+                assign_lanes(plan.refs, spec["n_donor"],
+                             spec["n_pool"])[lane])
+            if not refs:
+                return
+            snap = mgr.snapshots.peek(recipe.key())
+            if snap is None:
+                raise LookupError(
+                    f"pool snapshot for {recipe.key()} gone before the "
+                    "stripe lane could read it")
+            if snap.spilled:
+                needed = {r.key for r in refs}
+                flat = dict(mgr.snapshots.spill_store().iter_entries(
+                    snap.spill_key, keys=needed))
+            else:
+                flat = ChunkPlan.flat_map(
+                    {name: {"params": comp["params"]}
+                     for name, comp in snap.host_state.items()
+                     if isinstance(comp, dict) and "params" in comp})
+            mgr.snapshots.stripe_reads += len(refs)
+            for ref in refs:
+                piece = np.asarray(plan.extract(flat, ref))
+                if not mgr._stripe_deliver(stripe_id, ref, piece,
+                                           chunk_digest(piece), lane):
+                    return
+        except BaseException:
+            traceback.print_exc(file=sys.stderr)
+            mgr._stripe_lane_lost(stripe_id, lane)
+        finally:
+            sf.buffer.add_lane_seconds(lane, time.monotonic() - t0)
+
+    def _handle_install_stripe(self, stripe_id: int):
+        """Receiver end of a striped transfer: assemble the verified
+        chunks into a template snapshot and promote it (adopt — zero
+        builder calls, zero compiles, exactly like the monolithic PEER
+        install)."""
+        mgr = self._mgr
+        with mgr._lock:
+            sf = mgr._stripes.get(stripe_id)
+        if sf is None:
+            return
+        if not self.alive:
+            mgr._stripe_failed(stripe_id)
+            return
+        key = sf.recipe.key()
+        failed = False
+        measured = None
+        try:
+            buf = sf.buffer
+            host_state = buf.assemble()
+            snap = ContextSnapshot(
+                recipe=sf.recipe, value=buf.clone, host_state=host_state,
+                nbytes=buf.nbytes, build_seconds=buf.build_seconds,
+                aot_seconds=buf.aot_seconds,
+                demote_seconds=buf.export_seconds)
+            ctx = restore_context(snap, self.worker_id)
+            self.library.adopt(ctx)
+            # same calibration contract as the monolithic install: export
+            # work (slowest lane) + restore work, never queue wait
+            measured = snap.demote_seconds + ctx.restore_seconds
+        except BaseException:
+            traceback.print_exc(file=sys.stderr)
+            failed = True
+            measured = None
+        with mgr._cond:
+            mgr._stripes.pop(stripe_id, None)
+            sf.done = True
+            mgr._flow_done_locked(sf.plan, measured_seconds=measured,
+                                  failed=failed)
+            self._drain_stage_obs_locked()
+            if not self.alive:
+                return
+            acts = mgr.scheduler.on_fetch_done(
+                self.worker_id, "<transfer-failed>" if failed else key,
+                mgr.now)
+            mgr._dispatch(acts)
+            mgr._cond.notify_all()
 
     def _handle_install(self, recipe: ContextRecipe, snap,
-                        plan: Optional[TransferPlan]):
+                        plan: Optional[TransferPlan],
+                        degraded_from: Optional[FetchSource] = None):
         """Receiver side of a PEER transfer: promote the donated snapshot
         to the device and adopt it (zero builder calls, zero compiles).
         ``snap=None`` means the donor could not serve — fall back down the
-        ladder (pool -> disk -> builder) via ``Library.ensure``."""
+        ladder (pool -> disk -> builder) via ``Library.ensure``, recorded
+        in the scheduler's fetch_log as a degrade from ``degraded_from``
+        when set."""
         mgr = self._mgr
         if not self.alive:
-            mgr._flow_done(plan)
+            mgr._flow_done(plan, failed=True)
             return
         key = recipe.key()
         failed = False
@@ -371,9 +627,17 @@ class LiveWorker:
             failed = True
             measured = None
         with mgr._cond:
-            mgr._flow_done_locked(plan, measured_seconds=measured)
+            mgr._flow_done_locked(plan, measured_seconds=measured,
+                                  failed=failed)
+            self._drain_stage_obs_locked()
             if not self.alive:
                 return
+            if snap is None and not failed and degraded_from is not None:
+                # the ladder fallback actually acquired the context — log
+                # where it landed so fetch_history stays a complete account
+                mgr.scheduler.record_degrade(
+                    self.worker_id, key, self.library.fetch_sources[-1],
+                    mgr.now, degraded_from=degraded_from)
             acts = mgr.scheduler.on_fetch_done(
                 self.worker_id, "<transfer-failed>" if failed else key,
                 mgr.now)
@@ -427,12 +691,27 @@ class PCMManager:
                  snapshots: Optional[SnapshotPool] = None,
                  spill_dir: Optional[str] = None,
                  p2p: bool = True,
-                 donor_wait: bool = True):
+                 donor_wait: bool = True,
+                 streamed: bool = True,
+                 stripe_width: Optional[int] = None,
+                 export_chunk_budget: int = 4,
+                 chunk_bytes: int = 64 << 20):
         self.mode = mode
+        # streamed=True (default): PEER fetches stripe verified chunks
+        # across multiple donors with non-blocking budgeted donor exports,
+        # and DISK promotions stream spill entries to device; False keeps
+        # the monolithic export/restore path (the measured baseline)
+        self.streamed = streamed
+        self.export_chunk_budget = int(export_chunk_budget)
+        self.chunk_bytes = int(chunk_bytes)
         self.planner = planner or TransferPlanner()
+        sched_kwargs = {} if stripe_width is None \
+            else {"stripe_width": stripe_width}
         self.scheduler = ContextAwareScheduler(mode=mode, planner=self.planner,
-                                               p2p=p2p, donor_wait=donor_wait)
-        self.snapshots = snapshots or SnapshotPool(spill_dir=spill_dir)
+                                               p2p=p2p, donor_wait=donor_wait,
+                                               **sched_kwargs)
+        self.snapshots = snapshots or SnapshotPool(spill_dir=spill_dir,
+                                                   chunk_bytes=chunk_bytes)
         # the POOL/DISK rungs of the scheduler's FetchSource ladder read
         # node-pool residency straight from the live SnapshotPool
         self.scheduler.pool_tier = self.snapshots.tier
@@ -444,6 +723,14 @@ class PCMManager:
         self._futures: Dict[str, Future] = {}
         self._ids = itertools.count()
         self._task_ids = itertools.count()
+        # in-flight striped PEER transfers, by stripe id
+        self._stripes: Dict[int, _StripeFetch] = {}
+        self._stripe_ids = itertools.count()
+        self._stripe_stats = {"stripes": 0, "chunks": 0,
+                              "lane_failures": 0, "degrades": 0}
+        # test hook: callable(stripe_id, ref, lane) -> bool; True corrupts
+        # that chunk's digest in transit (exercises the degrade paths)
+        self._chunk_fault = None
         self._pinned: set = set()
         self._lock = threading.RLock()
         self._cond = threading.Condition(self._lock)
@@ -682,15 +969,171 @@ class PCMManager:
                 w.post(("start", a.task_id))
             elif a.kind == "fetch":
                 if a.source == FetchSource.PEER and a.donor:
-                    donor = self.workers.get(a.donor)
-                    if donor is not None and donor.alive:
-                        donor.post(("donate", a.recipe, a.worker_id,
-                                    a.plan))
+                    lanes = []
+                    for did in (a.donors or (a.donor,)):
+                        dw = self.workers.get(did)
+                        if dw is not None and dw.alive and did not in lanes:
+                            lanes.append(did)
+                    if lanes and self.streamed:
+                        self._start_stripe(a, lanes)
+                        continue
+                    if lanes:
+                        self.workers[lanes[0]].post(
+                            ("donate", a.recipe, a.worker_id, a.plan))
                         continue
                 w.post(("fetch", a.recipe, a.plan))
 
+    # ---------------------------------------------------------- striping ---
+    def _start_stripe(self, a: Action, lanes: List[str]):
+        """Launch a striped PEER fetch (callers hold the lock): one
+        ``donate_chunks`` lane per live donor from the planner's committed
+        stripe set, plus — once the template lands — a receiver-side pool
+        lane for the immutable params when the node pool holds a copy."""
+        sid = next(self._stripe_ids)
+        n_pool = 1 if self.snapshots.tier(a.recipe.key()) is not None else 0
+        sf = _StripeFetch(sid, a.recipe, a.worker_id, a.plan,
+                          tuple(lanes), n_pool)
+        self._stripes[sid] = sf
+        self._stripe_stats["stripes"] += 1
+        for lane, did in enumerate(lanes):
+            self.workers[did].post(
+                ("donate_chunks", sid, a.recipe, a.worker_id,
+                 {"lane": lane, "n_donor": len(lanes), "n_pool": n_pool,
+                  "with_template": lane == 0, "ref_ids": None,
+                  "cursor": 0}))
+
+    def _stripe_template(self, stripe_id: int, plan, clone, host_halves,
+                         nbytes: int, build_seconds: float,
+                         aot_seconds: float):
+        """Primary-lane template metadata arrived: arm the buffer's
+        expected-ref set and activate the pool lane (it needs the plan)."""
+        with self._cond:
+            sf = self._stripes.get(stripe_id)
+            if sf is None or sf.done:
+                return
+            sf.buffer.set_template(plan, clone, host_halves, nbytes,
+                                   build_seconds, aot_seconds)
+            if sf.n_pool:
+                pool_lane = len(sf.donor_ids)
+                sf.lane_owner[pool_lane] = pool_lane
+                w = self.workers.get(sf.receiver_id)
+                if w is not None and w.alive:
+                    w.post(("stripe_pool", stripe_id, sf.recipe,
+                            {"lane": pool_lane,
+                             "n_donor": len(sf.donor_ids),
+                             "n_pool": sf.n_pool}))
+        self._maybe_install_stripe(stripe_id)
+
+    def _stripe_deliver(self, stripe_id: int, ref, piece, sha: str,
+                        lane: int) -> bool:
+        """Verify-and-buffer one chunk from a lane thread. Returns False
+        when the lane should stop exporting (corruption failed the lane,
+        or the stripe concluded elsewhere)."""
+        with self._lock:
+            sf = self._stripes.get(stripe_id)
+            fault = self._chunk_fault
+        if sf is None or sf.done:
+            return False
+        if fault is not None and fault(stripe_id, ref, lane):
+            sha = "0" * 64              # test hook: corrupt in transit
+        try:
+            sf.buffer.deliver(ref, piece, sha, lane=lane)
+        except ChunkCorruptionError:
+            traceback.print_exc(file=sys.stderr)
+            with self._lock:
+                self._stripe_stats["lane_failures"] += 1
+            self._stripe_lane_lost(stripe_id, lane)
+            return False
+        with self._lock:
+            self._stripe_stats["chunks"] += 1
+        self._maybe_install_stripe(stripe_id)
+        return True
+
+    def _maybe_install_stripe(self, stripe_id: int):
+        with self._cond:
+            sf = self._stripes.get(stripe_id)
+            if sf is None or sf.done or sf.buffer.install_posted \
+                    or not sf.buffer.complete():
+                return
+            sf.buffer.install_posted = True
+            w = self.workers.get(sf.receiver_id)
+            if w is None or not w.alive:
+                self._stripe_failed_locked(stripe_id)
+                return
+            w.post(("install_stripe", stripe_id))
+
+    def _stripe_lane_lost(self, stripe_id: int, phys_lane: int):
+        """A physical stripe lane died — corrupt chunk, donor preempted or
+        evicted, pool snapshot consumed. Reassign every assignment lane it
+        owned to a surviving donor lane (only the UNDELIVERED refs are
+        re-exported; the fetch never restarts), or — with no survivors —
+        degrade the receiver down the normal fetch ladder."""
+        with self._cond:
+            sf = self._stripes.get(stripe_id)
+            if sf is None or sf.done or phys_lane in sf.failed_lanes:
+                return
+            sf.failed_lanes.add(phys_lane)
+            lost = [al for al, owner in sf.lane_owner.items()
+                    if owner == phys_lane]
+            if not lost:
+                return
+            n_donor = len(sf.donor_ids)
+            survivors = []
+            for lane in range(n_donor):
+                if lane in sf.failed_lanes:
+                    continue
+                dw = self.workers.get(sf.donor_ids[lane])
+                if dw is not None and dw.alive:
+                    survivors.append(lane)
+            plan = sf.buffer.plan
+            if survivors:
+                sl = survivors[0]
+                donor = self.workers[sf.donor_ids[sl]]
+                for al in lost:
+                    sf.lane_owner[al] = sl
+                    spec = {"lane": al, "via_lane": sl, "n_donor": n_donor,
+                            "n_pool": sf.n_pool,
+                            "with_template": plan is None and al == 0,
+                            "ref_ids": None, "cursor": 0}
+                    if plan is not None:
+                        assigned = assign_lanes(plan.refs, n_donor,
+                                                sf.n_pool)[al]
+                        spec["ref_ids"] = frozenset(
+                            r.id for r in sf.buffer.missing_refs(assigned))
+                    donor.post(("donate_chunks", stripe_id, sf.recipe,
+                                sf.receiver_id, spec))
+                return
+            # every donor lane gone: fall down the ladder without
+            # restarting — the receiver's Library resolves POOL/DISK/FS/
+            # BUILD and the degrade is logged against the PEER promise
+            sf.done = True
+            self._stripes.pop(stripe_id, None)
+            self._stripe_stats["degrades"] += 1
+            self._flow_done_locked(sf.plan, failed=True)
+            w = self.workers.get(sf.receiver_id)
+            if w is not None and w.alive:
+                w.post(("install", sf.recipe, None, None,
+                        FetchSource.PEER))
+            self._cond.notify_all()
+
+    def _stripe_failed_locked(self, stripe_id: int):
+        """The stripe cannot conclude (receiver gone): drop it and free
+        its planner flows as failed (callers hold the lock)."""
+        sf = self._stripes.pop(stripe_id, None)
+        if sf is None:
+            return
+        sf.done = True
+        self._flow_done_locked(sf.plan, failed=True)
+        self._cond.notify_all()
+
+    def _stripe_failed(self, stripe_id: int):
+        with self._cond:
+            self._stripe_failed_locked(stripe_id)
+
+    # ---------------------------------------------------------- transfers --
     def _deliver_install(self, receiver_id: str, recipe: ContextRecipe,
-                         snap, plan: Optional[TransferPlan]):
+                         snap, plan: Optional[TransferPlan],
+                         degraded_from: Optional[FetchSource] = None):
         """Hand a donated snapshot (or a None fallback) to the receiving
         worker's mailbox; called from donor threads and drain paths. The
         post happens under the manager lock: preemption flips ``alive``
@@ -702,25 +1145,30 @@ class PCMManager:
             if w is None or not w.alive:
                 # receiver departed mid-transfer: the scheduler already
                 # cleaned it up — just free the planner flow
-                self._flow_done_locked(plan)
+                self._flow_done_locked(plan, failed=True)
                 self._cond.notify_all()
                 return
-            w.post(("install", recipe, snap, plan))
+            w.post(("install", recipe, snap, plan, degraded_from))
 
     def _flow_done(self, plan: Optional[TransferPlan],
-                   measured_seconds: Optional[float] = None):
+                   measured_seconds: Optional[float] = None,
+                   failed: bool = False):
         with self._lock:
-            self._flow_done_locked(plan, measured_seconds)
+            self._flow_done_locked(plan, measured_seconds, failed=failed)
 
     def _flow_done_locked(self, plan: Optional[TransferPlan],
-                          measured_seconds: Optional[float] = None):
-        """Report a planned transfer finished: frees the donor/FS slot
+                          measured_seconds: Optional[float] = None,
+                          failed: bool = False):
+        """Report a planned transfer finished: frees the donor/FS slots
         immediately and, when real transfer work was measured (peer
         export + restore), feeds it into the planner's bandwidth
-        calibration (callers hold the lock)."""
+        calibration. Failed transfers are recorded as such — never
+        calibrated, never left as phantom in-flight flows (callers hold
+        the lock)."""
         if plan is not None:
             self.planner.complete(plan, self.now,
-                                  measured_seconds=measured_seconds)
+                                  measured_seconds=measured_seconds,
+                                  failed=failed)
 
     def _fail_unresolved(self):
         """Surface scheduler-declared failures (max_attempts exceeded) as
@@ -841,4 +1289,5 @@ class PCMManager:
                     "peer_install_seconds": peer_install_s,
                     "completed": len(self.scheduler.completions),
                     "snapshot_pool": self.snapshots.stats(),
+                    "striping": dict(self._stripe_stats),
                     "transfer": self.planner.stats(self.now)}

@@ -137,6 +137,11 @@ class Action:
     device_resident: Tuple[bool, ...] = ()    # per-recipe HBM residency
     source: Optional[FetchSource] = None      # fetch: ladder rung chosen
     donor: str = ""                           # fetch: PEER donor worker id
+    donors: Tuple[str, ...] = ()              # PEER stripe lanes, primary 1st
+    eta_seconds: float = 0.0        # fetch: scheduler's committed duration
+    # prediction (the pipeline-aware rung model that chose the source) —
+    # the dry-run surfaces price PEER fetches with it, so modeled timing
+    # cannot drift from the policy's own cost model
 
 
 @dataclass
@@ -155,12 +160,18 @@ class ContextAwareScheduler:
                  straggler_factor: float = 0.0,
                  max_attempts: int = 100,
                  p2p: bool = True,
-                 donor_wait: bool = False):
+                 donor_wait: bool = False,
+                 stripe_width: int = 2,
+                 fetch_log_limit: int = 4096):
         self.mode = mode
         self.planner = planner or TransferPlanner()
         self.straggler_factor = straggler_factor
         self.max_attempts = max_attempts
         self.p2p = p2p                  # False: FS-only bootstrap (bench)
+        # multi-source striping: a PEER bootstrap may pull disjoint chunk
+        # ranges from up to this many free donors concurrently (1 = the
+        # monolithic single-donor transfer)
+        self.stripe_width = stripe_width
         # donor_wait: when every donor is fanout-saturated, hold the fetch
         # until a slot frees instead of taking a worse rung — the paper's
         # admission-controlled join storm. Cost-bounded: engaged only when
@@ -179,7 +190,10 @@ class ContextAwareScheduler:
         # every equally-placed candidate — the hitting worker skips the
         # shared prefill entirely, which no DeviceProfile edge buys back
         self.prefix_hit: Optional[Callable[[Task, str], bool]] = None
-        self.fetch_log: List[FetchDecision] = []
+        # ring buffer: long-lived front-door runs issue fetches forever,
+        # so the decision log must not grow without bound
+        self.fetch_log: Deque[FetchDecision] = collections.deque(
+            maxlen=fetch_log_limit)
 
         self.queue: Deque[Task] = collections.deque()
         self.tasks: Dict[str, Task] = {}
@@ -519,14 +533,21 @@ class ContextAwareScheduler:
             donors = self._donors_for(key, w.worker_id)
         if donors:
             best = self.planner.peer_seconds(recipe.transfer_bytes,
-                                             donors, t)
+                                             donors, t,
+                                             width=self.stripe_width)
             if best is not None:
                 donor, transfer_s = best
                 # the receiver restores the shipped template host->HBM;
                 # no framework warm-up (its process is already alive) and
-                # no compile (AOT executables ride along)
-                rungs.append((transfer_s + self.planner.restore_seconds(
-                    recipe.host_bytes, h2d_bytes_per_s=h2d),
+                # no compile (AOT executables ride along). Chunk-streamed:
+                # the donor's device_get, the wire, and the receiver's
+                # device_put pipeline instead of summing
+                rungs.append((self.planner.pipeline_seconds(
+                    [self.planner.d2h_seconds(recipe.transfer_bytes),
+                     transfer_s,
+                     self.planner.restore_seconds(
+                         recipe.host_bytes, h2d_bytes_per_s=h2d)],
+                    recipe.transfer_bytes),
                     self._LADDER_TIEBREAK[FetchSource.PEER],
                     FetchSource.PEER, donor))
         pool_tier = self.pool_tier(key) if self.pool_tier is not None \
@@ -611,7 +632,8 @@ class ContextAwareScheduler:
         for _, _, source, donor in rungs:
             if source == FetchSource.PEER:
                 plan = self.planner.peer_plan(recipe.transfer_bytes,
-                                              donors, t)
+                                              donors, t,
+                                              width=self.stripe_width)
                 if plan is None:
                     # defensive only: within one call the scoring and the
                     # commit see the same planner state at the same t, so
@@ -646,8 +668,15 @@ class ContextAwareScheduler:
         if source in (FetchSource.POOL, FetchSource.DISK):
             return t + plan.seconds
         if source == FetchSource.PEER:
-            return t + plan.seconds + self.planner.restore_seconds(
-                recipe.host_bytes, h2d_bytes_per_s=h2d)
+            # same chunk-pipelined d2h/wire/restore composition as the
+            # rung score in _rung_costs — score, wait estimate, and the
+            # dry-run surfaces' fetch pricing all read one formula
+            return t + self.planner.pipeline_seconds(
+                [self.planner.d2h_seconds(recipe.transfer_bytes),
+                 plan.seconds,
+                 self.planner.restore_seconds(recipe.host_bytes,
+                                              h2d_bytes_per_s=h2d)],
+                recipe.transfer_bytes)
         if source == FetchSource.FS:
             return t + plan.seconds + self.planner.cold_load_seconds(
                 recipe.transfer_bytes, recipe.host_bytes,
@@ -678,7 +707,21 @@ class ContextAwareScheduler:
         w.fetching_eta = self._fetch_eta(source, plan, recipe, w, t)
         w.current = None
         return Action(kind="fetch", worker_id=w.worker_id, task_id="",
-                      plan=plan, recipe=recipe, source=source, donor=donor)
+                      plan=plan, recipe=recipe, source=source, donor=donor,
+                      donors=plan.stripes if plan is not None else (),
+                      eta_seconds=w.fetching_eta - t)
+
+    def record_degrade(self, worker_id: str, key: str, source: FetchSource,
+                       t: float, degraded_from: FetchSource,
+                       donor: str = ""):
+        """Log a runtime degrade the policy could not see at commit time —
+        e.g. a striped PEER transfer whose every lane died mid-stream and
+        whose receiver fell back down the ladder via its Library. Keeps
+        ``fetch_log`` the complete account of where every context
+        actually came from."""
+        self.fetch_log.append(FetchDecision(
+            worker_id=worker_id, key=key, source=source, donor=donor, t=t,
+            degraded_from=degraded_from))
 
     def _pending_context_demand(self) -> List[ContextRecipe]:
         # scan a bounded prefix: queues can hold 100k+ tasks and demand is

@@ -54,6 +54,24 @@ PAGE-ALIGNED chunks — one manifest sha256 per chunk of whole pages, so
 spill integrity and partial reads (``io.load_chunks``) address page
 boundaries, never a byte range that splits a page.
 
+Every movement edge is CHUNK-STREAMED, not monolithic: the HOST_RAM ->
+LOCAL_DISK spill and the DISK -> DEVICE promotion move per-chunk-sha256
+npz entries (``checkpoint/io`` — a streamed restore overlaps disk
+read/verify of entry *i+1* with the ``device_put`` of entry *i* and never
+materializes the whole host snapshot), and the PEER edge ships a
+:class:`~repro.core.streaming.ChunkPlan` of verified chunks::
+
+      donor A  --chunks (lane 0, budgeted between decode steps)--+
+      donor B  --chunks (lane 1)---------------------------------+--> cold
+      SnapshotPool --params chunks (pool lane, HOST_RAM/DISK)----+   worker
+
+A receiver stripes disjoint chunk ranges across several warm donors at
+once — and this pool doubles as a stripe source for the immutable weight
+chunks (``peek``: non-consuming read) — while each donor exports a few
+chunks per mailbox turn so its own serving never stalls. A corrupt or
+lost lane degrades alone (refs reassigned to a surviving lane, or the
+receiver falls down the ladder); the fetch never restarts.
+
 The PEER edge is the join-storm bootstrap path (paper §4.1): a cold
 worker reaches DEVICE directly from a warm peer's exported template
 (``repro.core.context.export_context`` — non-destructive, the donor keeps
@@ -300,9 +318,13 @@ class SnapshotPool:
     def __init__(self, host_bytes: int = 48 * GB,
                  disk_bytes: int = 200 * GB,
                  spill_dir: Optional[str] = None,
-                 on_gone=None):
+                 on_gone=None,
+                 chunk_bytes: int = 64 << 20):
         self.host_bytes = host_bytes
         self.disk_bytes = disk_bytes
+        # chunk granularity of HOST_RAM -> LOCAL_DISK spills (per-chunk
+        # sha256 manifests; streamed restores verify entry-by-entry)
+        self.chunk_bytes = int(chunk_bytes)
         self._spill_dir = spill_dir
         self._spill_store = None            # lazy: repro.checkpoint.SpillStore
         # on_gone(key): fired (outside the pool lock) when a snapshot
@@ -318,6 +340,7 @@ class SnapshotPool:
         self.restores = 0
         self.restore_seconds = 0.0
         self.lost = 0                       # dropped for capacity, never used
+        self.stripe_reads = 0               # chunks served as a stripe lane
 
     # ------------------------------------------------------------ internal --
     def spill_store(self):
@@ -406,7 +429,7 @@ class SnapshotPool:
         if old is not None and old.tier == Tier.LOCAL_DISK:
             old.discard(self.spill_store())
         for v in victims:
-            v.spill(self.spill_store())
+            v.spill(self.spill_store(), chunk_bytes=self.chunk_bytes)
         if victims:
             self._finish_spills(victims)
         self._fire_gone()
@@ -424,6 +447,16 @@ class SnapshotPool:
             self._on_gone(key)
         return snap
 
+    def peek(self, key: str) -> Optional[ContextSnapshot]:
+        """Non-consuming read of the pooled snapshot — the handle a
+        striped PEER fetch uses to serve immutable ``params`` chunks as an
+        extra stripe lane (HOST_RAM arrays are never mutated in place, and
+        a spilled snapshot's entries are read via the spill store, so a
+        concurrent ``take`` at worst fails this lane — which then degrades
+        to a donor lane instead of corrupting anything)."""
+        with self._lock:
+            return self._snaps.get(key)
+
     def spill(self, key: str) -> bool:
         """Explicitly demote one snapshot HOST_RAM -> LOCAL_DISK (the
         write happens outside the lock; the key is briefly absent from
@@ -434,7 +467,7 @@ class SnapshotPool:
                 if snap is not None:      # disk-resident already: keep it
                     self._snaps[key] = snap
                 return False
-        snap.spill(self.spill_store())
+        snap.spill(self.spill_store(), chunk_bytes=self.chunk_bytes)
         self._finish_spills([snap])
         return True
 
@@ -464,4 +497,5 @@ class SnapshotPool:
                 "restores": self.restores,
                 "restore_seconds": self.restore_seconds,
                 "lost": self.lost,
+                "stripe_reads": self.stripe_reads,
             }

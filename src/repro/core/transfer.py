@@ -83,6 +83,9 @@ class TransferPlan:
     nbytes: int
     p2p: bool
     fetch_source: FetchSource = FetchSource.FS
+    # committed stripe lanes for a striped peer transfer (primary donor
+    # first); single-donor plans carry a one-element tuple
+    stripes: Tuple[str, ...] = ()
 
     def __post_init__(self):
         if self.p2p:
@@ -117,7 +120,9 @@ class TransferPlanner:
                  h2d_bytes_per_s: float = 16 * GBPS,
                  disk_bytes_per_s: float = 2 * GBPS,
                  warmup_seconds: float = 16.0,
-                 builder_bytes_per_s: float = 0.05 * GBPS):
+                 builder_bytes_per_s: float = 0.05 * GBPS,
+                 d2h_bytes_per_s: float = 12 * GBPS,
+                 chunk_bytes: int = 64 << 20):
         self.fs_bytes_per_s = fs_bytes_per_s      # aggregate Panasas
         self.p2p_bytes_per_s = p2p_bytes_per_s
         self.nic_bytes_per_s = nic_bytes_per_s    # per-node 10GbE cap
@@ -132,13 +137,22 @@ class TransferPlanner:
         # minutes (the paper's 'minutes-long startup')
         self.warmup_seconds = warmup_seconds
         self.builder_bytes_per_s = builder_bytes_per_s
+        self.d2h_bytes_per_s = d2h_bytes_per_s    # HBM -> host (donor export)
+        # chunk granularity of streamed movement: the pipeline fill latency
+        # (one chunk traversing every stage before steady-state overlap)
+        self.chunk_bytes = chunk_bytes
         self._fs_flows: List[_Flow] = []
         self._donor_flows: Dict[str, List[_Flow]] = {}
         # measured-bandwidth calibration (EWMA bytes/s per path), fed by
         # complete(); None until the first live observation
         self._measured: Dict[str, Optional[float]] = {"p2p": None, "fs": None}
+        # per-stage calibration for the pipelined rung scores, fed by
+        # observe_stage() from live streamed movement
+        self._measured_stage: Dict[str, Optional[float]] = {
+            "d2h": None, "h2d": None, "disk": None}
         self._calibration_alpha = 0.5
         self.completed_flows = 0
+        self.failed_flows = 0
 
     # ------------------------------------------------------------ internal --
     def _gc(self, now: float):
@@ -192,6 +206,33 @@ class TransferPlanner:
              if len(self._donor_flows.get(d, [])) < self.donor_fanout),
             key=lambda d: (len(self._donor_flows.get(d, [])), d))
 
+    def _stage_rate(self, stage: str,
+                    override: Optional[float] = None) -> float:
+        """Bytes/s for one pipeline stage: an explicit per-worker override
+        wins (the scheduler passes each worker's own PCIe rate), else the
+        live EWMA observation, else the modeled default."""
+        if override is not None:
+            return override
+        measured = self._measured_stage.get(stage)
+        if measured is not None:
+            return measured
+        return {"d2h": self.d2h_bytes_per_s,
+                "h2d": self.h2d_bytes_per_s,
+                "disk": self.disk_bytes_per_s}[stage]
+
+    def _stripe_lanes(self, nbytes: int, donors: Set[str],
+                      width: int) -> Optional[Tuple[List[str], float]]:
+        """Up to ``width`` free donor lanes (least-loaded first) splitting
+        ``nbytes`` into disjoint chunk ranges; seconds is the slowest
+        lane's wire time. Callers must have _gc'd already."""
+        ranked = self._ranked_free_donors(donors)
+        if not ranked:
+            return None
+        lanes = ranked[:max(1, width)]
+        per = -(-nbytes // len(lanes))
+        sec = max(self._donor_seconds(d, per) for d in lanes)
+        return lanes, sec
+
     # -------------------------------------------------------------- public --
     def fs_load(self, now: float) -> int:
         """Concurrent shared-FS pulls still in flight at ``now``."""
@@ -222,19 +263,23 @@ class TransferPlanner:
         return self._register(TransferPlan(source=source, seconds=seconds,
                                            nbytes=nbytes, p2p=p2p), now)
 
-    def peer_seconds(self, nbytes: int, donors: Set[str], now: float
-                     ) -> Optional[Tuple[str, float]]:
+    def peer_seconds(self, nbytes: int, donors: Set[str], now: float,
+                     width: int = 1) -> Optional[Tuple[str, float]]:
         """Side-effect-free prediction of the best admissible peer
-        transfer: ``(donor, seconds)`` from the least-loaded free donor at
-        its current fanout share, or None when every donor is saturated.
-        This is the PEER rung's score in the scheduler's cost chooser AND
-        the selection the commit call (:meth:`peer_plan`) reuses — one
-        code path, so the dry and commit decisions cannot drift."""
+        transfer: ``(primary_donor, seconds)``, or None when every donor
+        is saturated. With ``width > 1`` the payload stripes across up to
+        that many free donors (disjoint chunk ranges, slowest lane
+        bounds), which is how multi-source striping shows up in the cost
+        score. This is the PEER rung's score in the scheduler's cost
+        chooser AND the selection the commit call (:meth:`peer_plan`)
+        reuses — one code path, so the dry and commit decisions cannot
+        drift."""
         self._gc(now)
-        ranked = self._ranked_free_donors(donors)
-        if not ranked:
+        got = self._stripe_lanes(nbytes, donors, width)
+        if got is None:
             return None
-        return ranked[0], self._donor_seconds(ranked[0], nbytes)
+        lanes, sec = got
+        return lanes[0], sec
 
     def peer_rate_seconds(self, nbytes: int) -> float:
         """Predicted seconds of an UNCONSTRAINED peer transfer at the
@@ -242,25 +287,60 @@ class TransferPlanner:
         would cost once a donor slot frees — the donor-wait cost bound."""
         return nbytes / self._p2p_rate()
 
+    def pipeline_seconds(self, stages: List[float], nbytes: int) -> float:
+        """Latency of ``nbytes`` moving through serial ``stages`` (each a
+        whole-payload seconds figure) CHUNK-PIPELINED: once the first
+        chunk has traversed every stage, all stages run concurrently and
+        the bottleneck stage sets the rate. ``fill = chunk/nbytes`` blends
+        between the degenerate cases exactly — one chunk (fill=1) costs
+        the old sum-of-stages, many chunks cost the bottleneck stage plus
+        one chunk's worth of the others."""
+        stages = [s for s in stages if s > 0]
+        if not stages:
+            return 0.0
+        fill = min(1.0, self.chunk_bytes / max(1, nbytes))
+        return fill * sum(stages) + (1.0 - fill) * max(stages)
+
+    def d2h_seconds(self, nbytes: int) -> float:
+        """Donor-side export stage: HBM -> host at the (calibrated)
+        device_get rate."""
+        return nbytes / self._stage_rate("d2h")
+
+    def observe_stage(self, stage: str, nbytes: int, seconds: float):
+        """Fold a live per-stage measurement (d2h/h2d/disk) into the
+        pipeline calibration EWMA."""
+        if stage not in self._measured_stage or seconds <= 0 or nbytes <= 0:
+            return
+        rate = nbytes / seconds
+        prev = self._measured_stage[stage]
+        a = self._calibration_alpha
+        self._measured_stage[stage] = rate if prev is None \
+            else a * rate + (1 - a) * prev
+
     def cold_load_seconds(self, transfer_bytes: int, host_bytes: int,
                           h2d_bytes_per_s: Optional[float] = None) -> float:
         """The load a fresh process pays once its artifact is node-local:
-        framework warm-up + local-disk read + host->HBM promotion. Both
-        the tail of the FS rung score (:meth:`cold_seconds`) and the
-        post-transfer half of a committed FS fetch's ETA."""
-        return (self.warmup_seconds
-                + transfer_bytes / self.disk_bytes_per_s
-                + host_bytes / (h2d_bytes_per_s or self.h2d_bytes_per_s))
+        framework warm-up, then local-disk read pipelined against the
+        host->HBM promotion (chunked entries stream to device as they are
+        read). Both the tail of the FS rung score (:meth:`cold_seconds`)
+        and the post-transfer half of a committed FS fetch's ETA."""
+        return self.warmup_seconds + self.pipeline_seconds(
+            [transfer_bytes / self._stage_rate("disk"),
+             host_bytes / self._stage_rate("h2d", h2d_bytes_per_s)],
+            transfer_bytes)
 
     def cold_seconds(self, transfer_bytes: int, host_bytes: int, now: float,
                      h2d_bytes_per_s: Optional[float] = None) -> float:
-        """Side-effect-free prediction of the FS rung end-to-end: shared-FS
-        fetch at the CURRENT contention level, then the cold load a fresh
-        process pays (:meth:`cold_load_seconds`)."""
+        """Side-effect-free prediction of the FS rung end-to-end: framework
+        warm-up plus the shared-FS fetch (at the CURRENT contention level)
+        pipelined against the local-disk pass and the host->HBM
+        promotion."""
         self._gc(now)
-        return (self._fs_seconds(transfer_bytes, now)
-                + self.cold_load_seconds(transfer_bytes, host_bytes,
-                                         h2d_bytes_per_s))
+        return self.warmup_seconds + self.pipeline_seconds(
+            [self._fs_seconds(transfer_bytes, now),
+             transfer_bytes / self._stage_rate("disk"),
+             host_bytes / self._stage_rate("h2d", h2d_bytes_per_s)],
+            transfer_bytes)
 
     def build_seconds(self, transfer_bytes: int) -> float:
         """Modeled cost of the BUILD rung: framework warm-up plus from-
@@ -270,18 +350,29 @@ class TransferPlanner:
         the cost race when there is (almost) nothing to transfer."""
         return self.warmup_seconds + transfer_bytes / self.builder_bytes_per_s
 
-    def peer_plan(self, nbytes: int, donors: Set[str], now: float
-                  ) -> Optional[TransferPlan]:
-        """Commit a P2P transfer from the best available donor (the same
+    def peer_plan(self, nbytes: int, donors: Set[str], now: float,
+                  width: int = 1) -> Optional[TransferPlan]:
+        """Commit a P2P transfer from the best available donors (the same
         :meth:`peer_seconds` selection), or None when every donor is
         saturated (the scheduler then either waits for a slot or takes
-        the cheapest remaining rung)."""
-        best = self.peer_seconds(nbytes, donors, now)
-        if best is None:
+        the cheapest remaining rung). With ``width > 1`` the commit
+        stripes across up to that many free donors: one fanout flow per
+        lane, ``plan.stripes`` naming the lanes (primary first)."""
+        self._gc(now)
+        got = self._stripe_lanes(nbytes, donors, width)
+        if got is None:
             return None
-        donor, sec = best
-        return self._register(TransferPlan(source=donor, seconds=sec,
-                                           nbytes=nbytes, p2p=True), now)
+        lanes, sec = got
+        plan = TransferPlan(source=lanes[0], seconds=sec, nbytes=nbytes,
+                            p2p=True, stripes=tuple(lanes))
+        flows = []
+        for d in lanes:
+            flow = _Flow(done_at=now + sec)
+            self._donor_flows.setdefault(d, []).append(flow)
+            flows.append(flow)
+        plan._flows = flows
+        plan._flow = flows[0]
+        return plan
 
     def fs_plan(self, nbytes: int, now: float,
                 fs_nbytes: Optional[int] = None) -> TransferPlan:
@@ -316,20 +407,34 @@ class TransferPlanner:
         return plan
 
     def complete(self, plan: TransferPlan, now: float,
-                 measured_seconds: Optional[float] = None):
+                 measured_seconds: Optional[float] = None,
+                 failed: bool = False):
         """Report a planned transfer finished at ``now`` (live runtimes
-        call this from the receiving worker). Frees the flow immediately —
-        the stale-flow fix: without it a fast real transfer would keep its
-        donor/FS slot occupied for the whole MODELED duration — and, given
-        ``measured_seconds``, folds the observed bytes/second into the
-        planner's EWMA calibration."""
-        flow = getattr(plan, "_flow", None)
-        if flow is not None:
+        call this from the receiving worker). Frees the flow(s)
+        immediately — the stale-flow fix: without it a fast real transfer
+        would keep its donor/FS slot occupied for the whole MODELED
+        duration — and, given ``measured_seconds``, folds the observed
+        bytes/second into the planner's EWMA calibration. A ``failed``
+        completion (dead donor/receiver, corrupt payload, degraded fetch)
+        still frees every lane's flow — a dead transfer must not linger
+        as a phantom in-flight flow inflating fanout shares — but counts
+        under ``failed_flows`` and never touches the EWMA."""
+        flows = getattr(plan, "_flows", None)
+        if flows is None:
+            flow = getattr(plan, "_flow", None)
+            flows = [] if flow is None else [flow]
+        for flow in flows:
             # pool_plan promotions are node-local and never registered a
             # flow: nothing to free, and they must not count as transfers
             flow.done_at = min(flow.done_at, now)
+        if flows:
             self._gc(now)
-            self.completed_flows += 1
+            if failed:
+                self.failed_flows += 1
+            else:
+                self.completed_flows += 1
+        if failed:
+            return
         if measured_seconds is not None and measured_seconds > 0 \
                 and plan.fetch_source in (FetchSource.PEER, FetchSource.FS):
             path = "p2p" if plan.p2p else "fs"
@@ -342,20 +447,23 @@ class TransferPlanner:
     def restore_seconds(self, nbytes: int, from_disk: bool = False,
                         h2d_bytes_per_s: Optional[float] = None) -> float:
         """Modeled promotion latency for a demoted context snapshot:
-        host RAM -> HBM over PCIe, plus a local-disk read when the
-        snapshot was spilled. This is the paper's restore cost — compare
-        against ``plan(...)`` + build for the cold path. Pass the worker's
-        own PCIe bandwidth via ``h2d_bytes_per_s`` when a device profile
-        is known (the simulator does); the planner default is a generic
-        Gen4 x16 link."""
-        t = nbytes / (h2d_bytes_per_s or self.h2d_bytes_per_s)
+        host RAM -> HBM over PCIe, pipelined against the local-disk read
+        when the snapshot was spilled (streamed restores ``device_put``
+        entry *i* while entry *i+1* is read and verified). This is the
+        paper's restore cost — compare against ``plan(...)`` + build for
+        the cold path. Pass the worker's own PCIe bandwidth via
+        ``h2d_bytes_per_s`` when a device profile is known (the simulator
+        does); the planner default is a generic Gen4 x16 link."""
+        stages = [nbytes / self._stage_rate("h2d", h2d_bytes_per_s)]
         if from_disk:
-            t += nbytes / self.disk_bytes_per_s
-        return t
+            stages.append(nbytes / self._stage_rate("disk"))
+        return self.pipeline_seconds(stages, nbytes)
 
     def calibration(self) -> Dict:
         """Observed bytes/s per path (None until live feedback arrives)."""
-        return dict(self._measured)
+        out = dict(self._measured)
+        out.update(self._measured_stage)
+        return out
 
     def stats(self, now: Optional[float] = None) -> Dict:
         if now is not None:
@@ -364,4 +472,5 @@ class TransferPlanner:
                 "donors_active": {k: len(v)
                                   for k, v in self._donor_flows.items()},
                 "completed_flows": self.completed_flows,
-                "measured_bytes_per_s": dict(self._measured)}
+                "failed_flows": self.failed_flows,
+                "measured_bytes_per_s": self.calibration()}

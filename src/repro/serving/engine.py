@@ -907,22 +907,33 @@ class InferenceEngine:
                 "HOST_RAM/LOCAL_DISK) — restore the context before use")
 
     # ------------------------------------------- P2P template transfer -----
-    def export_template(self) -> Dict:
-        """Donor side of a peer-to-peer context bootstrap: a host copy of
-        the weights plus a PRISTINE per-slot decode state (as a freshly
-        built engine would have), WITHOUT detaching anything from this
-        engine — the donor keeps serving. Pairs with ``clone_offloaded``:
-        restore the template into the clone on the receiving worker and it
-        decodes bit-identically to a cold-built engine, with zero builder
-        calls and zero XLA compiles (the executables ride on the clone)."""
+    def export_template_device(self) -> Dict:
+        """Device half of the template: the only fields that ship VERBATIM
+        from this engine's HBM — the immutable weights and the
+        point-in-time RNG key. Returned as DEVICE references (no
+        ``device_get``): a chunk-streamed export slices these per chunk
+        and pulls each chunk to host between serving turns, which is what
+        lets a donor keep decoding mid-export. ``params`` never mutate
+        after build, so interleaved chunk reads are coherent."""
         self._require_resident()
-        host = jax.device_get({name: getattr(self, name)
-                               for name in self._DEVICE_STATE_FIELDS
-                               if name != "cache"})
-        # scrub the donor's in-flight decode state: the template ships an
-        # EMPTY engine (all slots free), not the donor's live requests. A
-        # paged template carries ZERO cache pages (live set is empty) — the
-        # template's nbytes is essentially the weights.
+        return {"params": self.params, "_rng": self._rng}
+
+    def export_template_host(self) -> Dict:
+        """Host half of the template: every other field of a PRISTINE
+        engine (all slots free, empty cache), synthesized from shapes
+        alone with no whole-payload ``device_get``. A template ships an
+        EMPTY engine, not the donor's live requests — so none of this
+        needs to read the donor's actual decode state. A paged template
+        carries ZERO cache pages (live set is empty) — the template's
+        nbytes is essentially the weights."""
+        self._require_resident()
+        host: Dict = {}
+        for name in ("lengths", "last_tokens", "temps", "gen_counts",
+                     "max_news", "active_mask"):
+            a = getattr(self, name)
+            host[name] = np.zeros(a.shape, a.dtype)
+        host["stop_table"] = np.full(self.stop_table.shape, NO_TOKEN,
+                                     self.stop_table.dtype)
         if self._paged:
             host["cache"] = jax.device_get(paging.gather_live(
                 self.cache, jnp.zeros((0,), jnp.int32), self._axes))
@@ -932,11 +943,20 @@ class InferenceEngine:
         else:
             host["cache"] = jax.tree_util.tree_map(
                 lambda l: np.zeros(l.shape, l.dtype), self.cache)
-        for name in ("lengths", "last_tokens", "temps", "gen_counts",
-                     "max_news"):
-            host[name] = np.zeros_like(host[name])
-        host["active_mask"] = np.zeros_like(host["active_mask"])
-        host["stop_table"] = np.full_like(host["stop_table"], NO_TOKEN)
+        return host
+
+    def export_template(self) -> Dict:
+        """Donor side of a peer-to-peer context bootstrap: a host copy of
+        the weights plus a PRISTINE per-slot decode state (as a freshly
+        built engine would have), WITHOUT detaching anything from this
+        engine — the donor keeps serving. Pairs with ``clone_offloaded``:
+        restore the template into the clone on the receiving worker and it
+        decodes bit-identically to a cold-built engine, with zero builder
+        calls and zero XLA compiles (the executables ride on the clone).
+        The monolithic form of the device/host hook split above — one
+        blocking ``device_get`` of the device half."""
+        host = dict(self.export_template_host())
+        host.update(jax.device_get(self.export_template_device()))
         return host
 
     def clone_offloaded(self) -> "InferenceEngine":
