@@ -49,6 +49,15 @@ FetchSource parity), streamed-vs-whole DISK restore, and donor decode
 throughput under a rate-budgeted export; writes ``BENCH_transfer.json``
 and runs in CI as the ``transfer-smoke`` job under a hard timeout.
 
+The ``multihost`` section (``--only multihost``) benchmarks the socket
+transport with REAL worker processes over loopback: a 2-process joiner
+storm where the cold joiner bootstraps from a serialized wire snapshot
+(chunked-sha256, AOTRecipe cache hits) instead of cold-building —
+strict-asserted >= 50x with zero builder calls and zero true XLA
+recompiles on the joiner, greedy parity across processes — plus the
+socket-vs-memcpy lane calibration split; writes ``BENCH_multihost.json``
+and runs in CI as the ``multihost-smoke`` job under a hard timeout.
+
 Every section also refreshes ``BENCH_index.json``: a consolidated map of
 each ``BENCH_*.json`` file's headline ratios (any numeric leaf whose key
 mentions speedup/ratio/improvement/multiplier), so the perf trajectory
@@ -114,7 +123,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=("paper", "micro", "roofline", "serving", "pcm",
                              "cluster", "frontdoor", "paged", "prefix",
-                             "transfer"))
+                             "transfer", "multihost"))
     ap.add_argument("--json-out", default="BENCH_serving.json",
                     help="where the serving section writes its JSON record")
     ap.add_argument("--pcm-json-out", default="BENCH_pcm.json",
@@ -129,6 +138,8 @@ def main() -> None:
                     help="where the prefix section writes its JSON record")
     ap.add_argument("--transfer-json-out", default="BENCH_transfer.json",
                     help="where the transfer section writes its JSON record")
+    ap.add_argument("--multihost-json-out", default="BENCH_multihost.json",
+                    help="where the multihost section writes its JSON record")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -195,6 +206,23 @@ def main() -> None:
               f"decode x{donor['tokens_per_second_ratio']:.2f} of baseline "
               f"during export, live sources {set(live['live_fetch_sources'])}"
               ")", file=sys.stderr)
+    if args.only == "multihost":
+        # real worker processes over the loopback socket transport:
+        # wire-snapshot joiner bootstrap vs cold build + lane calibration
+        # — run only on request
+        from benchmarks import multihost_bench
+        record = multihost_bench.bench_multihost(quick=args.quick,
+                                                 strict=True)
+        with open(args.multihost_json_out, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        b, c = record["bootstrap"], record["calibration"]
+        sock = c["socket_bytes_per_s"] or 0.0
+        print(f"# wrote {args.multihost_json_out} (serialized bootstrap "
+              f"x{b['speedup_serialized_vs_cold_build']:.0f} vs cold build, "
+              f"{b['joiner_true_compiles']} joiner recompiles, "
+              f"{b['joiner_aot_cache_hits']} AOT cache hits, socket lane "
+              f"{sock / 1e9:.2f} GB/s vs memcpy "
+              f"{c['memcpy_bytes_per_s']})", file=sys.stderr)
     if args.only == "cluster":
         # join-storm + elastic-trace benchmark: live workers with real
         # engines — run only on request (not in the default sweep)

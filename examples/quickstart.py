@@ -113,6 +113,28 @@ an equally-warm cold one. ``python -m benchmarks.run --only prefix``
 measures the prefill shrink, TTFT win and session multiplier
 (BENCH_prefix.json).
 
+Multi-host PCM (the socket transport). A LiveWorker can be a PROCESS on
+another node: the manager opens the transport (``manager.listen()``) and
+worker processes (``python -m repro.cluster.node --connect HOST:PORT``,
+or :func:`repro.cluster.node.spawn_node_process`, or an
+``ElasticRunner(spawn_remote=True)`` reconciling a capacity trace into
+real processes) join the SAME pool the in-process actor threads live
+in — same scheduler, same fetch ladder, same preemption semantics.
+What changes is purely the medium: context movement crosses the wire as
+versioned ``repro.core.wire`` blobs — every array chunk sha256-verified
+through checkpoint/io's manifest path, executables replaced by
+AOTRecipes so a receiver re-lowers into compile-cache HITS (a shared
+``--aot-cache`` dir makes that hold across OS processes) instead of
+receiving unpicklable executable objects. Striped peer bootstraps work
+donor-process -> receiver-process (the manager forwards chunk frames and
+reconciles lane failures), a ``kill -9``'d node is detected by socket
+EOF (or, for wedged links, a heartbeat monitor) and fed to the SAME
+preemption path as a reclaimed GPU, and the planner prices wire lanes
+in their own ``p2p:socket`` calibration namespace so a cold socket lane
+never inherits in-process memcpy history. ``python -m benchmarks.run
+--only multihost`` measures the serialized-bootstrap-vs-cold-build gap
+with two real processes (BENCH_multihost.json).
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
@@ -308,6 +330,45 @@ def main():
           f"{stp.prefix_tokens_reused} prompt tokens served from shared "
           f"pages, {stp.cow_copies} copy-on-write page copies, only "
           f"{stp.prefill_tokens} tokens actually prefilled")
+
+    # multi-host PCM: a worker that is a PROCESS on another node joins
+    # the pool over the socket transport. The context builder must be
+    # importable BY NAME in the node process (pickle-by-reference), so
+    # the demo imports this file as a module and hands the node our
+    # directory; contexts then cross the wire as chunked-sha256 blobs
+    # with executables as AOTRecipes (cache hits, never recompiles).
+    print("== multi-host: a worker process over the socket transport ==")
+    import os
+    from repro.core import PCMManager, make_recipe
+    from repro.cluster.node import spawn_node_process
+    import quickstart as qs          # our own module, importable by name
+    here = os.path.dirname(os.path.abspath(__file__))
+    mh = PCMManager(mode=ContextMode.FULL, n_workers=0)
+    node_proc = None
+    try:
+        addr = mh.listen()
+        node_proc = spawn_node_process(addr, "node-1", extra_path=(here,))
+        mh.wait_for_workers(["node-1"], timeout=180)
+        recipe = make_recipe("smollm2.verifier.mh", qs.load_model,
+                             ("smollm2-1.7b",))
+        mh.warm_up(recipe)           # builds IN the node process
+        out = mh.submit(qs.infer_model, args=(claims[:2],),
+                        recipe=recipe).result(timeout=600)
+        assert out is not None
+        mh.demote_context(recipe)    # snapshot crosses the wire -> pool
+        t0 = time.monotonic()
+        out = mh.submit(qs.infer_model, args=(claims[:2],),
+                        recipe=recipe).result(timeout=600)
+        mir = mh.workers["node-1"].library
+        print(f"node-1 (pid {node_proc.pid}) built once "
+              f"({mir.builder_calls}x), demoted over the wire, then "
+              f"restored + ran in {time.monotonic() - t0:.2f}s "
+              f"({mir.restores} restore(s), sources "
+              f"{[s.name for s in mir.fetch_sources]})")
+    finally:
+        mh.shutdown(timeout=60)
+        if node_proc is not None:
+            node_proc.terminate()
 
     print("== simulator backend: same workload, modeled cluster time ==")
     sim = PCMClient(backend=SimulatorBackend(n_workers=8, profile="a10",

@@ -172,6 +172,101 @@ def save_pytree(tree, directory: str, extra_meta: Optional[Dict] = None,
         raise
 
 
+def pack_tree(tree, chunk_bytes: int = 64 << 20,
+              axes: Optional[Dict[str, int]] = None,
+              chunk_rows: Optional[Dict[str, Dict]] = None
+              ) -> Tuple[Dict, bytes]:
+    """In-memory counterpart of :func:`save_pytree` for wire transfers:
+    serialize a pytree into ``(manifest, payload)`` where ``payload`` is
+    the concatenated raw bytes of every entry and the JSON-serializable
+    ``manifest`` carries the same per-entry/per-chunk sha256 integrity
+    metadata the on-disk format uses — a cross-process snapshot travels
+    through the exact chunked-digest path a LOCAL_DISK spill does.
+    Leaves bigger than ``chunk_bytes`` split into per-chunk entries
+    (``<key>#chunkNNNNN``) hashed independently, keeping verification —
+    and corruption blame — chunk-granular on the receiving end."""
+    if chunk_rows is None:
+        chunk_rows = plan_chunk_rows(tree, chunk_bytes, axes=axes)
+    flat = _flatten(tree)
+    parts = []
+    offsets: Dict[str, Tuple[int, int]] = {}
+    chunks: Dict[str, Dict] = {}
+    entry_sha: Dict[str, str] = {}
+    pos = 0
+
+    def _emit(name: str, arr: np.ndarray) -> str:
+        nonlocal pos
+        raw = np.ascontiguousarray(arr)
+        parts.append(raw.view(np.uint8).reshape(-1).data)
+        offsets[name] = (pos, raw.nbytes)
+        pos += raw.nbytes
+        return _sha256_array(raw)
+
+    for key, v in flat.items():
+        spec = _chunk_spec(key, chunk_rows)
+        if spec is None or v.ndim == 0:
+            entry_sha[key] = _emit(key, v)
+            continue
+        rows, axis = spec
+        dim = v.shape[axis]
+        n = -(-dim // rows) if dim else 0
+        sel = (slice(None),) * (axis % v.ndim)
+        digests = [_emit(f"{key}#chunk{i:05d}",
+                         v[sel + (slice(i * rows, (i + 1) * rows),)])
+                   for i in range(n)]
+        chunks[key] = {"rows": rows, "axis": axis, "count": n,
+                       "sha256": digests}
+    manifest = {
+        "keys": list(flat.keys()),
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "chunks": chunks,
+        "entry_sha256": entry_sha,
+        "offsets": {k: list(v) for k, v in offsets.items()},
+        "nbytes": int(sum(v.nbytes for v in flat.values())),
+    }
+    return manifest, b"".join(parts)
+
+
+def unpack_tree(manifest: Dict, payload, keys=None) -> Dict[str, np.ndarray]:
+    """Decode a :func:`pack_tree` payload back into a flat
+    ``{key: array}`` map. Every entry is re-hashed against its manifest
+    digest BEFORE chunked leaves are reassembled, so corruption surfaces
+    as :class:`ChunkCorruptionError` naming the exact chunk — same
+    failure vocabulary as the disk and stripe paths. Arrays are zero-copy
+    views into ``payload`` (read-only); callers that mutate must copy."""
+    view = memoryview(payload)
+    offsets = manifest["offsets"]
+    chunks = manifest.get("chunks", {})
+    entry_sha = manifest.get("entry_sha256", {})
+    out: Dict[str, np.ndarray] = {}
+    for key in (manifest["keys"] if keys is None else keys):
+        dt = _np_dtype(manifest["dtypes"][key])
+        shape = tuple(manifest["shapes"][key])
+        spec = chunks.get(key)
+        if spec is None:
+            off, length = offsets[key]
+            arr = np.frombuffer(view[off:off + length],
+                                dtype=dt).reshape(shape)
+            verify_chunk(key, 0, arr, entry_sha.get(key), where="wire")
+            out[key] = arr
+            continue
+        rows, axis = spec["rows"], spec.get("axis", 0)
+        dim = shape[axis] if shape else 0
+        pieces = []
+        for i in range(spec["count"]):
+            cshape = list(shape)
+            cshape[axis] = min(dim, (i + 1) * rows) - i * rows
+            off, length = offsets[f"{key}#chunk{i:05d}"]
+            part = np.frombuffer(view[off:off + length],
+                                 dtype=dt).reshape(cshape)
+            verify_chunk(key, i, part, spec["sha256"][i], where="wire")
+            pieces.append(part)
+        out[key] = (np.concatenate(pieces, axis=axis) if pieces
+                    else np.zeros(shape, dt))
+    return out
+
+
 def _np_dtype(name: str):
     try:
         return np.dtype(name)

@@ -39,7 +39,16 @@ Module map:
                + ElasticRunner driving a live manager from capacity traces
   manager.py   live concurrent runtime (worker actor threads + mailboxes,
                real JAX execution, physical preemption demotion,
-               donor->receiver peer context transfer) + Future
+               donor->receiver peer context transfer) + Future; with
+               ``listen()`` workers may be PROCESSES on other nodes
+               (RemoteWorker proxies translating the same mailbox
+               vocabulary into transport frames)
+  transport.py length-prefixed socket frames with per-connection IO
+               threads, heartbeats, and two-layer loss detection (EOF +
+               declared-lost) feeding the normal preemption path
+  wire.py      versioned wire format for snapshots/templates: arrays via
+               checkpoint/io's chunked-sha256 path, executables as
+               AOTRecipes (receivers compile-cache-hit, never recompile)
   backend.py   ExecutionBackend protocol + SimulatorBackend dry-run
   api.py       PCMClient / ContextHandle (pin, warm_up, demote, residency)
                / FutureBatch (+ legacy @context_app shim, paper Fig. 5)
@@ -63,6 +72,10 @@ from repro.core.scheduler import (Action, Completion, ContextAwareScheduler,
 from repro.core.store import (ContextMode, ContextStore, SnapshotPool, Tier,
                               TierFullError)
 from repro.core.transfer import FetchSource, TransferPlan, TransferPlanner
+from repro.core.transport import (Connection, Listener, Router,
+                                  TransportError)
+from repro.core.wire import (WireError, decode_snapshot, decode_template,
+                             encode_snapshot, encode_template)
 
 __all__ = [
     "ContextHandle", "FutureBatch", "PCMClient", "context_app",
@@ -78,4 +91,7 @@ __all__ = [
     "WorkerPhase",
     "ContextMode", "ContextStore", "SnapshotPool", "Tier", "TierFullError",
     "FetchSource", "TransferPlan", "TransferPlanner",
+    "Connection", "Listener", "Router", "TransportError",
+    "WireError", "decode_snapshot", "decode_template", "encode_snapshot",
+    "encode_template",
 ]

@@ -103,6 +103,10 @@ class WorkerInfo:
     fetching_eta: Optional[float] = None  # predicted completion time
     joined_at: float = 0.0
     fetch_blocked: Set[str] = field(default_factory=set)  # admission refused
+    # how bytes reach/leave this worker: "memcpy" for an in-process
+    # thread, "socket" for a worker living in another OS process — feeds
+    # the planner's per-kind calibration namespaces
+    transport_kind: str = "memcpy"
 
 
 @dataclass
@@ -226,10 +230,12 @@ class ContextAwareScheduler:
         self.queue.insert(idx, task)
 
     def on_worker_join(self, worker_id: str, t: float, profile=None,
-                       store: Optional[ContextStore] = None) -> List[Action]:
+                       store: Optional[ContextStore] = None,
+                       transport_kind: str = "memcpy") -> List[Action]:
         self.workers[worker_id] = WorkerInfo(
             worker_id=worker_id, profile=profile,
-            store=store or ContextStore(), joined_at=t)
+            store=store or ContextStore(), joined_at=t,
+            transport_kind=transport_kind)
         return self.dispatch(t)
 
     def on_worker_leave(self, worker_id: str, t: float) -> List[Action]:
@@ -517,6 +523,16 @@ class ContextAwareScheduler:
         pcie = float(getattr(w.profile, "pcie_gbps", 0) or 0)
         return pcie * GBPS if pcie > 0 else None
 
+    def _lane_kinds(self, w: WorkerInfo, donors: Set[str]) -> Dict[str, str]:
+        """Per-donor transport kind for a transfer INTO ``w``: a lane is a
+        socket hop when either endpoint lives in another process, memcpy
+        only for thread-to-thread handoff inside this one. Keys the
+        planner's per-kind calibration namespaces."""
+        if w.transport_kind == "socket":
+            return {d: "socket" for d in donors}
+        return {d: self.workers[d].transport_kind
+                for d in donors if d in self.workers}
+
     def _rung_costs(self, recipe: ContextRecipe, w: WorkerInfo, t: float
                     ) -> Tuple[List[Tuple[float, int, FetchSource,
                                           Optional[str]]], Set[str]]:
@@ -534,7 +550,9 @@ class ContextAwareScheduler:
         if donors:
             best = self.planner.peer_seconds(recipe.transfer_bytes,
                                              donors, t,
-                                             width=self.stripe_width)
+                                             width=self.stripe_width,
+                                             kinds=self._lane_kinds(w,
+                                                                    donors))
             if best is not None:
                 donor, transfer_s = best
                 # the receiver restores the shipped template host->HBM;
@@ -600,7 +618,8 @@ class ContextAwareScheduler:
         if not etas:
             return False
         wait_s = max(0.0, min(etas) - t)
-        peer_s = (self.planner.peer_rate_seconds(recipe.transfer_bytes)
+        peer_s = (self.planner.peer_rate_seconds(recipe.transfer_bytes,
+                                                 kind=w.transport_kind)
                   + self.planner.restore_seconds(
                       recipe.host_bytes, h2d_bytes_per_s=self._h2d_rate(w)))
         return wait_s + peer_s < best_alternative
@@ -633,7 +652,9 @@ class ContextAwareScheduler:
             if source == FetchSource.PEER:
                 plan = self.planner.peer_plan(recipe.transfer_bytes,
                                               donors, t,
-                                              width=self.stripe_width)
+                                              width=self.stripe_width,
+                                              kinds=self._lane_kinds(w,
+                                                                     donors))
                 if plan is None:
                     # defensive only: within one call the scoring and the
                     # commit see the same planner state at the same t, so

@@ -32,6 +32,24 @@ the live runtime: the bytes move (see :class:`SnapshotPool` and
 ``repro.core.context.ContextSnapshot``), and promotion restores the
 materialized context without re-running the builder or recompiling.
 
+Every snapshot-moving edge above also exists as a cross-NODE **WIRE**
+edge when the worker is a process on another machine (versioned
+``repro.core.wire`` blobs — chunked-sha256 arrays, executables as
+AOTRecipes — over the ``repro.core.transport`` socket frames)::
+
+        node A (remote process)                 manager host
+    DEVICE --demote--> node pool ==demoted_ctx==> manager POOL
+       |                                            |    (HOST_RAM,
+       |  stripe_chunk frames                       |     spills to
+       |  (per-chunk sha256,              ==install=+     LOCAL_DISK)
+       |  striped across donors)          |
+       +===========================> node B DEVICE (adopt/restore,
+                 PEER over the wire        zero builds, AOT cache hits)
+
+The FetchSource vocabulary is unchanged — a wire install still lands as
+PEER/POOL/DISK in the fetch history — so live-vs-sim decision parity
+holds across process boundaries.
+
 Every edge below DEVICE moves LIVE bytes, not allocated capacity: a paged
 engine (``repro.serving.paged``) snapshots only the KV pages its requests
 actually own, so snapshot ``nbytes`` — and with it SnapshotPool occupancy,

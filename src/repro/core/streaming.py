@@ -102,6 +102,16 @@ class ChunkPlan:
         self.total_bytes = 0
         for key, leaf in flat:
             nbytes = int(getattr(leaf, "nbytes", 0) or 0)
+            if not nbytes:
+                # Spec-only leaves (e.g. jax.ShapeDtypeStruct on a remote
+                # receiver rebuilding a donor's plan) carry no buffer, so
+                # derive the size from shape x itemsize — the plan must be
+                # a pure function of shapes for cross-process determinism.
+                spec_shape = tuple(getattr(leaf, "shape", ()) or ())
+                spec_dtype = getattr(leaf, "dtype", None)
+                if spec_dtype is not None:
+                    nbytes = int(np.prod(spec_shape, dtype=np.int64) *
+                                 np.dtype(spec_dtype).itemsize)
             self.total_bytes += nbytes
             shape = getattr(leaf, "shape", ())
             axis = 0
@@ -244,6 +254,13 @@ class StripeBuffer:
         surviving lane must re-export."""
         with self._lock:
             return [r for r in assigned if r.id not in self._delivered]
+
+    def delivered_ids(self) -> List[Tuple[str, int]]:
+        """Ref ids verified so far — what a remote receiver reports back
+        on a lane failure so the manager-side stripe state reconciles to
+        the receiver's (authoritative) view before reassigning refs."""
+        with self._lock:
+            return list(self._delivered)
 
     @property
     def export_seconds(self) -> float:

@@ -86,6 +86,11 @@ class TransferPlan:
     # committed stripe lanes for a striped peer transfer (primary donor
     # first); single-donor plans carry a one-element tuple
     stripes: Tuple[str, ...] = ()
+    # transport kind of a peer transfer: "memcpy" for in-process
+    # thread-to-thread handoff, "socket" when any endpoint is a remote
+    # process — calibration is namespaced per kind so wire lanes never
+    # price from memcpy history (and vice versa)
+    kind: str = "memcpy"
 
     def __post_init__(self):
         if self.p2p:
@@ -144,8 +149,14 @@ class TransferPlanner:
         self._fs_flows: List[_Flow] = []
         self._donor_flows: Dict[str, List[_Flow]] = {}
         # measured-bandwidth calibration (EWMA bytes/s per path), fed by
-        # complete(); None until the first live observation
-        self._measured: Dict[str, Optional[float]] = {"p2p": None, "fs": None}
+        # complete(); None until the first live observation. Peer paths
+        # are namespaced PER TRANSPORT KIND: an in-process memcpy handoff
+        # measures orders of magnitude above a 10GbE socket lane, so a
+        # shared "p2p" bucket would misprice the first wire transfer by
+        # the same factor. A cold socket lane prices from the
+        # conservative NIC default until its own observations arrive.
+        self._measured: Dict[str, Optional[float]] = {
+            "p2p:memcpy": None, "p2p:socket": None, "fs": None}
         # per-stage calibration for the pipelined rung scores, fed by
         # observe_stage() from live streamed movement
         self._measured_stage: Dict[str, Optional[float]] = {
@@ -166,10 +177,12 @@ class TransferPlanner:
             if not self._donor_flows[d]:
                 del self._donor_flows[d]
 
-    def _p2p_rate(self) -> float:
-        measured = self._measured["p2p"]
+    def _p2p_rate(self, kind: str = "memcpy") -> float:
+        measured = self._measured.get(f"p2p:{kind}")
         if measured is not None:
             return measured
+        if kind == "socket":
+            return self.nic_bytes_per_s
         return min(self.p2p_bytes_per_s, self.nic_bytes_per_s)
 
     def _fs_rate(self, concurrent: int) -> float:
@@ -182,20 +195,25 @@ class TransferPlanner:
         concurrent = len(self._fs_flows) + 1
         return nbytes / self._fs_rate(concurrent)
 
-    def _donor_seconds(self, donor: str, nbytes: int) -> Optional[float]:
+    def _donor_seconds(self, donor: str, nbytes: int,
+                       kind: str = "memcpy") -> Optional[float]:
         """Predicted seconds of one more transfer from ``donor``: the
         donor's uplink splits across its in-flight flows plus this one,
         then the per-flow rate is NIC-capped — a lightly loaded donor's
         receivers each still get their full NIC. A measured (EWMA) rate is
         already a per-flow rate observed under real contention, so it is
-        used as-is rather than re-divided. None when fanout-saturated."""
+        used as-is rather than re-divided. Rates are looked up in the
+        transport kind's own namespace — socket lanes never price from
+        memcpy history. None when fanout-saturated."""
         flows = self._donor_flows.get(donor, [])
         if len(flows) >= self.donor_fanout:
             return None
-        measured = self._measured["p2p"]
+        measured = self._measured.get(f"p2p:{kind}")
         if measured is not None:
             return nbytes / measured
-        share = self.p2p_bytes_per_s / (len(flows) + 1)
+        uplink = self.nic_bytes_per_s if kind == "socket" \
+            else self.p2p_bytes_per_s
+        share = uplink / (len(flows) + 1)
         return nbytes / min(share, self.nic_bytes_per_s)
 
     def _ranked_free_donors(self, donors: Set[str]) -> List[str]:
@@ -220,17 +238,21 @@ class TransferPlanner:
                 "h2d": self.h2d_bytes_per_s,
                 "disk": self.disk_bytes_per_s}[stage]
 
-    def _stripe_lanes(self, nbytes: int, donors: Set[str],
-                      width: int) -> Optional[Tuple[List[str], float]]:
+    def _stripe_lanes(self, nbytes: int, donors: Set[str], width: int,
+                      kinds: Optional[Dict[str, str]] = None
+                      ) -> Optional[Tuple[List[str], float]]:
         """Up to ``width`` free donor lanes (least-loaded first) splitting
         ``nbytes`` into disjoint chunk ranges; seconds is the slowest
-        lane's wire time. Callers must have _gc'd already."""
+        lane's wire time. ``kinds`` maps donor id -> transport kind for
+        this receiver (default memcpy). Callers must have _gc'd already."""
         ranked = self._ranked_free_donors(donors)
         if not ranked:
             return None
         lanes = ranked[:max(1, width)]
         per = -(-nbytes // len(lanes))
-        sec = max(self._donor_seconds(d, per) for d in lanes)
+        sec = max(self._donor_seconds(d, per,
+                                      kind=(kinds or {}).get(d, "memcpy"))
+                  for d in lanes)
         return lanes, sec
 
     # -------------------------------------------------------------- public --
@@ -264,7 +286,9 @@ class TransferPlanner:
                                            nbytes=nbytes, p2p=p2p), now)
 
     def peer_seconds(self, nbytes: int, donors: Set[str], now: float,
-                     width: int = 1) -> Optional[Tuple[str, float]]:
+                     width: int = 1,
+                     kinds: Optional[Dict[str, str]] = None
+                     ) -> Optional[Tuple[str, float]]:
         """Side-effect-free prediction of the best admissible peer
         transfer: ``(primary_donor, seconds)``, or None when every donor
         is saturated. With ``width > 1`` the payload stripes across up to
@@ -275,17 +299,17 @@ class TransferPlanner:
         reuses — one code path, so the dry and commit decisions cannot
         drift."""
         self._gc(now)
-        got = self._stripe_lanes(nbytes, donors, width)
+        got = self._stripe_lanes(nbytes, donors, width, kinds=kinds)
         if got is None:
             return None
         lanes, sec = got
         return lanes[0], sec
 
-    def peer_rate_seconds(self, nbytes: int) -> float:
+    def peer_rate_seconds(self, nbytes: int, kind: str = "memcpy") -> float:
         """Predicted seconds of an UNCONSTRAINED peer transfer at the
         calibrated point-to-point rate (no fanout share): what a transfer
         would cost once a donor slot frees — the donor-wait cost bound."""
-        return nbytes / self._p2p_rate()
+        return nbytes / self._p2p_rate(kind)
 
     def pipeline_seconds(self, stages: List[float], nbytes: int) -> float:
         """Latency of ``nbytes`` moving through serial ``stages`` (each a
@@ -351,20 +375,27 @@ class TransferPlanner:
         return self.warmup_seconds + transfer_bytes / self.builder_bytes_per_s
 
     def peer_plan(self, nbytes: int, donors: Set[str], now: float,
-                  width: int = 1) -> Optional[TransferPlan]:
+                  width: int = 1,
+                  kinds: Optional[Dict[str, str]] = None
+                  ) -> Optional[TransferPlan]:
         """Commit a P2P transfer from the best available donors (the same
         :meth:`peer_seconds` selection), or None when every donor is
         saturated (the scheduler then either waits for a slot or takes
         the cheapest remaining rung). With ``width > 1`` the commit
         stripes across up to that many free donors: one fanout flow per
-        lane, ``plan.stripes`` naming the lanes (primary first)."""
+        lane, ``plan.stripes`` naming the lanes (primary first). The
+        plan's transport ``kind`` is socket when ANY lane crosses a
+        process boundary, so measured completion calibrates the wire
+        namespace, not memcpy."""
         self._gc(now)
-        got = self._stripe_lanes(nbytes, donors, width)
+        got = self._stripe_lanes(nbytes, donors, width, kinds=kinds)
         if got is None:
             return None
         lanes, sec = got
+        kind = "socket" if any((kinds or {}).get(d) == "socket"
+                               for d in lanes) else "memcpy"
         plan = TransferPlan(source=lanes[0], seconds=sec, nbytes=nbytes,
-                            p2p=True, stripes=tuple(lanes))
+                            p2p=True, stripes=tuple(lanes), kind=kind)
         flows = []
         for d in lanes:
             flow = _Flow(done_at=now + sec)
@@ -437,9 +468,10 @@ class TransferPlanner:
             return
         if measured_seconds is not None and measured_seconds > 0 \
                 and plan.fetch_source in (FetchSource.PEER, FetchSource.FS):
-            path = "p2p" if plan.p2p else "fs"
+            path = f"p2p:{getattr(plan, 'kind', 'memcpy')}" \
+                if plan.p2p else "fs"
             rate = plan.nbytes / measured_seconds
-            prev = self._measured[path]
+            prev = self._measured.get(path)
             a = self._calibration_alpha
             self._measured[path] = rate if prev is None \
                 else a * rate + (1 - a) * prev
@@ -460,8 +492,11 @@ class TransferPlanner:
         return self.pipeline_seconds(stages, nbytes)
 
     def calibration(self) -> Dict:
-        """Observed bytes/s per path (None until live feedback arrives)."""
+        """Observed bytes/s per path (None until live feedback arrives).
+        ``p2p`` remains an alias for the in-process memcpy namespace;
+        socket-lane observations live under ``p2p:socket``."""
         out = dict(self._measured)
+        out["p2p"] = self._measured["p2p:memcpy"]
         out.update(self._measured_stage)
         return out
 

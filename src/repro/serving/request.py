@@ -100,7 +100,13 @@ class EngineStats:
     steps: int = 0
     prefill_batches: int = 0
     megasteps: int = 0             # fused-decode dispatches (<= decode_tokens)
-    compiles: int = 0              # executable-cache misses (0 when warm)
+    # TRUE XLA lowering+compiles only (0 when warm). An executable
+    # resolved through the AOTRecipe cache — an in-process clone or a
+    # wire-reconstructed shell re-lowering into a published executable —
+    # counts under aot_cache_hits instead, so "zero recompiles" stays a
+    # real guarantee across process boundaries.
+    compiles: int = 0
+    aot_cache_hits: int = 0
     decode_seconds: float = 0.0    # wall time inside megastep dispatch+sync
     # which decode storage/view the engine resolved to at construction:
     # "paged" (page-table cache), "prefix-bucket" (contiguous cache,
@@ -127,6 +133,7 @@ class EngineStats:
                     completed=self.completed, steps=self.steps,
                     prefill_batches=self.prefill_batches,
                     megasteps=self.megasteps, compiles=self.compiles,
+                    aot_cache_hits=self.aot_cache_hits,
                     decode_seconds=self.decode_seconds,
                     decode_path=self.decode_path,
                     live_pages=self.live_pages,
